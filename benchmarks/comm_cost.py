@@ -1,0 +1,58 @@
+"""Communication-cost model (§VII-A3a): per-participant KV upload bytes for
+the assigned full-size architectures across H and sparse-exchange ratios —
+the table behind FedAttn's deployment story (GQA shrinks it further, §II-C).
+"""
+from __future__ import annotations
+
+import time
+
+from common import csv_line
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core.fedattn import FedAttnContext
+from repro.types import FedAttnConfig
+
+
+def run(seq_len: int = 32_768, n_participants: int = 16) -> list[dict]:
+    rows = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        if cfg.arch_type == "ssm":
+            # recurrence sync ships the WKV state, not KV rows
+            state_bytes = (cfg.d_model // cfg.rwkv_head_dim) * cfg.rwkv_head_dim**2 * 4
+            rows.append(
+                {"arch": arch, "H": cfg.fedattn.sync_interval, "ratio": 1.0,
+                 "bytes": state_bytes * (cfg.n_layers // cfg.fedattn.sync_interval),
+                 "note": "state-handoff"}
+            )
+            continue
+        for h_scale, ratio in ((1, 1.0), (1, 0.25), (2, 1.0)):
+            fed = FedAttnConfig(
+                n_participants=n_participants,
+                sync_interval=cfg.fedattn.sync_interval * h_scale,
+                kv_exchange_ratio=ratio,
+                kv_selection="strided",  # deterministic (no rng needed)
+            )
+            ctx = FedAttnContext.build(fed, cfg.n_layers, seq_len)
+            b = ctx.comm_bytes_per_participant(cfg.n_kv_heads, cfg.head_dim)
+            rows.append(
+                {"arch": arch, "H": fed.sync_interval, "ratio": ratio,
+                 "bytes": b, "note": f"kv={cfg.n_kv_heads}h"}
+            )
+    return rows
+
+
+def main() -> None:
+    t0 = time.time()
+    rows = run()
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    for r in rows:
+        print(
+            csv_line(
+                f"comm_{r['arch']}_H{r['H']}_r{r['ratio']}", us,
+                f"bytes_per_participant={r['bytes']:.3e};{r['note']}",
+            )
+        )
+
+
+if __name__ == "__main__":
+    main()

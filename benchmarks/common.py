@@ -1,0 +1,179 @@
+"""Shared benchmark harness.
+
+Trains one small decoder-only model on the multi-segment associative-recall
+task (the GSM8K stand-in, see repro/data/synthetic.py) with CENTRALIZED
+attention — mirroring the paper's use of a pretrained model — then sweeps
+FedAttn protocol knobs at inference time and reports EM accuracy, exactly
+as Figs. 5-10 sweep them. The trained params are cached on disk so every
+figure benchmark reuses the same model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.core.fedattn import FedAttnContext
+from repro.core.partition import Partition
+from repro.core.schedule import SyncSchedule
+from repro.data import batch_iterator, multi_segment_recall_task
+from repro.launch import steps as S
+from repro.models.transformer import TransformerLM
+from repro.optim import adamw_init
+from repro.types import FedAttnConfig, LayerSpec, ModelConfig
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+MODELS = ART / "models"
+
+N_PARTICIPANTS = 4
+N_LAYERS = 8
+
+
+def bench_config(n_layers: int = N_LAYERS) -> ModelConfig:
+    return ModelConfig(
+        name="bench-lm",
+        arch_type="dense",
+        n_layers=n_layers,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=256,
+        vocab_size=64,
+        dtype="float32",
+        pattern=(LayerSpec(),),
+        fedattn=FedAttnConfig(n_participants=N_PARTICIPANTS, sync_interval=2),
+    )
+
+
+def bench_task(n_participants: int = N_PARTICIPANTS):
+    return multi_segment_recall_task(
+        n_participants=n_participants, pairs_per_participant=4, vocab_size=64
+    )
+
+
+def get_trained_model(
+    *, steps: int = 5000, seed: int = 0, force: bool = False
+):
+    """Returns (config, params, task). Cached at artifacts/models/."""
+    cfg = bench_config()
+    task = bench_task()
+    MODELS.mkdir(parents=True, exist_ok=True)
+    path = MODELS / f"bench_lm_s{steps}.npz"
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.key(seed))
+    if path.exists() and not force:
+        params, _ = restore_checkpoint(path, params)
+        return cfg, params, task
+
+    fed_cen = FedAttnConfig(n_participants=1)  # centralized training
+    opt = adamw_init(params)
+    it = batch_iterator(task, 48, seed=seed)
+    t0 = time.time()
+    # staged LR decay (constant-lr step fns re-jitted per stage)
+    stages = [(steps // 4, 1.5e-3), (steps // 4, 8e-4),
+              (steps // 4, 4e-4), (steps - 3 * (steps // 4), 2e-4)]
+    i = 0
+    for n_stage, lr in stages:
+        step = jax.jit(
+            S.make_train_step(cfg, task.seq_len, fedattn=fed_cen, lr=lr)
+        )
+        for _ in range(n_stage):
+            b = next(it)
+            params, opt, m = step(
+                params, opt,
+                {
+                    "tokens": jnp.asarray(b["tokens"]),
+                    "labels": jnp.asarray(b["labels"]),
+                    "loss_mask": jnp.asarray(
+                        task.loss_mask(b["answer_pos"], aux_weight=0.02)
+                    ),
+                },
+            )
+            if i % 250 == 0:
+                print(f"  [train] step {i} lr {lr:.1e} loss "
+                      f"{float(m['loss']):.3f} ({time.time()-t0:.0f}s)",
+                      flush=True)
+            i += 1
+    save_checkpoint(path, params, step=steps)
+    return cfg, params, task
+
+
+def em_accuracy(
+    cfg: ModelConfig,
+    params,
+    task,
+    ctx: FedAttnContext,
+    *,
+    n_eval: int = 512,
+    seed: int = 1234,
+    tokens_override=None,
+) -> float:
+    """Pass@1 exact match on the recall answer (teacher-forced argmax at the
+    ANSWER position — the paper's EM analogue)."""
+    model = TransformerLM(cfg)
+    rng = np.random.default_rng(seed)
+    toks, labs, _, ap = task.sample_batch(rng, n_eval)
+    tokens = jnp.asarray(toks) if tokens_override is None else tokens_override
+    logits = jax.jit(lambda p, t: model.apply(p, t, ctx))(params, tokens)
+    pred = np.asarray(jnp.argmax(logits[:, ap[0]], axis=-1))
+    return float((pred == labs[:, ap[0]]).mean())
+
+
+def make_ctx(
+    cfg: ModelConfig,
+    task,
+    *,
+    n_participants: int = N_PARTICIPANTS,
+    interval: int | None = None,
+    schedule: SyncSchedule | None = None,
+    kv_ratio: float = 1.0,
+    kv_selection: str = "random",
+    rng_seed: int = 0,
+    per_participant_sync=None,
+) -> FedAttnContext:
+    fed = FedAttnConfig(
+        n_participants=n_participants,
+        sync_interval=interval or 2,
+        kv_exchange_ratio=kv_ratio,
+        kv_selection=kv_selection,
+    )
+    part = partition_for(task, n_participants)
+    ctx = FedAttnContext.build(
+        fed, cfg.n_layers, task.seq_len,
+        partition=part,
+        schedule=schedule,
+        rng=jax.random.key(rng_seed),
+    )
+    if per_participant_sync is not None:
+        ctx = dataclasses.replace(
+            ctx, per_participant_sync=jnp.asarray(per_participant_sync)
+        )
+    return ctx
+
+
+def partition_for(task, n_participants: int) -> Partition:
+    """Regroup the task's semantic units (binding units + the question)
+    into n participants — Sem-seg: Q-ex layout (question at the publisher),
+    the paper's most realistic setting. Works for n ∈ {1, 2, 3, 4}."""
+    unit = 2 * 4 + 1  # binding-unit length
+    if n_participants <= 1:
+        return Partition.contiguous(task.seq_len, 1)
+    n_content = (task.seq_len - 3) // unit
+    base = [0] * (n_participants - 1)
+    for i in range(n_content):
+        base[i % (n_participants - 1)] += unit
+    sizes = [s for s in base if s > 0] + [3]
+    return Partition.from_sizes(sizes)
+
+
+def comm_bytes(cfg: ModelConfig, ctx: FedAttnContext) -> float:
+    return ctx.comm_bytes_per_participant(cfg.n_kv_heads, cfg.head_dim)
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,59 @@
+"""Fig. 5 — trade-off between response quality and communication cost.
+
+Sweeps the number of local forwards H from 1 (CenAttn) to M (LocAttn) and
+reports EM accuracy alongside the per-participant KV-exchange bytes.
+Paper claims validated (qualitatively, per EXPERIMENTS.md §Paper-claims):
+  (a) EM decreases with H while comm cost shrinks;
+  (b) diminishing returns: both move fastest at small H (Remark 5).
+"""
+from __future__ import annotations
+
+import time
+
+from common import (
+    comm_bytes, csv_line, em_accuracy, get_trained_model, make_ctx,
+)
+from repro.core.schedule import SyncSchedule
+
+
+def run(n_eval: int = 512) -> list[dict]:
+    cfg, params, task = get_trained_model()
+    rows = []
+    for h in (1, 2, 4, 8):
+        sched = SyncSchedule.uniform(cfg.n_layers, h)
+        ctx = make_ctx(cfg, task, interval=h, schedule=sched)
+        t0 = time.time()
+        em = em_accuracy(cfg, params, task, ctx, n_eval=n_eval)
+        dt = (time.time() - t0) * 1e6 / n_eval
+        rows.append(
+            {
+                "H": h,
+                "em": em,
+                "comm_bytes": comm_bytes(cfg, ctx),
+                "n_syncs": sched.n_syncs,
+                "us_per_example": dt,
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    for r in rows:
+        print(
+            csv_line(
+                f"fig5_H{r['H']}", r["us_per_example"],
+                f"EM={r['em']:.3f};comm_B={r['comm_bytes']:.0f}",
+            )
+        )
+    ems = [r["em"] for r in rows]
+    comm = [r["comm_bytes"] for r in rows]
+    assert comm == sorted(comm, reverse=True), "comm must fall with H"
+    print(f"# claim(a) quality falls with H: {ems[0]:.3f} -> {ems[-1]:.3f}")
+    d_em_small = ems[0] - ems[1]
+    d_em_large = ems[2] - ems[3]
+    print(f"# claim(b) marginal ΔEM small-H={d_em_small:+.3f} vs large-H={d_em_large:+.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Fig. 6 — trade-off between response quality and computational cost.
+
+Sweeps the number of participants N (1 = CenAttn) at fixed H and reports EM
+plus the analytic per-participant prefill attention cost (the paper's
+quadratic-in-L_n FLOPs and linear KV memory, §III-C): local attention costs
+Σ_n L_n² instead of L².
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from common import csv_line, em_accuracy, get_trained_model, make_ctx, partition_for
+from repro.core.schedule import SyncSchedule
+
+
+def attention_cost_ratio(task, n: int, n_layers: int, interval: int) -> float:
+    """Σ over layers of attention-score work, relative to CenAttn."""
+    part = partition_for(task, n)
+    sizes = np.asarray(part.sizes())
+    L = task.seq_len
+    local = float((sizes**2).sum()) / L**2
+    # sync layers attend local-q × global-kv: L_n × L → Σ = L² (same as cen)
+    n_sync = n_layers // interval
+    return (n_sync * 1.0 + (n_layers - n_sync) * local) / n_layers
+
+
+def run(n_eval: int = 512) -> list[dict]:
+    cfg, params, task = get_trained_model()
+    rows = []
+    for n in (1, 2, 4):
+        ctx = make_ctx(
+            cfg, task, n_participants=n, interval=2,
+            schedule=SyncSchedule.uniform(cfg.n_layers, 2),
+        )
+        t0 = time.time()
+        em = em_accuracy(cfg, params, task, ctx, n_eval=n_eval)
+        dt = (time.time() - t0) * 1e6 / n_eval
+        rows.append(
+            {
+                "N": n,
+                "em": em,
+                "flops_ratio": attention_cost_ratio(task, n, cfg.n_layers, 2),
+                "peak_kv_ratio": 1.0 / max(n, 1),
+                "us_per_example": dt,
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    for r in rows:
+        print(
+            csv_line(
+                f"fig6_N{r['N']}", r["us_per_example"],
+                f"EM={r['em']:.3f};flops_ratio={r['flops_ratio']:.3f};"
+                f"kv_ratio={r['peak_kv_ratio']:.2f}",
+            )
+        )
+    fr = [r["flops_ratio"] for r in rows]
+    assert fr == sorted(fr, reverse=True), "attention cost must fall with N"
+    print(f"# claim: EM {rows[0]['em']:.3f} (N=1) -> {rows[-1]['em']:.3f} (N=4), "
+          f"attention cost ratio -> {fr[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks: wall time (CPU; Pallas in interpret mode is a
+correctness artifact, not a perf number — the perf story lives in the
+roofline analysis) plus analytic FLOPs per call for each backend."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from common import csv_line
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+
+
+def _time(fn, *args, n=5, **kw):
+    fn(*args, **kw)[0].block_until_ready() if isinstance(fn(*args, **kw), tuple) else None
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.time() - t0) / n * 1e6
+
+
+def main() -> None:
+    B, L, nq, nkv, dh = 1, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, L, nq, dh))
+    k = jax.random.normal(ks[1], (B, L, nkv, dh))
+    v = jax.random.normal(ks[2], (B, L, nkv, dh))
+    pos = jnp.arange(L)
+    seg = jnp.repeat(jnp.arange(4), L // 4)
+    flops = 4 * B * nq * L * L * dh  # QK^T + AV
+
+    jit_ref = jax.jit(lambda q, k, v: ref.attention_ref(
+        q, k, v, q_pos=pos, kv_pos=pos, q_seg=seg, kv_seg=seg, local_only=True))
+    jit_chunk = jax.jit(lambda q, k, v: ops._chunked_attention(
+        q, k, v, q_pos=pos, kv_pos=pos, q_seg=seg, kv_seg=seg, causal=True,
+        local_only=True, contributed=None, window=None, soft_cap=None,
+        sm_scale=None, chunk=64))
+    us_ref = _time(jit_ref, q, k, v)
+    us_chunk = _time(jit_chunk, q, k, v)
+    print(csv_line("attn_ref_einsum", us_ref, f"gflops={flops/1e9:.2f}"))
+    print(csv_line("attn_chunked_xla", us_chunk, f"gflops={flops/1e9:.2f}"))
+    us_pal = _time(lambda q, k, v: flash_attention(
+        q, k, v, q_pos=pos, kv_pos=pos, q_seg=seg, kv_seg=seg, local_only=True,
+        block_q=64, block_k=64), q, k, v)
+    print(csv_line("attn_pallas_interpret", us_pal,
+                   "correctness-mode (TPU target; see roofline for perf)"))
+
+    # rwkv6
+    H, dk = 2, 32
+    r = jax.random.normal(ks[0], (B, L, H, dk))
+    kk = jax.random.normal(ks[1], (B, L, H, dk))
+    vv = jax.random.normal(ks[2], (B, L, H, dk))
+    w = jnp.maximum(-jnp.exp(jax.random.normal(ks[0], (B, L, H, dk))), -5.0)
+    u = jnp.zeros((H, dk))
+    jit_scan = jax.jit(lambda *a: ref.rwkv6_ref(*a)[0])
+    jit_mat = jax.jit(lambda *a: ref.rwkv6_chunked_matrix(*a, chunk=64)[0])
+    print(csv_line("rwkv6_scan_xla", _time(jit_scan, r, kk, vv, w, u),
+                   f"tokens={L}"))
+    print(csv_line("rwkv6_chunked_matrix", _time(jit_mat, r, kk, vv, w, u),
+                   f"tokens={L};chunk=64"))
+
+
+if __name__ == "__main__":
+    main()

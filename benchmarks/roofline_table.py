@@ -1,0 +1,97 @@
+"""Render the roofline artifacts (artifacts/roofline/*.json) as the
+§Roofline markdown table + CSV lines for benchmarks.run."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "roofline"
+
+MOVE_HINTS = {
+    ("moe", "memory"): "shard experts over `model` with shard_map all-gather-tokens "
+    "dispatch instead of GSPMD-replicated ragged_dot (see §Perf iteration 1)",
+    ("moe", "collective"): "expert-parallel dispatch removes the replicated expert "
+    "weight gathers",
+    ("dense", "memory"): "bf16 end-to-end accumulators + fewer weight re-gathers "
+    "(larger FSDP prefetch granularity)",
+    ("dense", "collective"): "Megatron-TP weight sharding for decode (no per-step "
+    "ZeRO-3 gathers); FedAttn already divides the KV-gather term by H",
+    ("ssm", "memory"): "chunked-matrix WKV lowers bytes/token vs the scan form",
+    ("hybrid", "memory"): "mamba in/out projections dominate — fuse conv+proj",
+    ("audio", "collective"): "cross-attention memory KV gather per layer → gather "
+    "once and cache across decoder layers",
+    ("vlm", "collective"): "as dense; patch-prefix slice forces a reshard — pad "
+    "text tokens to shard boundary",
+    ("dense", "compute"): "near roofline — reduce attention masking waste",
+}
+
+
+def rows():
+    out = []
+    for f in sorted(ART.glob("*__16x16.json")):
+        d = json.loads(f.read_text())
+        out.append(d)
+    return out
+
+
+def render_markdown() -> str:
+    from repro.configs import get_config
+
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | MODEL/HLO FLOPs | what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|"[:-4] + "|",
+    ]
+    for d in rows():
+        cfg = get_config(d["arch"])
+        hint = MOVE_HINTS.get((cfg.arch_type, d["dominant"]), "see §Perf")
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['compute_s']*1e3:.2f} | "
+            f"{d['memory_s']*1e3:.2f} | {d['collective_s']*1e3:.2f} | "
+            f"**{d['dominant']}** | {d['useful_flops_ratio']:.2f} | {hint} |"
+        )
+    return "\n".join(lines)
+
+
+def render_dryrun_markdown(mesh: str = "16x16") -> str:
+    """§Dry-run summary table from artifacts/dryrun/*.json."""
+    dd = ART.parent / "dryrun"
+    lines = [
+        "| arch | shape | mesh | compile (s) | args/dev | temp/dev | "
+        "collectives/dev |",
+        "|---|---|---|---|---|---|---|",
+    ]
+
+    def fmt(n):
+        if n is None:
+            return "-"
+        for u in ("B", "KB", "MB", "GB", "TB"):
+            if abs(n) < 1024:
+                return f"{n:.1f}{u}"
+            n /= 1024
+        return f"{n:.1f}PB"
+
+    for f in sorted(dd.glob(f"*__{mesh}.json")):
+        d = json.loads(f.read_text())
+        m = d.get("memory", {})
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+            f"{d.get('compile_s', '-')} | {fmt(m.get('argument_size_bytes'))} | "
+            f"{fmt(m.get('temp_size_bytes'))} | "
+            f"{fmt(d.get('collectives', {}).get('total_bytes'))} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    for d in rows():
+        print(
+            f"roofline_{d['arch']}_{d['shape']},0.0,"
+            f"compute_ms={d['compute_s']*1e3:.2f};memory_ms={d['memory_s']*1e3:.2f};"
+            f"collective_ms={d['collective_s']*1e3:.2f};dominant={d['dominant']};"
+            f"useful={d['useful_flops_ratio']:.2f}"
+        )
+
+
+if __name__ == "__main__":
+    print(render_markdown())

@@ -1,0 +1,61 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark plus ``#``
+commentary validating the paper's claims (EXPERIMENTS.md §Paper-claims
+records the canonical run).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig5 fig10
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import pathlib
+import sys
+import time
+import traceback
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+
+MODULES = [
+    ("comm_cost", "comm-cost model (SVII-A3)"),
+    ("kernel_bench", "kernel microbenchmarks"),
+    ("fig5_quality_vs_h", "Fig.5 quality vs H + comm"),
+    ("fig6_quality_vs_n", "Fig.6 quality vs N + compute"),
+    ("fig7_sync_schedules", "Fig.7 sync schemes"),
+    ("fig8_publisher_sync", "Fig.8 publisher sync frequency"),
+    ("fig9_sparse_local", "Fig.9 sparse local attention"),
+    ("fig10_sparse_kv", "Fig.10 sparse KV exchange"),
+    ("error_propagation", "Thm.1/2 error propagation"),
+    ("roofline_table", "roofline terms per (arch x shape)"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    failures = []
+    print("name,us_per_call,derived")
+    for mod_name, desc in MODULES:
+        if args.only and not any(o in mod_name for o in args.only):
+            continue
+        print(f"# === {mod_name}: {desc} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(mod_name)
+            mod.main()
+            print(f"# {mod_name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append(mod_name)
+            print(f"# {mod_name} FAILED: {e}")
+            traceback.print_exc(limit=4)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

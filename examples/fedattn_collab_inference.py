@@ -1,0 +1,57 @@
+"""End-to-end collaborative inference — the paper's deployment scenario.
+
+Three data-holding participants + one task publisher run a (reduced)
+qwen2-family model. Each holds private key→value records; the publisher's
+query needs a record held by participant 1. We serve the request under:
+
+  * CenAttn (H=1)            — exact, max communication,
+  * FedAttn (H=2)            — the paper's operating point,
+  * FedAttn + sparse KV 50%  — half the exchange bytes,
+  * LocAttn (never sync)     — zero exchange: the answer becomes
+                               *unreachable* (privacy/locality sanity).
+
+This is the serving end-to-end driver (the paper is an inference paper):
+batched requests, real prefill + autoregressive decode via FedAttnEngine.
+
+Run:  PYTHONPATH=src python examples/fedattn_collab_inference.py
+      (first run trains the small model for ~10 min on CPU)
+"""
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "benchmarks"))
+from common import get_trained_model, partition_for  # noqa: E402
+
+from repro.core.schedule import SyncSchedule  # noqa: E402
+from repro.serving import FedAttnEngine  # noqa: E402
+
+cfg, params, task = get_trained_model()
+rng = np.random.default_rng(0)
+toks, labs, units, ap = task.sample_batch(rng, 8)  # 8 batched requests
+tokens = jnp.asarray(toks)
+gold = labs[:, ap[0]]
+part = partition_for(task, 4)
+
+print(f"model={cfg.name} ({cfg.n_layers}L d={cfg.d_model}), "
+      f"{part.n_participants} participants, seq_len={task.seq_len}")
+print(f"participant sizes: {np.asarray(part.sizes()).tolist()} "
+      "(last = publisher's query)")
+
+settings = [
+    ("CenAttn  (H=1)", dict(sync_interval=1, schedule="all")),
+    ("FedAttn  (H=2)", dict(sync_interval=2)),
+    ("FedAttn  (H=2, 50% sparse KV)",
+     dict(sync_interval=2, kv_exchange_ratio=0.5)),
+    ("LocAttn  (never sync)", dict(schedule="none")),
+]
+for name, kw in settings:
+    fed = cfg.fedattn.replace(n_participants=4, **kw)
+    engine = FedAttnEngine(cfg, params, fedattn=fed)
+    res = engine.generate(tokens, 1, partition=part, rng=jax.random.key(1))
+    em = float((res.tokens[:, 0] == gold).mean())
+    print(f"{name:32s} EM={em:.2f}  KV upload/participant="
+          f"{res.prefill_comm_bytes:9,.0f} B")

@@ -1,0 +1,50 @@
+"""Long-context decode via FedAttn block-locality (the long_500k story).
+
+The paper's technique doubles as a sub-quadratic long-context mechanism:
+at local layers each participant attends only to its own shard, so prefill
+attention cost drops from L² to Σ L_n² = L²/N, and a dense full-attention
+model gains an O(L²/N + L·L_sync) profile. This example runs a reduced
+llama3-family model on a "long" (2k here, 524288 in the dry-run) context
+split over 8 participants and decodes with the publisher — then contrasts
+an attention-free rwkv6 doing the same with O(1) state decode.
+
+Run:  PYTHONPATH=src python examples/long_context_fedattn.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.core.partition import Partition
+from repro.models import build_model
+from repro.serving import FedAttnEngine
+
+L, N = 2048, 8
+
+for arch in ("llama3-8b", "rwkv6-7b"):
+    cfg = get_reduced_config(arch)
+    cfg = cfg.replace(fedattn=cfg.fedattn.replace(n_participants=N))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = FedAttnEngine(cfg, params)
+    tokens = jax.random.randint(jax.random.key(1), (1, L), 3, cfg.vocab_size)
+    part = Partition.contiguous(L, N)
+
+    t0 = time.time()
+    res = engine.generate(tokens, 4, partition=part)
+    dt = time.time() - t0
+    # analytic local-attention saving for the dense model
+    sizes = np.asarray(part.sizes(), dtype=np.float64)
+    saving = float((sizes**2).sum()) / float(L) ** 2
+    kind = "attention" if cfg.arch_type == "dense" else "recurrent (state decode)"
+    print(f"{cfg.name:12s} [{kind}]")
+    print(f"  context {L} tokens over {N} participants; generated "
+          f"{res.tokens.shape[1]} tokens in {dt:.1f}s (CPU, reduced config)")
+    if cfg.arch_type == "dense":
+        print(f"  local-layer attention cost vs full: {saving:.1%} "
+              f"(the dry-run's long_500k runs exactly this mode at 524288)")
+    else:
+        print("  decode reads O(1) state — no KV cache at all; "
+              "sync layers hand the WKV state across shards")

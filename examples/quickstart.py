@@ -1,0 +1,60 @@
+"""Quickstart: the FedAttn protocol in 60 lines.
+
+Builds a small decoder-only model, partitions a sequence across 4
+participants, and shows the three protocol ingredients: the sync schedule,
+the per-layer visibility masks, and the quality/communication dial.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fedattn import FedAttnContext
+from repro.core.partition import Partition
+from repro.core.schedule import SyncSchedule
+from repro.models.transformer import TransformerLM
+from repro.types import FedAttnConfig, LayerSpec, ModelConfig
+
+# 1. A small model: 4 blocks, sync (global attention / KV exchange) at the
+#    4th — i.e. H = 4 local forwards per communication round.
+config = ModelConfig(
+    name="quickstart", arch_type="dense", n_layers=4, d_model=128,
+    n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=256, dtype="float32",
+    pattern=tuple(LayerSpec(sync=(i == 3)) for i in range(4)),
+    fedattn=FedAttnConfig(n_participants=4, sync_interval=4),
+)
+model = TransformerLM(config)
+params = model.init(jax.random.key(0))
+
+# 2. Four participants, each holding 16 private tokens of one global
+#    64-token sequence (contiguous shards — the SPMD layout).
+L = 64
+partition = Partition.contiguous(L, 4)
+ctx = FedAttnContext.build(config.fedattn, config.n_layers, L)
+print("sync schedule:", ctx.schedule.mask)
+print("comm rounds T =", ctx.schedule.n_syncs,
+      "| comm vs per-layer exchange =", f"{ctx.schedule.comm_cost_factor():.0%}")
+
+# 3. Visibility: local layers are block-diagonal; the sync layer is causal-global.
+vis_local = np.asarray(ctx.layer_visibility(0))
+vis_sync = np.asarray(ctx.layer_visibility(3))
+print("layer 0 (local): participant 3's query sees participant 0's keys?",
+      bool(vis_local[60, 5]))
+print("layer 3 (sync):  participant 3's query sees participant 0's keys?",
+      bool(vis_sync[60, 5]))
+
+# 4. Forward under FedAttn vs centralized — the approximation the paper bounds.
+tokens = jax.random.randint(jax.random.key(1), (1, L), 0, 256)
+logits_fed = model.apply(params, tokens, ctx)
+logits_cen = model.apply(params, tokens, FedAttnContext.centralized(4, L))
+dev = float(jnp.linalg.norm(logits_fed - logits_cen))
+print(f"‖logits_fed − logits_cen‖ = {dev:.3f}  (H=1 would be exactly 0)")
+
+# 5. The communication dial: per-participant KV upload during prefill.
+for h in (1, 2, 4):
+    sched = SyncSchedule.uniform(4, h)
+    c = FedAttnContext.build(config.fedattn.replace(sync_interval=h), 4, L,
+                             schedule=sched)
+    print(f"H={h}: KV upload/participant = "
+          f"{c.comm_bytes_per_participant(config.n_kv_heads, config.head_dim):,.0f} B")

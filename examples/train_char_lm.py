@@ -1,0 +1,88 @@
+"""End-to-end TRAINING driver: full pipeline (data → FedAttn model →
+optimizer → checkpoint) on the char-LM task.
+
+The paper's technique targets inference, but the framework trains too —
+FedAttn masks during training teach the model to work under the
+communication schedule it will be served with (a beyond-paper capability:
+"schedule-aware finetuning"). We train the same model twice — with
+centralized attention and with the FedAttn(H=2) schedule — and compare
+their evaluation loss *under the FedAttn schedule*: the schedule-aware
+model degrades less.
+
+Run:  PYTHONPATH=src python examples/train_char_lm.py [--steps 300]
+"""
+import argparse
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.data import batch_iterator, char_lm_task
+from repro.launch import steps as S
+from repro.models.transformer import TransformerLM
+from repro.optim import adamw_init
+from repro.types import FedAttnConfig, LayerSpec, ModelConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=16)
+args = ap.parse_args()
+
+config = ModelConfig(
+    name="char-lm", arch_type="dense", n_layers=4, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab_size=64, dtype="float32",
+    pattern=tuple(LayerSpec(sync=(i == 1)) for i in range(2)),
+    fedattn=FedAttnConfig(n_participants=4, sync_interval=2),
+)
+task = char_lm_task(seq_len=128, vocab_size=64)
+model = TransformerLM(config)
+
+fed = config.fedattn
+cen = FedAttnConfig(n_participants=1)
+
+
+def train(fedattn, tag):
+    params = model.init(jax.random.key(0))
+    opt = adamw_init(params)
+    step = jax.jit(S.make_train_step(config, task.seq_len, fedattn=fedattn, lr=2e-3))
+    it = batch_iterator(task, args.batch, seed=0)
+    t0 = time.time()
+    for i in range(args.steps):
+        b = next(it)
+        params, opt, m = step(
+            params, opt,
+            {"tokens": jnp.asarray(b["tokens"]), "labels": jnp.asarray(b["labels"])},
+        )
+        if i % 50 == 0:
+            print(f"  [{tag}] step {i:4d} loss {float(m['loss']):.3f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    return params
+
+
+def eval_loss(params, fedattn):
+    loss_step = S.make_train_step(config, task.seq_len, fedattn=fedattn, lr=0.0)
+    it = batch_iterator(task, 64, seed=99)
+    b = next(it)
+    _, _, m = jax.jit(loss_step)(
+        params, adamw_init(params),
+        {"tokens": jnp.asarray(b["tokens"]), "labels": jnp.asarray(b["labels"])},
+    )
+    return float(m["loss"])
+
+
+print("training centralized…")
+p_cen = train(cen, "cen")
+print("training schedule-aware (FedAttn H=2)…")
+p_fed = train(fed, "fed")
+
+print("\neval loss under the serving schedule FedAttn(H=2):")
+print(f"  centralized-trained : {eval_loss(p_cen, fed):.3f}")
+print(f"  schedule-aware      : {eval_loss(p_fed, fed):.3f}  (lower = better)")
+print("eval loss centralized (exactness check):")
+print(f"  centralized-trained : {eval_loss(p_cen, cen):.3f}")
+
+out = pathlib.Path("artifacts/models/char_lm_fed.npz")
+save_checkpoint(out, p_fed, step=args.steps)
+print(f"checkpoint → {out}")

@@ -1,0 +1,38 @@
+"""repro — Federated Attention (FedAttn) collaborative LLM inference framework.
+
+A production-grade JAX implementation of
+
+    "Federated Attention: A Distributed Paradigm for Collaborative LLM
+     Inference over Edge Networks" (Deng et al., CS.DC 2025)
+
+adapted to TPU pods: FedAttn is realized as a communication-avoiding
+sequence-parallel attention schedule (participants = sequence shards,
+KV exchange = all_gather over the `model` mesh axis at sync layers only).
+
+Public API re-exports the pieces a user typically touches.
+"""
+
+from repro.types import (
+    FedAttnConfig,
+    LayerSpec,
+    ModelConfig,
+    ShapeSpec,
+    INPUT_SHAPES,
+)
+from repro.core.schedule import SyncSchedule
+from repro.core.partition import Partition
+from repro.core.fedattn import FedAttnContext
+
+__version__ = "1.0.0"
+
+__all__ = [
+    "FedAttnConfig",
+    "LayerSpec",
+    "ModelConfig",
+    "ShapeSpec",
+    "INPUT_SHAPES",
+    "SyncSchedule",
+    "Partition",
+    "FedAttnContext",
+    "__version__",
+]

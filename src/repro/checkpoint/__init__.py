@@ -1,0 +1,5 @@
+"""Checkpointing: numpy-npz pytree save/restore (sharding-aware gather)."""
+
+from repro.checkpoint.npz import save_checkpoint, restore_checkpoint
+
+__all__ = ["save_checkpoint", "restore_checkpoint"]

@@ -1,0 +1,71 @@
+"""Flat-key npz checkpointing for parameter/optimizer pytrees.
+
+Keys encode the tree path (``layers/3/attn/wq``). Sharded arrays are
+gathered to host before writing (``jax.device_get`` handles addressable
+shards; on multi-host this would go through a distributed array fetch —
+noted as the single-host simplification). Restore rebuilds into the
+structure of a template pytree and re-shards via ``jax.device_put``.
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):  # match jax.tree flatten order (sorted keys)
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(jax.device_get(tree))
+    return out
+
+
+def save_checkpoint(path: str | pathlib.Path, tree: Any, *, step: int = 0) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    flat["__step__"] = np.asarray(step)
+    np.savez(path, **flat)
+
+
+def restore_checkpoint(
+    path: str | pathlib.Path, template: Any, *, shardings: Optional[Any] = None
+):
+    """Returns (tree, step). ``template`` fixes the pytree structure;
+    ``shardings`` (same structure) re-shards leaves on load."""
+    data = np.load(pathlib.Path(path), allow_pickle=False)
+    step = int(data["__step__"]) if "__step__" in data else 0
+
+    leaves_paths = []
+
+    def collect(tree, prefix=""):
+        if isinstance(tree, dict):
+            for k in sorted(tree):
+                collect(tree[k], f"{prefix}{k}/")
+        elif isinstance(tree, (list, tuple)):
+            for i, v in enumerate(tree):
+                collect(v, f"{prefix}{i}/")
+        else:
+            leaves_paths.append(prefix[:-1])
+
+    collect(template)
+    flat_template, treedef = jax.tree.flatten(template)
+    assert len(flat_template) == len(leaves_paths)
+    new_leaves = []
+    flat_sh = (
+        treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(leaves_paths)
+    )
+    for key, tmpl, sh in zip(leaves_paths, flat_template, flat_sh):
+        arr = data[key]
+        if sh is not None:
+            arr = jax.device_put(arr, sh)
+        new_leaves.append(arr)
+    return treedef.unflatten(new_leaves), step

@@ -1,0 +1,58 @@
+"""Architecture config registry — ``--arch <id>`` resolution.
+
+The 10 assigned architectures (public-literature pool) plus the paper's own
+Qwen2.5 ladder. Every entry cites its source in ``CONFIG.source``.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.core.schedule import SyncSchedule
+from repro.types import ModelConfig, reduced
+
+_MODULES = {
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b_a400m",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "llava-next-34b": "repro.configs.llava_next_34b",
+}
+
+ASSIGNED_ARCHS = tuple(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    """Resolve an architecture id to its full-size ModelConfig."""
+    if name in _MODULES:
+        return importlib.import_module(_MODULES[name]).CONFIG
+    from repro.configs.qwen25_paper import LADDER
+
+    if name in LADDER:
+        return LADDER[name]
+    raise KeyError(
+        f"unknown arch {name!r}; available: {sorted(_MODULES) + sorted(LADDER)}"
+    )
+
+
+def get_reduced_config(name: str, **overrides) -> ModelConfig:
+    """Smoke-test-sized variant of the same family (2 layers-ish, d<=256)."""
+    return reduced(get_config(name), **overrides)
+
+
+def list_configs() -> list[str]:
+    return list(ASSIGNED_ARCHS)
+
+
+def schedule_from_config(config: ModelConfig) -> SyncSchedule:
+    """The sync schedule induced by the pattern's structural sync flags —
+    guarantees loop-mode and scan-mode run the identical schedule."""
+    return SyncSchedule(tuple(s.sync for s in config.layer_specs()))
+
+
+def encoder_schedule_from_config(config: ModelConfig) -> SyncSchedule:
+    return SyncSchedule(tuple(s.sync for s in config.encoder_layer_specs()))

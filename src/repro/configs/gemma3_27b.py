@@ -1,0 +1,42 @@
+"""gemma3-27b — 5:1 local:global attention, 128k context
+[hf:google/gemma-3-1b-pt family card, 27B scaling].
+
+[dense] 62L d_model=5376 32H (GQA kv=16) d_ff=21504 vocab=262144.
+
+FedAttn mapping: the five sliding-window(1024) layers per period are
+*already* communication-free whenever the window fits a participant's
+shard (32k/16 = 2048 > 1024) — they run FedAttn-local with the window
+mask. The global-attention layer is the natural sync layer (H=6).
+62 = 10 periods of 6 + a 2-layer remainder (sliding, sliding).
+"""
+from repro.types import FedAttnConfig, LayerSpec, ModelConfig
+
+WINDOW = 1024
+
+_period = tuple(
+    [LayerSpec(kind="attn", window=WINDOW) for _ in range(5)]
+    + [LayerSpec(kind="attn", sync=True)]
+)
+
+CONFIG = ModelConfig(
+    name="gemma3-27b",
+    arch_type="dense",
+    n_layers=62,
+    d_model=5376,
+    n_heads=32,
+    n_kv_heads=16,
+    d_head=128,
+    d_ff=21504,
+    vocab_size=262144,
+    pattern=_period,
+    pattern_remainder=(
+        LayerSpec(kind="attn", window=WINDOW),
+        LayerSpec(kind="attn", window=WINDOW),
+    ),
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    rope_theta_local=10_000.0,
+    tie_embeddings=True,
+    fedattn=FedAttnConfig(n_participants=16, sync_interval=6),
+    source="5:1 local:global, 128k [hf:google/gemma-3-1b-pt]",
+)

@@ -1,0 +1,31 @@
+"""granite-moe-1b-a400m — 32 experts top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base].
+
+[moe] 24L d_model=1024 16H (GQA kv=8) d_ff=512 (expert size) vocab=49155,
+MoE 32e top-8 on every layer.
+"""
+from repro.types import FedAttnConfig, LayerSpec, ModelConfig
+
+SYNC_PERIOD = 4
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    arch_type="moe",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_head=64,
+    d_ff=512,
+    vocab_size=49155,
+    pattern=tuple(
+        LayerSpec(kind="attn", sync=(i == SYNC_PERIOD - 1), moe=True)
+        for i in range(SYNC_PERIOD)
+    ),
+    n_experts=32,
+    n_experts_per_token=8,
+    moe_d_ff=512,
+    tie_embeddings=True,
+    fedattn=FedAttnConfig(n_participants=16, sync_interval=SYNC_PERIOD),
+    source="32 experts top-8 [hf:ibm-granite/granite-3.0-1b-a400m-base]",
+)

@@ -1,0 +1,40 @@
+"""jamba-v0.1-52b — Mamba+attention 1:7 interleave, MoE [arXiv:2403.19887].
+
+[hybrid] 32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536,
+MoE 16 experts top-2 on every other layer (Jamba places MoE at alternate
+layers; attention at index 4 of each 8-layer Jamba block).
+
+FedAttn mapping: attention layers sync (KV exchange); mamba layers are
+FedAttn-local (per-segment scans) except that their conv/scan state crosses
+boundaries at sync granularity.
+"""
+from repro.types import FedAttnConfig, LayerSpec, ModelConfig
+
+_period = tuple(
+    LayerSpec(
+        kind=("attn" if i == 4 else "mamba"),
+        sync=(i == 4),
+        moe=(i % 2 == 1),
+    )
+    for i in range(8)
+)
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    arch_type="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=65536,
+    pattern=_period,
+    n_experts=16,
+    n_experts_per_token=2,
+    moe_d_ff=14336,
+    mamba_d_state=16,
+    mamba_d_conv=4,
+    mamba_expand=2,
+    fedattn=FedAttnConfig(n_participants=16, sync_interval=8),
+    source="Mamba+attn 1:7 interleave, MoE [arXiv:2403.19887]",
+)

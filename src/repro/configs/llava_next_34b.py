@@ -1,0 +1,32 @@
+"""llava-next-34b — anyres tiling VLM (Yi-34B-class backbone)
+[hf:llava-hf/llava-v1.6-mistral-7b-hf family card, 34B variant].
+
+[vlm] 60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+The vision tower (ViT/SigLIP + MM projector) is a STUB: ``input_specs``
+provides precomputed patch embeddings for 5 anyres tiles x 576 patches =
+2880 visual tokens occupying the sequence prefix.
+"""
+from repro.models.frontend import llava_next_num_patches
+from repro.types import FedAttnConfig, LayerSpec, ModelConfig
+
+SYNC_PERIOD = 4
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    arch_type="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=20480,
+    vocab_size=64000,
+    rope_theta=5_000_000.0,
+    pattern=tuple(
+        LayerSpec(kind="attn", sync=(i == SYNC_PERIOD - 1)) for i in range(SYNC_PERIOD)
+    ),
+    frontend="vision",
+    frontend_tokens=llava_next_num_patches(),  # 2880 anyres patch tokens
+    fedattn=FedAttnConfig(n_participants=16, sync_interval=SYNC_PERIOD),
+    source="anyres tiling [hf:llava-hf/llava-v1.6-mistral-7b-hf]",
+)

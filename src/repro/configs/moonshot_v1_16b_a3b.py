@@ -1,0 +1,31 @@
+"""moonshot-v1-16b-a3b — Moonlight (DeepSeek-V3-style MoE)
+[hf:moonshotai/Moonlight-16B-A3B].
+
+[dense-attention MoE] 48L d_model=2048 16H (kv=16 → MHA) d_ff=1408
+(expert size) vocab=163840, MoE 64e top-6.
+"""
+from repro.types import FedAttnConfig, LayerSpec, ModelConfig
+
+SYNC_PERIOD = 4
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    arch_type="dense",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=128,
+    d_ff=1408,
+    vocab_size=163840,
+    pattern=tuple(
+        LayerSpec(kind="attn", sync=(i == SYNC_PERIOD - 1), moe=True)
+        for i in range(SYNC_PERIOD)
+    ),
+    n_experts=64,
+    n_experts_per_token=6,
+    moe_d_ff=1408,
+    rope_theta=50_000.0,
+    fedattn=FedAttnConfig(n_participants=16, sync_interval=SYNC_PERIOD),
+    source="kimi/moonlight MoE [hf:moonshotai/Moonlight-16B-A3B]",
+)

@@ -1,0 +1,31 @@
+"""qwen3-moe-30b-a3b — 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B].
+
+[moe] 48L d_model=2048 32H (GQA kv=4) d_ff=768 (expert size) vocab=151936,
+MoE 128e top-8 on every layer. QK-norm (Qwen3 feature).
+"""
+from repro.types import FedAttnConfig, LayerSpec, ModelConfig
+
+SYNC_PERIOD = 4
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    arch_type="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    d_head=128,
+    d_ff=768,
+    vocab_size=151936,
+    pattern=tuple(
+        LayerSpec(kind="attn", sync=(i == SYNC_PERIOD - 1), moe=True)
+        for i in range(SYNC_PERIOD)
+    ),
+    n_experts=128,
+    n_experts_per_token=8,
+    moe_d_ff=768,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    fedattn=FedAttnConfig(n_participants=16, sync_interval=SYNC_PERIOD),
+    source="128 experts top-8 [hf:Qwen/Qwen3-30B-A3B]",
+)

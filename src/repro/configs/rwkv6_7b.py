@@ -1,0 +1,32 @@
+"""rwkv6-7b — Finch: RWKV-6 with data-dependent decay [arXiv:2404.05892].
+
+[ssm] 32L d_model=4096 (attention-free) d_ff=14336 vocab=65536.
+
+FedAttn applicability (DESIGN.md §4): attention-free — there is no KV
+matrix to exchange. We implement the recurrence dual: participants scan
+their own segments locally; at sync layers the WKV state flows across
+segment boundaries (inter-shard state hand-off). The sync period plays
+exactly the role of H.
+"""
+from repro.types import FedAttnConfig, LayerSpec, ModelConfig
+
+SYNC_PERIOD = 4
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    arch_type="ssm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,  # WKV heads: d_model / rwkv_head_dim
+    n_kv_heads=64,
+    d_ff=14336,
+    vocab_size=65536,
+    rwkv_head_dim=64,
+    pattern=tuple(
+        LayerSpec(kind="rwkv", sync=(i == SYNC_PERIOD - 1)) for i in range(SYNC_PERIOD)
+    ),
+    ffn_activation="relu",  # rwkv channel-mix uses squared-relu internally
+    norm="layernorm",
+    fedattn=FedAttnConfig(n_participants=16, sync_interval=SYNC_PERIOD),
+    source="Finch — data-dependent decay [arXiv:2404.05892]",
+)

@@ -1,0 +1,36 @@
+"""seamless-m4t-medium — encoder-decoder, multimodal [arXiv:2308.11596].
+
+[audio] 12L (decoder) + 12L (encoder) d_model=1024 16H (kv=16) d_ff=4096
+vocab=256206. The speech frontend (mel + conv feature extractor) is a STUB:
+``input_specs`` provides precomputed frame embeddings (B, S_enc, d_model).
+
+FedAttn: the encoder is the paper's encoder-only case (bidirectional local
+attention + periodic KV exchange). Encoder-decoder models *do* have a decode
+step (the decoder), so decode shapes lower the decoder serve_step against a
+frozen encoder memory.
+"""
+from repro.types import FedAttnConfig, LayerSpec, ModelConfig
+
+SYNC_PERIOD = 4
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    arch_type="audio",
+    n_layers=12,  # decoder
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    is_encoder_decoder=True,
+    n_encoder_layers=12,
+    encoder_pattern=tuple(
+        LayerSpec(kind="attn", sync=(i == SYNC_PERIOD - 1)) for i in range(SYNC_PERIOD)
+    ),
+    pattern=(LayerSpec(kind="attn"),),  # decoder layers (publisher-held)
+    ffn_activation="gelu",
+    norm="layernorm",
+    frontend="audio",
+    fedattn=FedAttnConfig(n_participants=16, sync_interval=SYNC_PERIOD, causal=False),
+    source="enc-dec, multimodal [arXiv:2308.11596]",
+)

@@ -1,0 +1,16 @@
+"""FedAttn core — the paper's contribution as composable JAX modules.
+
+Submodules:
+  partition    token -> participant partitions (Pi_n indicator machinery)
+  schedule     which Transformer blocks are sync (global-attention) layers
+  fedattn      the FedAttn protocol itself (eq. 16-21) + attention biasing
+  aggregation  KV aggregation: full (eq. 20), sparse & adaptive (eq. 37-38)
+  sparse       sparse local attention (token subsampling, eq. 34)
+  error        error-propagation instrumentation for Theorems 1/2
+"""
+
+from repro.core.partition import Partition
+from repro.core.schedule import SyncSchedule
+from repro.core.fedattn import FedAttnContext
+
+__all__ = ["Partition", "SyncSchedule", "FedAttnContext"]

@@ -1,0 +1,150 @@
+"""KV aggregation strategies (eq. 20 full concat; eq. 37-38 sparse/adaptive).
+
+At a sync layer each participant contributes (a subset of) its local KV rows
+to the global KV matrix. In the single-host reference semantics the
+"exchange" is a visibility mask: query token i may attend key token j iff
+
+    share_participant(i, j)  OR  contributed(j, round)
+
+(sparse KV exchange preserves *full local* attention — §VII-B6). In the SPMD
+realization, ``contributed`` drives a gather *before* the all_gather so the
+collective moves only ``ratio * L_n`` rows per participant.
+
+Selection strategies (``FedAttnConfig.kv_selection``):
+
+  random       i.i.d. Bernoulli(ratio) per token per round (paper Fig. 10)
+  strided      every k-th token (deterministic, SPMD-friendly)
+  recency      the last ratio*L_n tokens of each participant
+  sink_recency attention-sink (first tokens) + recency tail (StreamingLLM-style)
+  keynorm      top-k tokens by ||K_j||_2 (importance heuristic — adaptive
+               KV aggregation, Observation 4)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.partition import Partition
+
+
+def contribution_mask(
+    partition: Partition,
+    ratio: float,
+    selection: str,
+    *,
+    rng: jax.Array | None = None,
+    round_index: int = 0,
+    keys: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """(L,) bool — which global token positions are contributed (L'_n, eq. 38).
+
+    Args:
+      partition: the participant partition.
+      ratio: kv_exchange_ratio in (0, 1]. 1.0 → all True.
+      selection: strategy name (see module docstring).
+      rng: PRNG key for 'random'; required there, ignored elsewhere.
+      round_index: communication round t (folds into randomness so that
+        rounds resample independently, as in the paper).
+      keys: (L, n_kv, d_head) or (L, d) Key rows for 'keynorm'.
+    """
+    L = partition.seq_len
+    seg = partition.segment_ids
+    if ratio >= 1.0:
+        return jnp.ones((L,), dtype=bool)
+
+    if selection == "random":
+        if rng is None:
+            raise ValueError("selection='random' requires rng")
+        rng = jax.random.fold_in(rng, round_index)
+        return jax.random.bernoulli(rng, p=ratio, shape=(L,))
+
+    # Position within the owning participant's segment (contiguous partitions
+    # get exact local offsets; general partitions get a cumulative count).
+    local_pos = _local_positions(seg, partition.n_participants)
+    sizes = partition.sizes()  # (N,)
+    my_size = sizes[seg]  # (L,)
+    keep_n = jnp.maximum(1, jnp.ceil(my_size * ratio).astype(jnp.int32))
+
+    if selection == "strided":
+        stride = jnp.maximum(1, (my_size + keep_n - 1) // keep_n)
+        phase = round_index % 7  # decorrelate rounds
+        return (local_pos + phase) % stride == 0
+    if selection == "recency":
+        return local_pos >= (my_size - keep_n)
+    if selection == "sink_recency":
+        n_sink = jnp.maximum(1, keep_n // 4)
+        n_rec = keep_n - n_sink
+        return (local_pos < n_sink) | (local_pos >= (my_size - n_rec))
+    if selection == "keynorm":
+        if keys is None:
+            raise ValueError("selection='keynorm' requires keys")
+        k2 = keys.reshape(L, -1)
+        norms = jnp.linalg.norm(k2.astype(jnp.float32), axis=-1)  # (L,)
+        # Per-participant top-k by rank: count how many same-segment tokens
+        # have a strictly larger norm; keep if rank < keep_n.
+        same = seg[:, None] == seg[None, :]
+        larger = (norms[None, :] > norms[:, None]) & same
+        rank = jnp.sum(larger, axis=1)
+        return rank < keep_n
+    raise ValueError(f"unknown kv_selection {selection!r}")
+
+
+def _local_positions(segment_ids: jnp.ndarray, n_participants: int) -> jnp.ndarray:
+    """Offset of each token within its participant's segment, shape (L,)."""
+    onehot = jax.nn.one_hot(segment_ids, n_participants, dtype=jnp.int32)  # (L, N)
+    cum = jnp.cumsum(onehot, axis=0) - onehot  # exclusive prefix count
+    return jnp.take_along_axis(cum, segment_ids[:, None], axis=1)[:, 0]
+
+
+def exchange_visibility(
+    partition: Partition,
+    contributed: jnp.ndarray,
+) -> jnp.ndarray:
+    """(L, L) bool — sync-layer visibility under (possibly sparse) exchange.
+
+    query i sees key j iff same participant (full local view preserved) or
+    j was contributed to the global KV this round.
+    """
+    local = partition.local_mask()
+    return local | contributed[None, :]
+
+
+def participant_weights(
+    partition: Partition, mode: str = "uniform"
+) -> jnp.ndarray:
+    """FL-duality α_n analogue (eq. 36): per-participant aggregation weights.
+
+    'uniform'  — 1/N;
+    'size'     — L_n / L (FedAvg-style, proportional to contribution size).
+
+    FedAttn's aggregation is a concat, not an average, so these weights are
+    used by adaptive policies (e.g. scaling each participant's exchange
+    ratio) rather than by the aggregation itself.
+    """
+    n = partition.n_participants
+    if mode == "uniform":
+        return jnp.full((n,), 1.0 / n)
+    if mode == "size":
+        sizes = partition.sizes().astype(jnp.float32)
+        return sizes / jnp.sum(sizes)
+    raise ValueError(f"unknown weight mode {mode!r}")
+
+
+def adaptive_ratio_per_participant(
+    partition: Partition,
+    base_ratio: float,
+    importance: jnp.ndarray,
+) -> jnp.ndarray:
+    """Adaptive KV aggregation (Observation 4 / Fig. 8): allocate a higher
+    exchange ratio to important participants (e.g. the task publisher or
+    high-attention-mass contributors), keeping the *mean* ratio at
+    ``base_ratio`` so communication cost is unchanged.
+
+    Args:
+      importance: (N,) nonnegative scores.
+    Returns:
+      (N,) per-participant ratios clipped to (0, 1].
+    """
+    imp = jnp.clip(importance.astype(jnp.float32), 1e-6)
+    scaled = imp / jnp.mean(imp) * base_ratio
+    return jnp.clip(scaled, 1e-3, 1.0)

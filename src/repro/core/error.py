@@ -1,0 +1,163 @@
+"""Error-propagation instrumentation for Theorems 1/2 and Corollary 1.
+
+Three ingredients, mirroring the paper's Assumptions and bounds:
+
+  * empirical per-layer deviation ‖X_fed^(m) − X_cen^(m)‖_F (what Theorem 1
+    bounds) — :func:`layer_deviations` from captured hidden-state traces;
+  * empirical constants: Lipschitz gains (θ_m, ϱ_m) via random-perturbation
+    probing of the layer maps (Assumption 1), and local-vs-global attention
+    deviations σ_n^m (Assumption 2) — :func:`estimate_sigma`;
+  * analytic bound evaluation — :func:`theorem1_bound`,
+    :func:`corollary1_bound`, :func:`error_reduction_weights` (Γ_m, eq. 48).
+
+These power ``benchmarks/error_propagation.py`` and the adaptive schedule
+``SyncSchedule.from_error_weights``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def frob(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+
+
+def layer_deviations(
+    fed_trace: Sequence[jnp.ndarray], cen_trace: Sequence[jnp.ndarray]
+) -> np.ndarray:
+    """‖X_fed^(m) − X_cen^(m)‖_F for every captured layer output m."""
+    assert len(fed_trace) == len(cen_trace)
+    return np.array([float(frob(a - b)) for a, b in zip(fed_trace, cen_trace)])
+
+
+def relative_layer_deviations(
+    fed_trace: Sequence[jnp.ndarray], cen_trace: Sequence[jnp.ndarray]
+) -> np.ndarray:
+    """Deviation normalized by ‖X_cen^(m)‖_F (scale-free across depth)."""
+    out = []
+    for a, b in zip(fed_trace, cen_trace):
+        out.append(float(frob(a - b) / (frob(b) + 1e-12)))
+    return np.array(out)
+
+
+def estimate_lipschitz(
+    fn: Callable[[jnp.ndarray], jnp.ndarray],
+    x: jnp.ndarray,
+    rng: jax.Array,
+    *,
+    n_probes: int = 8,
+    eps: float = 1e-2,
+) -> float:
+    """Empirical (local) Lipschitz constant of ``fn`` around ``x``:
+    max over random directions of ‖fn(x+δ) − fn(x)‖_F / ‖δ‖_F."""
+    y0 = fn(x)
+    best = 0.0
+    for i in range(n_probes):
+        d = jax.random.normal(jax.random.fold_in(rng, i), x.shape, jnp.float32)
+        d = d * (eps * frob(x) / (frob(d) + 1e-12))
+        y1 = fn(x + d.astype(x.dtype))
+        best = max(best, float(frob(y1 - y0) / (frob(d) + 1e-12)))
+    return best
+
+
+def estimate_sigma(
+    local_attn_out: jnp.ndarray,
+    global_attn_out: jnp.ndarray,
+    segment_ids: jnp.ndarray,
+    n_participants: int,
+) -> np.ndarray:
+    """σ_n^m per participant (Assumption 2): ‖o_n − ô_n‖_F, where o_n is the
+    local attention output of participant n's rows and ô_n the global-
+    attention counterpart *at the same input* (eq. 25/41).
+
+    Args:
+      local_attn_out / global_attn_out: (..., L, d) attention outputs.
+      segment_ids: (L,) participant ids.
+    """
+    diff = (local_attn_out - global_attn_out).astype(jnp.float32)
+    sq = jnp.sum(jnp.square(diff), axis=tuple(range(diff.ndim - 2)) + (diff.ndim - 1,))
+    # sq: (L,) squared deviation mass per token
+    per_n = jax.ops.segment_sum(sq, segment_ids, num_segments=n_participants)
+    return np.sqrt(np.asarray(per_n))
+
+
+# ---------------------------------------------------------------------------
+# Analytic bounds
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LipschitzProfile:
+    """Per-layer constants: attention ϱ_m, FFN θ_m, and Σ_n σ_n^m."""
+
+    rho: np.ndarray  # (M,)
+    theta: np.ndarray  # (M,)
+    sigma_sum: np.ndarray  # (M,)  Σ_n σ_n^m
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.rho)
+
+    def gain(self) -> np.ndarray:
+        """γ_m = (1+θ_m)(1+ϱ_m) (Remark 1)."""
+        return (1.0 + self.theta) * (1.0 + self.rho)
+
+
+def theorem1_bound(profile: LipschitzProfile, sync_mask: Sequence[bool]) -> float:
+    """Theorem 1 / Theorem 2 (non-uniform) upper bound on ‖X^T − X*‖_F.
+
+    Error is injected at every *non-sync* layer m as (1+θ_m)·Σ_n σ_n^m and
+    amplified by Π_{i>m} γ_i through all subsequent layers (sync layers
+    inject nothing — eq. 42 / 47 with the general schedule of Theorem 2).
+    """
+    M = profile.n_layers
+    gains = profile.gain()
+    # suffix products of gains: amp[m] = Π_{i=m+1}^{M-1} γ_i
+    amp = np.ones(M)
+    for m in range(M - 2, -1, -1):
+        amp[m] = amp[m + 1] * gains[m + 1]
+    total = 0.0
+    for m in range(M):
+        if not sync_mask[m]:
+            total += (1.0 + profile.theta[m]) * profile.sigma_sum[m] * amp[m]
+    return float(total)
+
+
+def corollary1_bound(
+    theta: float, rho: float, sigma_sum: float, n_layers: int, interval: int
+) -> float:
+    """Corollary 1 closed form under uniform constants:
+    ((1+θ)Σσ_n) · (γ^M−1)/(γ−1) · (1 − (γ−1)/(γ^H−1))."""
+    gamma = (1.0 + theta) * (1.0 + rho)
+    M, H = n_layers, interval
+    if H <= 1:
+        return 0.0
+    if abs(gamma - 1.0) < 1e-12:
+        term_d = float(M)
+        term_e = 1.0 - 1.0 / H
+    else:
+        term_d = (gamma**M - 1.0) / (gamma - 1.0)
+        term_e = 1.0 - (gamma - 1.0) / (gamma**H - 1.0)
+    return (1.0 + theta) * sigma_sum * term_d * term_e
+
+
+def error_reduction_weights(profile: LipschitzProfile) -> np.ndarray:
+    """Γ_m (eq. 48): error reduction from making layer m a sync layer.
+    Feeds ``SyncSchedule.from_error_weights`` (Remark 6)."""
+    M = profile.n_layers
+    gains = profile.gain()
+    amp = np.ones(M)
+    for m in range(M - 2, -1, -1):
+        amp[m] = amp[m + 1] * gains[m + 1]
+    return (1.0 + profile.theta) * profile.sigma_sum * amp
+
+
+def marginal_comm_tradeoff(max_h: int) -> np.ndarray:
+    """Remark 5: marginal communication saving 1/(H(H+1)) for H=1..max_h-1."""
+    hs = np.arange(1, max_h)
+    return 1.0 / (hs * (hs + 1))

@@ -1,0 +1,274 @@
+"""The FedAttn protocol (Algorithm 1, eq. 16-21) as a composable JAX module.
+
+Single-host (reference) semantics
+---------------------------------
+Because participants hold *disjoint positions of one global sequence*, the
+whole protocol is expressible as per-layer attention **visibility**:
+
+  local layer  (Phase I):   vis(i, j) = causal(i, j) AND seg(i) == seg(j)
+  sync  layer  (Phase II):  vis(i, j) = causal(i, j) AND
+                                        (seg(i) == seg(j) OR contributed_t(j))
+
+where ``contributed_t`` is all-True for full KV exchange (eq. 20) and a
+per-round subset for sparse/adaptive exchange (eq. 37-38). This is exactly
+eq. 18 vs eq. 21: restricting the KV matrix a query can see. The FFN,
+residual and norm updates (eq. 19) are position-wise and unaffected.
+
+The mask formulation is *mathematically identical* to literally running N
+separate devices that exchange KV matrices (verified in
+``tests/test_fedattn_equivalence.py`` against an explicit multi-participant
+simulation), and it is what the Pallas flash-attention kernel consumes as
+segment ids.
+
+SPMD (TPU) semantics live in :mod:`repro.distributed.spmd_attention`: the
+sequence axis is sharded over the ``model`` mesh axis, local layers run
+entirely shard-local, and sync layers ``all_gather`` the (sparse) KV.
+
+:class:`FedAttnContext` carries everything a layer needs: the partition,
+the sync schedule, per-round contribution masks, and position/segment
+vectors for both prefill and decode.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import contribution_mask
+from repro.core.partition import Partition
+from repro.core.schedule import SyncSchedule
+from repro.types import FedAttnConfig
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def visibility(
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    q_seg: jnp.ndarray,
+    kv_seg: jnp.ndarray,
+    *,
+    sync: bool | jnp.ndarray,
+    causal: bool = True,
+    window: Optional[int] = None,
+    contributed: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Canonical FedAttn visibility mask, shape (Lq, Lk) bool.
+
+    Args:
+      q_pos / kv_pos: global position ids of queries / keys.
+      q_seg / kv_seg: participant (segment) ids of queries / keys.
+      sync: is this a sync (global-attention) layer. May be a traced scalar
+        (scan-over-layers mode) — then both visibilities are blended with
+        ``jnp.where``.
+      causal: causal vs bidirectional base mask.
+      window: sliding-window size (attention layers with local windows,
+        e.g. gemma3); applied on top of FedAttn visibility.
+      contributed: (Lk,) bool — sparse-KV-exchange contribution mask for
+        this round (None = full exchange).
+    """
+    base = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), dtype=bool)
+    if causal:
+        base &= q_pos[:, None] >= kv_pos[None, :]
+    if window is not None:
+        base &= (q_pos[:, None] - kv_pos[None, :]) < window
+    same = q_seg[:, None] == kv_seg[None, :]
+    if contributed is None:
+        global_vis = base
+    else:
+        global_vis = base & (same | contributed[None, :])
+    local_vis = base & same
+    if isinstance(sync, bool):
+        return global_vis if sync else local_vis
+    return jnp.where(sync, global_vis, local_vis)
+
+
+def mask_to_bias(mask: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """bool mask → additive bias (0 where visible, -inf where masked)."""
+    return jnp.where(mask, jnp.zeros((), dtype), jnp.asarray(NEG_INF, dtype))
+
+
+@dataclass(frozen=True)
+class FedAttnContext:
+    """Per-inference-task FedAttn state handed to every attention layer.
+
+    Construction: :meth:`FedAttnContext.build` from (config, schedule,
+    partition). During decode, :meth:`for_decode_step` produces the context
+    of a single new token.
+    """
+
+    config: FedAttnConfig
+    schedule: SyncSchedule
+    partition: Partition
+    positions: jnp.ndarray  # (L,) global positions of the current q tokens
+    segments: jnp.ndarray  # (L,) participant ids of the current q tokens
+    # Per-round contribution masks for sparse KV exchange: (T, L) bool, or
+    # None for full exchange. Row t applies to the t-th sync layer.
+    contributed: Optional[jnp.ndarray] = None
+    # Decode-time KV-side vectors (prefill: same as positions/segments).
+    kv_positions: Optional[jnp.ndarray] = None
+    kv_segments: Optional[jnp.ndarray] = None
+    # Per-participant sync schedules (paper Fig. 8, adaptive aggregation):
+    # (M, N) bool — participant n's queries go global at layer m. When set,
+    # it overrides the layer-wide schedule for *query* visibility (KV is
+    # available to any participant that syncs at that layer).
+    per_participant_sync: Optional[jnp.ndarray] = None
+
+    # -- constructors ----------------------------------------------------------
+
+    @staticmethod
+    def build(
+        config: FedAttnConfig,
+        n_layers: int,
+        seq_len: int,
+        *,
+        partition: Optional[Partition] = None,
+        schedule: Optional[SyncSchedule] = None,
+        rng: Optional[jax.Array] = None,
+        keys_for_selection: Optional[jnp.ndarray] = None,
+    ) -> "FedAttnContext":
+        if partition is None:
+            partition = Partition.contiguous(seq_len, config.n_participants)
+        if schedule is None:
+            schedule = SyncSchedule.by_name(
+                config.schedule, n_layers, interval=config.sync_interval
+            )
+        contributed = None
+        if config.kv_exchange_ratio < 1.0:
+            rounds = max(schedule.n_syncs, 1)
+            masks = []
+            for t in range(rounds):
+                masks.append(
+                    contribution_mask(
+                        partition,
+                        config.kv_exchange_ratio,
+                        config.kv_selection,
+                        rng=rng,
+                        round_index=t,
+                        keys=keys_for_selection,
+                    )
+                )
+            contributed = jnp.stack(masks)
+        positions = jnp.arange(seq_len, dtype=jnp.int32)
+        return FedAttnContext(
+            config=config,
+            schedule=schedule,
+            partition=partition,
+            positions=positions,
+            segments=partition.segment_ids,
+            contributed=contributed,
+        )
+
+    @staticmethod
+    def centralized(n_layers: int, seq_len: int, causal: bool = True) -> "FedAttnContext":
+        """CenAttn — the exact baseline (single participant)."""
+        cfg = FedAttnConfig(n_participants=1, sync_interval=1, causal=causal)
+        return FedAttnContext.build(cfg, n_layers, seq_len)
+
+    # -- per-layer masks --------------------------------------------------------
+
+    def _round_of_layer(self, layer: int) -> int:
+        """Communication-round index t of the sync at ``layer`` (0-based)."""
+        return sum(1 for m in range(layer) if self.schedule.mask[m])
+
+    def layer_visibility(
+        self, layer: int, *, window: Optional[int] = None
+    ) -> jnp.ndarray:
+        """(Lq, Lk) bool visibility for block ``layer`` (python-loop mode)."""
+        if self.per_participant_sync is not None:
+            return self._mixed_visibility(layer, window=window)
+        sync = self.schedule.is_sync(layer)
+        contributed = None
+        if sync and self.contributed is not None:
+            contributed = self.contributed[self._round_of_layer(layer) % self.contributed.shape[0]]
+        kv_pos = self.kv_positions if self.kv_positions is not None else self.positions
+        kv_seg = self.kv_segments if self.kv_segments is not None else self.segments
+        return visibility(
+            self.positions,
+            kv_pos,
+            self.segments,
+            kv_seg,
+            sync=sync,
+            causal=self.config.causal,
+            window=window,
+            contributed=contributed,
+        )
+
+    def layer_bias(
+        self, layer: int, *, window: Optional[int] = None, dtype=jnp.float32
+    ) -> jnp.ndarray:
+        return mask_to_bias(self.layer_visibility(layer, window=window), dtype)
+
+    def _mixed_visibility(self, layer: int, *, window=None) -> jnp.ndarray:
+        """Per-participant sync (Fig. 8): a query row is global at this
+        layer iff ITS participant syncs here; other rows stay local."""
+        kv_pos = self.kv_positions if self.kv_positions is not None else self.positions
+        kv_seg = self.kv_segments if self.kv_segments is not None else self.segments
+        local = visibility(
+            self.positions, kv_pos, self.segments, kv_seg,
+            sync=False, causal=self.config.causal, window=window,
+        )
+        glob = visibility(
+            self.positions, kv_pos, self.segments, kv_seg,
+            sync=True, causal=self.config.causal, window=window,
+        )
+        row_sync = self.per_participant_sync[layer][self.segments]  # (Lq,)
+        return jnp.where(row_sync[:, None], glob, local)
+
+    # -- decode -----------------------------------------------------------------
+
+    def for_decode_step(
+        self, cache_len: int, step: int, n_new: int = 1
+    ) -> "FedAttnContext":
+        """Context for decoding ``n_new`` tokens after ``cache_len`` cached
+        positions at decode step ``step``.
+
+        The new tokens belong to the publisher (generated text is owned by
+        the task publisher, §IV-C); the KV-side vectors describe the cache:
+        prefill positions keep their original partition, generated positions
+        belong to the publisher.
+        """
+        pub = self.partition.publisher(self.config.publisher_index)
+        L0 = self.partition.seq_len
+        q_pos = jnp.arange(n_new, dtype=jnp.int32) + (L0 + step)
+        q_seg = jnp.full((n_new,), pub, dtype=jnp.int32)
+        n_gen = cache_len - L0
+        kv_pos = jnp.arange(cache_len, dtype=jnp.int32)
+        kv_seg = jnp.concatenate(
+            [self.partition.segment_ids, jnp.full((max(n_gen, 0),), pub, jnp.int32)]
+        )[:cache_len]
+        return replace(
+            self,
+            positions=q_pos,
+            segments=q_seg,
+            kv_positions=kv_pos,
+            kv_segments=kv_seg,
+        )
+
+    # -- bookkeeping -------------------------------------------------------------
+
+    @property
+    def enabled(self) -> bool:
+        return self.config.enabled
+
+    def comm_bytes_per_participant(
+        self, n_kv_heads: int, head_dim: int, bytes_per_el: int = 2
+    ) -> float:
+        """Paper §VII-A3(a): average bits... here bytes transmitted per
+        participant for KV exchange during prefill.
+
+        Each sync round a participant uploads ratio*L_n rows of (K, V) —
+        2 * n_kv * d_head * bytes each — and (in the all-gather realization)
+        downloads the other participants' contributions. We report the
+        *upload* volume, matching the paper's per-participant accounting.
+        """
+        L = self.partition.seq_len
+        n = self.partition.n_participants
+        if n <= 1:
+            return 0.0
+        rows_per_round = self.config.kv_exchange_ratio * (L / n)
+        per_row = 2 * n_kv_heads * head_dim * bytes_per_el
+        return self.schedule.n_syncs * rows_per_round * per_row

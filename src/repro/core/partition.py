@@ -1,0 +1,163 @@
+"""Token → participant partitions (the paper's Π_n machinery, eq. 11-15).
+
+A :class:`Partition` assigns every global token index to exactly one of N
+participants. The paper's experiments use four segmentation settings
+(§VII-A2) which we reproduce:
+
+  * ``tok_seg_q_agnostic``  — uniform token-count split of everything.
+  * ``tok_seg_q_exclusive`` — question isolated at the publisher, examples
+    token-split among the rest.
+  * ``sem_seg_q_agnostic``  — split at semantic-unit boundaries, units
+    distributed round-robin across all participants.
+  * ``sem_seg_q_exclusive`` — question at the publisher, whole units
+    distributed among the rest.
+
+For the SPMD (TPU) realization, participants are *contiguous equal* sequence
+shards — :func:`Partition.contiguous` — so that participant ``n`` lives on
+sequence-shard ``n`` of the ``model`` mesh axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Partition:
+    """A disjoint partition of ``seq_len`` tokens over ``n_participants``.
+
+    Attributes:
+      segment_ids: int32 array of shape (seq_len,) — participant id per
+        global token position (the row-space view of the Π_n indicators).
+      n_participants: N.
+    """
+
+    segment_ids: jnp.ndarray
+    n_participants: int
+
+    # -- constructors ---------------------------------------------------------
+
+    @staticmethod
+    def contiguous(seq_len: int, n_participants: int) -> "Partition":
+        """Contiguous equal shards (SPMD layout). seq_len % N may be != 0;
+        the remainder goes to the last participants."""
+        base = seq_len // n_participants
+        rem = seq_len % n_participants
+        sizes = [base + (1 if i >= n_participants - rem else 0) for i in range(n_participants)]
+        ids = np.repeat(np.arange(n_participants, dtype=np.int32), sizes)
+        return Partition(jnp.asarray(ids), n_participants)
+
+    @staticmethod
+    def from_sizes(sizes: Sequence[int]) -> "Partition":
+        ids = np.repeat(np.arange(len(sizes), dtype=np.int32), list(sizes))
+        return Partition(jnp.asarray(ids), len(sizes))
+
+    @staticmethod
+    def from_segment_ids(segment_ids: np.ndarray | jnp.ndarray) -> "Partition":
+        arr = jnp.asarray(segment_ids, dtype=jnp.int32)
+        n = int(jnp.max(arr)) + 1 if arr.size else 1
+        return Partition(arr, n)
+
+    # Paper §VII-A2 segmentation settings ------------------------------------
+
+    @staticmethod
+    def tok_seg_q_agnostic(seq_len: int, n_participants: int) -> "Partition":
+        """a) Tok-seg: Q-ag — uniform token split of the full sequence."""
+        return Partition.contiguous(seq_len, n_participants)
+
+    @staticmethod
+    def tok_seg_q_exclusive(
+        seq_len: int, n_participants: int, question_len: int
+    ) -> "Partition":
+        """b) Tok-seg: Q-ex — the last ``question_len`` tokens (the target
+        question) go to participant N-1 (the publisher); the remaining
+        example tokens are token-split uniformly among participants 0..N-2."""
+        if n_participants < 2:
+            return Partition.contiguous(seq_len, n_participants)
+        body = seq_len - question_len
+        head = Partition.contiguous(body, n_participants - 1).segment_ids
+        tail = jnp.full((question_len,), n_participants - 1, dtype=jnp.int32)
+        return Partition(jnp.concatenate([head, tail]), n_participants)
+
+    @staticmethod
+    def sem_seg_q_agnostic(
+        unit_lengths: Sequence[int], n_participants: int
+    ) -> "Partition":
+        """c) Sem-seg: Q-ag — semantic units kept intact, distributed
+        greedily (shortest-load-first) across all participants, order
+        preserved inside the global sequence."""
+        loads = np.zeros(n_participants, dtype=np.int64)
+        ids = []
+        for ul in unit_lengths:
+            p = int(np.argmin(loads))
+            loads[p] += ul
+            ids.append(np.full(ul, p, dtype=np.int32))
+        return Partition(jnp.asarray(np.concatenate(ids)), n_participants)
+
+    @staticmethod
+    def sem_seg_q_exclusive(
+        unit_lengths: Sequence[int], n_participants: int
+    ) -> "Partition":
+        """d) Sem-seg: Q-ex — the last unit (the question) goes intact to the
+        publisher (participant N-1); earlier units are distributed among
+        the others."""
+        if n_participants < 2:
+            return Partition.sem_seg_q_agnostic(unit_lengths, n_participants)
+        loads = np.zeros(n_participants - 1, dtype=np.int64)
+        ids = []
+        for ul in unit_lengths[:-1]:
+            p = int(np.argmin(loads))
+            loads[p] += ul
+            ids.append(np.full(ul, p, dtype=np.int32))
+        ids.append(np.full(unit_lengths[-1], n_participants - 1, dtype=np.int32))
+        return Partition(jnp.asarray(np.concatenate(ids)), n_participants)
+
+    # -- queries --------------------------------------------------------------
+
+    @property
+    def seq_len(self) -> int:
+        return int(self.segment_ids.shape[0])
+
+    def sizes(self) -> jnp.ndarray:
+        """L_n for every participant, shape (N,)."""
+        return jnp.bincount(self.segment_ids, length=self.n_participants)
+
+    def indicator(self, n: int) -> jnp.ndarray:
+        """Π_n as a dense (L, L_n) 0/1 matrix (eq. 12). For analysis only —
+        never materialized in the hot path."""
+        idx = jnp.nonzero(self.segment_ids == n, size=self.seq_len, fill_value=-1)[0]
+        size = int(np.asarray(self.sizes())[n])
+        idx = idx[:size]
+        return jnp.eye(self.seq_len, dtype=jnp.float32)[:, idx] if size else jnp.zeros(
+            (self.seq_len, 0), jnp.float32
+        )
+
+    def local_mask(self) -> jnp.ndarray:
+        """(L, L) bool — True where query i and key j share a participant.
+        This is the block-diagonal local-attention visibility (Obs. 1)."""
+        s = self.segment_ids
+        return s[:, None] == s[None, :]
+
+    def is_contiguous(self) -> bool:
+        s = np.asarray(self.segment_ids)
+        return bool(np.all(np.diff(s) >= 0))
+
+    def publisher(self, publisher_index: int = -1) -> int:
+        return publisher_index % self.n_participants
+
+    def publisher_start(self, publisher_index: int = -1) -> int:
+        """First global position owned by the publisher — computed with
+        numpy so it stays static inside jit traces."""
+        seg = np.asarray(self.segment_ids)
+        pub = self.publisher(publisher_index)
+        idx = np.nonzero(seg == pub)[0]
+        return int(idx[0]) if idx.size else 0
+
+    def extend(self, n_new: int, participant: int) -> "Partition":
+        """Append ``n_new`` generated tokens owned by ``participant``
+        (decode: generated tokens belong to the publisher)."""
+        tail = jnp.full((n_new,), participant, dtype=jnp.int32)
+        return Partition(jnp.concatenate([self.segment_ids, tail]), self.n_participants)

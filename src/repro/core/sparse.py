@@ -1,0 +1,80 @@
+"""Sparse local attention (eq. 34, Fig. 9): subsample local input tokens
+*before* inference, trading response quality for compute.
+
+Unlike sparse KV exchange (which only thins the *cross-participant* view and
+is applied per round), sparse local attention drops tokens from the input
+stream entirely — an irreversible information loss, which is exactly the
+paper's Fig. 9 finding (monotonic quality degradation).
+
+The subsampling happens at the data level: we return a boolean keep-mask and
+a gather of the kept positions so the model simply runs on a shorter
+sequence; the partition is rebuilt for the surviving tokens.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import Partition
+
+
+def sparse_local_keep_mask(
+    partition: Partition,
+    sparsity_ratio: float,
+    rng: jax.Array,
+    *,
+    protect: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """(L,) bool — tokens kept for local computation.
+
+    Each participant independently keeps ceil(ratio * L_n) of its tokens,
+    uniformly at random (the paper's random sampling). ``protect`` marks
+    positions that must never be dropped (e.g. the publisher's question,
+    BOS). The mask keeps *at least one* token per participant.
+    """
+    L = partition.seq_len
+    if sparsity_ratio >= 1.0:
+        return jnp.ones((L,), dtype=bool)
+    seg = partition.segment_ids
+    # Random scores; per-participant rank threshold.
+    scores = jax.random.uniform(rng, (L,))
+    if protect is not None:
+        scores = jnp.where(protect, -1.0, scores)  # lowest rank → always kept
+    same = seg[:, None] == seg[None, :]
+    smaller = (scores[None, :] < scores[:, None]) & same
+    rank = jnp.sum(smaller, axis=1)  # rank of each token inside its segment
+    sizes = partition.sizes()[seg]
+    keep_n = jnp.maximum(1, jnp.ceil(sizes * sparsity_ratio).astype(jnp.int32))
+    return rank < keep_n
+
+
+def apply_keep_mask(
+    tokens: jnp.ndarray, partition: Partition, keep: np.ndarray
+) -> Tuple[jnp.ndarray, Partition]:
+    """Materialize the subsampled sequence (host-side; shapes change).
+
+    Args:
+      tokens: (L,) or (B, L) token ids.
+      keep: (L,) bool host array.
+    Returns:
+      (tokens_kept, new_partition)
+    """
+    keep = np.asarray(keep)
+    idx = np.nonzero(keep)[0]
+    seg = np.asarray(partition.segment_ids)[idx]
+    new_part = Partition(jnp.asarray(seg, dtype=jnp.int32), partition.n_participants)
+    if tokens.ndim == 1:
+        return jnp.asarray(np.asarray(tokens)[idx]), new_part
+    return jnp.asarray(np.asarray(tokens)[:, idx]), new_part
+
+
+def effective_flops_ratio(sparsity_ratio: float) -> float:
+    """Analytic prefill-FLOPs ratio of sparse vs dense local attention.
+
+    Projections/FFN scale linearly with kept tokens; the QK^T/AV terms scale
+    quadratically. For the attention-dominated long-context regime we report
+    the quadratic factor (the paper's O(L~_n^2 d) term)."""
+    return sparsity_ratio**2

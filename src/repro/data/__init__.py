@@ -1,0 +1,15 @@
+"""Synthetic data pipeline for training and paper-claims experiments."""
+
+from repro.data.synthetic import (
+    SyntheticTask,
+    char_lm_task,
+    multi_segment_recall_task,
+    batch_iterator,
+)
+
+__all__ = [
+    "SyntheticTask",
+    "char_lm_task",
+    "multi_segment_recall_task",
+    "batch_iterator",
+]

@@ -1,0 +1,138 @@
+"""Synthetic tasks standing in for the paper's GSM8K few-shot workload.
+
+The paper's quality experiments need an input whose answer depends on
+*cross-participant* context (few-shot examples + the target question are
+split across participants). Offline we replicate the structure with:
+
+  * **multi-segment associative recall** — N-1 participants each hold a set
+    of (key → value) bindings; the publisher holds a query key whose value
+    lives in some other participant's segment. Pass@1 exact-match on the
+    generated value token is the EM analogue: answering REQUIRES cross-
+    participant attention, so FedAttn's quality dial (H, sparsity, N) moves
+    it exactly like Fig. 5-10 move GSM8K accuracy.
+  * **char-LM** — a deterministic multi-scale sequence (nested arithmetic
+    pattern) for perplexity-style measurements.
+
+Both tasks emit (tokens, labels) with next-token labels and expose the
+segment structure (unit boundaries) so Partition.sem_seg_* can be used.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclass
+class SyntheticTask:
+    vocab_size: int
+    seq_len: int
+    name: str
+    # per-example: tokens (L,), labels (L,), unit_lengths, answer_pos
+    sampler: "callable"
+
+    def sample_batch(self, rng: np.random.Generator, batch: int):
+        toks, labs, units, answer_pos = [], [], None, []
+        for _ in range(batch):
+            t, l, u, ap = self.sampler(rng)
+            toks.append(t)
+            labs.append(l)
+            units = u
+            answer_pos.append(ap)
+        return (
+            np.stack(toks),
+            np.stack(labs),
+            units,
+            np.asarray(answer_pos),
+        )
+
+    def loss_mask(self, answer_pos: np.ndarray, *, aux_weight: float = 0.05):
+        """(B, L) weights: 1.0 at the supervised answer slot, ``aux_weight``
+        elsewhere (auxiliary LM signal keeps representations healthy while
+        the answer dominates the objective)."""
+        B = len(answer_pos)
+        m = np.full((B, self.seq_len), aux_weight, np.float32)
+        m[np.arange(B), answer_pos] = 1.0
+        return m
+
+
+# -- multi-segment associative recall ----------------------------------------
+
+SEP, QUERY, ANSWER = 0, 1, 2  # reserved control tokens
+
+
+def multi_segment_recall_task(
+    *,
+    n_participants: int = 4,
+    pairs_per_participant: int = 6,
+    vocab_size: int = 128,
+    name: str = "assoc_recall",
+) -> SyntheticTask:
+    """Each of the first N-1 participants holds ``pairs_per_participant``
+    (key value) bindings laid out as ``k v k v ... SEP``; the publisher's
+    segment is ``QUERY k ANSWER`` and the label at the ANSWER slot is the
+    value bound to k in whichever segment holds it."""
+    n_keys = (vocab_size - 3) // 2
+    key_base, val_base = 3, 3 + n_keys
+    pp = pairs_per_participant
+    unit_len = 2 * pp + 1
+    seq_len = (n_participants - 1) * unit_len + 3
+
+    def sampler(rng: np.random.Generator):
+        n_pairs = (n_participants - 1) * pp
+        keys = rng.choice(n_keys, size=n_pairs, replace=False)
+        vals = rng.integers(0, n_keys, size=n_pairs)
+        toks = []
+        units = []
+        for p in range(n_participants - 1):
+            seg = []
+            for j in range(pp):
+                i = p * pp + j
+                seg += [key_base + keys[i], val_base + vals[i]]
+            seg.append(SEP)
+            toks += seg
+            units.append(len(seg))
+        qi = rng.integers(0, n_pairs)
+        toks += [QUERY, key_base + keys[qi], ANSWER]
+        units.append(3)
+        toks = np.asarray(toks, dtype=np.int32)
+        labels = np.concatenate([toks[1:], [SEP]]).astype(np.int32)
+        # the supervised answer: predict value token AT the ANSWER position
+        answer_pos = len(toks) - 1
+        labels[answer_pos] = val_base + vals[qi]
+        return toks, labels, units, answer_pos
+
+    return SyntheticTask(vocab_size, seq_len, name, sampler)
+
+
+def char_lm_task(*, seq_len: int = 256, vocab_size: int = 64, name: str = "char_lm"):
+    """Deterministic-ish periodic sequence with noise: learnable by a small
+    LM, sensitive to context truncation."""
+
+    def sampler(rng: np.random.Generator):
+        phase = rng.integers(0, vocab_size)
+        stride = rng.integers(1, 7)
+        base = (phase + stride * np.arange(seq_len + 1)) % (vocab_size - 4) + 4
+        noise = rng.random(seq_len + 1) < 0.05
+        base = np.where(noise, rng.integers(4, vocab_size, seq_len + 1), base)
+        toks = base[:-1].astype(np.int32)
+        labels = base[1:].astype(np.int32)
+        units = [seq_len // 4] * 4
+        return toks, labels, units, seq_len - 1
+
+    return SyntheticTask(vocab_size, seq_len, name, sampler)
+
+
+def batch_iterator(
+    task: SyntheticTask, batch: int, seed: int = 0
+) -> Iterator[dict]:
+    rng = np.random.default_rng(seed)
+    while True:
+        toks, labs, units, ap = task.sample_batch(rng, batch)
+        yield {
+            "tokens": toks,
+            "labels": labs,
+            "unit_lengths": units,
+            "answer_pos": ap,
+        }

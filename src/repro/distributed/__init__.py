@@ -1,0 +1,13 @@
+"""Distributed runtime: mesh handling, sharding policy, SPMD FedAttn.
+
+Submodules:
+  runtime        process-wide SPMD context (mesh, axis roles)
+  sharding       auto-sharding policy for params and activations
+  spmd_attention shard_map FedAttn attention (prefill local/sync + decode)
+  spmd_ssm       shard_map recurrent layers with inter-shard state hand-off
+  collectives    HLO-text collective-bytes accounting (roofline input)
+"""
+
+from repro.distributed import runtime
+
+__all__ = ["runtime"]

@@ -1,0 +1,103 @@
+"""Collective-bytes accounting from compiled/lowered HLO text.
+
+``compiled.cost_analysis()`` does not expose collective traffic, so the
+roofline harness parses the (optimized) HLO: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op is matched and its
+*output* operand byte size summed (for reduce-scatter, the input). While-loop
+bodies appear once in the text; the caller supplies per-collective trip
+multipliers when the op sits inside a scanned layer stack (the roofline
+probe methodology keeps collectives out of loops where possible).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-gather.3 = bf16[2,32768,8,128]{...} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9_]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(COLLECTIVE_KINDS)
+    + r")(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+    count_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def scaled(self, factor: float) -> "CollectiveStats":
+        s = CollectiveStats()
+        for k, v in self.bytes_by_kind.items():
+            s.bytes_by_kind[k] = int(v * factor)
+        for k, v in self.count_by_kind.items():
+            s.count_by_kind[k] = int(v * factor)
+        return s
+
+    def merge(self, other: "CollectiveStats") -> "CollectiveStats":
+        s = CollectiveStats()
+        for src in (self, other):
+            for k, v in src.bytes_by_kind.items():
+                s.bytes_by_kind[k] += v
+            for k, v in src.count_by_kind.items():
+                s.count_by_kind[k] += v
+        return s
+
+    def summary(self) -> str:
+        parts = [
+            f"{k}: n={self.count_by_kind[k]} bytes={self.bytes_by_kind[k]:,}"
+            for k in sorted(self.bytes_by_kind)
+        ]
+        return "; ".join(parts) if parts else "none"
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum output-operand bytes of every collective op in the HLO text.
+
+    '-start' variants are counted; their '-done' halves are skipped (the
+    done op repeats the shape)."""
+    stats = CollectiveStats()
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.groups()
+        stats.bytes_by_kind[kind] += _shape_bytes(dtype, dims)
+        stats.count_by_kind[kind] += 1
+    return stats
+
+
+def per_device_collective_bytes(hlo_text: str) -> int:
+    """Total collective bytes (output-shape accounting = per-participating-
+    device traffic for the gather/reduce family)."""
+    return collective_bytes(hlo_text).total_bytes

@@ -1,0 +1,105 @@
+"""Process-wide SPMD context.
+
+The model code is mesh-agnostic; when a launcher activates SPMD mode the
+kernels route attention / recurrences through the shard_map implementations
+in :mod:`repro.distributed.spmd_attention` / ``spmd_ssm``. This module holds
+the active mesh and the role of each axis:
+
+  batch_axes  axes sharding the batch dimension (('pod','data') or ('data',))
+  seq_axis    the FedAttn participant axis ('model') — sequence shards
+  cache_axes  axes sharding the KV-cache length during decode
+
+``n_participants`` of the FedAttn config must equal the seq-axis size in
+SPMD prefill (participants == sequence shards).
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass
+class SpmdContext:
+    mesh: Mesh
+    batch_axes: tuple[str, ...] = ("data",)
+    seq_axis: str = "model"
+    cache_axes: tuple[str, ...] = ("model",)
+
+    @property
+    def n_seq_shards(self) -> int:
+        return self.mesh.shape[self.seq_axis]
+
+    @property
+    def bfirst(self):
+        """Batch-dim spec entry: axis tuple, or None when batch unsharded."""
+        return self.batch_axes if self.batch_axes else None
+
+    @property
+    def cfirst(self):
+        return self.cache_axes if self.cache_axes else None
+
+    def batch_spec(self, *rest) -> P:
+        return P(self.batch_axes, *rest)
+
+    def seq_sharded_spec(self) -> P:
+        """(B, L, heads, dh) activations: batch over batch_axes, L over seq."""
+        return P(self.batch_axes, self.seq_axis, None, None)
+
+
+_CTX: list[Optional[SpmdContext]] = [None]
+
+
+def activate(ctx: SpmdContext) -> None:
+    _CTX[0] = ctx
+
+
+def deactivate() -> None:
+    _CTX[0] = None
+
+
+def current() -> Optional[SpmdContext]:
+    return _CTX[0]
+
+
+def active() -> bool:
+    return _CTX[0] is not None
+
+
+@contextlib.contextmanager
+def spmd(
+    mesh: Mesh,
+    *,
+    batch_axes: Sequence[str] = ("data",),
+    seq_axis: str = "model",
+    cache_axes: Sequence[str] = ("model",),
+):
+    """Context manager enabling SPMD kernel routing under ``mesh``.
+
+    Model layers check ``runtime.active()`` and route their attention /
+    recurrence through the shard_map implementations.
+    """
+    activate(
+        SpmdContext(
+            mesh=mesh,
+            batch_axes=tuple(batch_axes),
+            seq_axis=seq_axis,
+            cache_axes=tuple(cache_axes),
+        )
+    )
+    try:
+        yield _CTX[0]
+    finally:
+        deactivate()
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint if SPMD is active, identity otherwise."""
+    if not active():
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX[0].mesh, spec)
+    )

@@ -1,0 +1,284 @@
+"""SPMD FedAttn attention: participants = sequence shards on the seq axis.
+
+This is the TPU-native realization of the paper's protocol (DESIGN.md §2):
+
+  * **Phase I (local layers)** — each shard runs flash attention over its
+    own (Q, K, V) slice. ZERO collectives: the HLO of a local layer
+    contains no all-gather/all-reduce on the sequence axis. This is the
+    communication saving the paper trades quality for.
+  * **Phase II (sync layers)** — ``lax.all_gather`` of (K, V[, positions])
+    over the seq axis (eq. 20: KV exchange + concat aggregation), then
+    local-Q × global-KV flash attention (eq. 21).
+  * **Sparse KV exchange** (eq. 37) — each shard top-k-selects
+    ``ratio · L_shard`` KV rows *before* the gather, shrinking collective
+    bytes by the ratio; local queries keep their full local KV view
+    (gathered own-shard rows are invalidated by a position sentinel to
+    avoid double counting).
+  * **Decode** — flash-decoding-style:each shard computes partial softmax
+    statistics over its cache slice; a psum over the cache axes combines
+    them. At local layers non-publisher shards contribute -inf/0 so the
+    result equals publisher-local attention.
+
+Partitions must be contiguous-equal (participant n == shard n); segment ids
+are derived arithmetically from positions.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import runtime
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _flash(q, k, v, mask, *, soft_cap, sm_scale, return_stats=False):
+    """Plain masked attention on shard-local operands, f32 accumulation.
+    Shapes: q (B,Lq,nq,dh), k/v (B,Lk,nkv,dh), mask (Lq,Lk) bool."""
+    B, Lq, nq, dh = q.shape
+    nkv = k.shape[2]
+    g = nq // nkv
+    scale = sm_scale if sm_scale is not None else dh**-0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    if soft_cap:
+        s = jnp.tanh(s / soft_cap) * soft_cap
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)  # (B,nq,Lq)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask[None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    if return_stats:
+        return m, l, acc
+    out = acc / jnp.maximum(l, 1e-20).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def _vis(q_pos, kv_pos, *, causal, window, extra=None):
+    mask = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    else:
+        mask &= kv_pos[None, :] < INT_MAX  # drop sentinel/padded rows
+    if window is not None:
+        mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+    if extra is not None:
+        mask &= extra
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill_attention(
+    q: jnp.ndarray,  # (B, L, nq, dh) — L sharded over seq axis
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    q_pos: jnp.ndarray,  # (L,) global positions, sharded over seq axis
+    causal: bool,
+    sync: bool,
+    window: Optional[int] = None,
+    exchange_ratio: float = 1.0,
+    kv_selection: str = "strided",
+    soft_cap: Optional[float] = None,
+    sm_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    ctx = runtime.current()
+    assert ctx is not None, "SPMD attention requires an active SpmdContext"
+    mesh, ax = ctx.mesh, ctx.seq_axis
+    bspec = P(ctx.bfirst, ax, None, None)
+
+    def _attend(q, k, v, qpos, kpos, chunk):
+        """Chunked flash (memory O(Lq·chunk)) on shard-local operands."""
+        from repro.kernels.ops import _chunked_attention
+
+        return _chunked_attention(
+            q, k, v, q_pos=qpos, kv_pos=kpos, q_seg=None, kv_seg=None,
+            causal=causal, local_only=False, contributed=None, window=window,
+            soft_cap=soft_cap, sm_scale=sm_scale, chunk=min(chunk, k.shape[1]),
+        )
+
+    def local_fn(q, k, v, pos):
+        return _attend(q, k, v, pos, pos, 512)
+
+    def sync_full_fn(q, k, v, pos):
+        kg = jax.lax.all_gather(k, ax, axis=1, tiled=True)
+        vg = jax.lax.all_gather(v, ax, axis=1, tiled=True)
+        pg = jax.lax.all_gather(pos, ax, axis=0, tiled=True)
+        return _attend(q, kg, vg, pos, pg, 512)
+
+    def sync_sparse_fn(q, k, v, pos):
+        Ls = k.shape[1]
+        n_keep = max(1, int(round(exchange_ratio * Ls)))
+        idx = _select_rows(pos, Ls, n_keep, kv_selection)
+        ks = jnp.take(k, idx, axis=1)
+        vs = jnp.take(v, idx, axis=1)
+        ps = jnp.take(pos, idx, axis=0)
+        # Invalidate own-shard gathered rows (full local view already present)
+        me = jax.lax.axis_index(ax)
+        kg = jax.lax.all_gather(ks, ax, axis=1, tiled=True)
+        vg = jax.lax.all_gather(vs, ax, axis=1, tiled=True)
+        pg = jax.lax.all_gather(ps, ax, axis=0, tiled=True)
+        n_shards = jax.lax.axis_size(ax)
+        owner = jnp.repeat(jnp.arange(n_shards), n_keep)
+        pg = jnp.where(owner == me, INT_MAX, pg)
+        k_all = jnp.concatenate([k, kg], axis=1)
+        v_all = jnp.concatenate([v, vg], axis=1)
+        p_all = jnp.concatenate([pos, pg], axis=0)
+        return _attend(q, k_all, v_all, pos, p_all, 512)
+
+    if not sync:
+        fn = local_fn
+    elif exchange_ratio >= 1.0:
+        fn = sync_full_fn
+    else:
+        fn = sync_sparse_fn
+    return jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(bspec, bspec, bspec, P(ax)),
+        out_specs=bspec,
+        check_vma=False,
+    )(q, k, v, q_pos)
+
+
+def _select_rows(pos, Ls, n_keep, selection):
+    """Static-count per-shard KV row selection for sparse exchange."""
+    if selection == "recency":
+        return jnp.arange(Ls - n_keep, Ls)
+    if selection == "sink_recency":
+        n_sink = max(1, n_keep // 4)
+        return jnp.concatenate(
+            [jnp.arange(n_sink), jnp.arange(Ls - (n_keep - n_sink), Ls)]
+        )
+    if selection in ("strided", "random", "keynorm"):
+        # strided is the deterministic SPMD stand-in for random sampling
+        stride = max(1, Ls // n_keep)
+        idx = jnp.arange(n_keep) * stride
+        return jnp.minimum(idx, Ls - 1)
+    raise ValueError(f"unknown kv_selection {selection!r}")
+
+
+def gather_memory_once(memory: jnp.ndarray) -> jnp.ndarray:
+    """All-gather the encoder memory over the seq axis ONCE before the
+    decoder stack (§Perf iteration 6): cross-attention KV is then computed
+    from the replicated memory locally at every decoder layer, instead of
+    per-layer (B, S_enc, nkv, dh) gathers (12× the traffic for seamless)."""
+    ctx = runtime.current()
+    assert ctx is not None
+    mesh, ax = ctx.mesh, ctx.seq_axis
+
+    return jax.shard_map(
+        lambda m: jax.lax.all_gather(m, ax, axis=1, tiled=True),
+        mesh=mesh,
+        in_specs=P(ctx.bfirst, ax, None),
+        out_specs=P(ctx.bfirst, None, None),
+        check_vma=False,
+    )(memory)
+
+
+def cross_attention_spmd(
+    q: jnp.ndarray,  # (B, S_dec, nq, dh) — S_dec sharded over seq axis
+    mk: jnp.ndarray,  # (B, S_enc, nkv, dh) — replicated (memory gathered once)
+    mv: jnp.ndarray,
+    *,
+    memory_replicated: bool = True,
+    soft_cap: Optional[float] = None,
+    sm_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Bidirectional cross-attention: decoder-Q shards attend to the encoder
+    memory KV. With ``memory_replicated`` (the default after §Perf it.6) the
+    KV needs no per-layer collective."""
+    ctx = runtime.current()
+    assert ctx is not None
+    mesh, ax = ctx.mesh, ctx.seq_axis
+    spec = P(ctx.bfirst, ax, None, None)
+    mspec = P(ctx.bfirst, None if memory_replicated else ax, None, None)
+
+    def fn(q, mk, mv):
+        from repro.kernels.ops import _chunked_attention
+
+        if memory_replicated:
+            kg, vg = mk, mv
+        else:
+            kg = jax.lax.all_gather(mk, ax, axis=1, tiled=True)
+            vg = jax.lax.all_gather(mv, ax, axis=1, tiled=True)
+        Lq, Lk = q.shape[1], kg.shape[1]
+        return _chunked_attention(
+            q, kg, vg,
+            q_pos=jnp.zeros((Lq,), jnp.int32),
+            kv_pos=jnp.zeros((Lk,), jnp.int32),
+            q_seg=None, kv_seg=None, causal=False, local_only=False,
+            contributed=None, window=None, soft_cap=soft_cap,
+            sm_scale=sm_scale, chunk=min(512, Lk),
+        )
+
+    return jax.shard_map(
+        fn, mesh=mesh, in_specs=(spec, mspec, mspec), out_specs=spec,
+        check_vma=False,
+    )(q, mk, mv)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, S, nq, dh) — replicated over cache axes
+    k_cache: jnp.ndarray,  # (B, C, nkv, dh) — C sharded over cache axes
+    v_cache: jnp.ndarray,
+    *,
+    q_pos: jnp.ndarray,  # (S,) global positions of the new tokens
+    kv_pos: jnp.ndarray,  # (C,) global cache positions, sharded like cache
+    publisher_lo: int,  # first global position owned by the publisher
+    sync: bool,
+    causal: bool = True,
+    window: Optional[int] = None,
+    soft_cap: Optional[float] = None,
+    sm_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Flash-decoding with FedAttn masking. At local (non-sync) layers only
+    cache rows with position >= publisher_lo (the publisher's segment and
+    all generated tokens) are visible."""
+    ctx = runtime.current()
+    assert ctx is not None
+    mesh = ctx.mesh
+    axes = ctx.cache_axes
+    cache_spec = P(ctx.bfirst, axes, None, None)
+    q_spec = P(ctx.bfirst, None, None, None)
+
+    def fn(q, kc, vc, kpos, qpos):
+        extra = None
+        if not sync:
+            extra = (kpos[None, :] >= publisher_lo)
+        mask = _vis(qpos, kpos, causal=causal, window=window, extra=extra)
+        m, l, acc = _flash(
+            q, kc, vc, mask, soft_cap=soft_cap, sm_scale=sm_scale, return_stats=True
+        )
+        # combine partial stats across cache shards
+        m_g = jax.lax.pmax(m, axes)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, axes)
+        acc_g = jax.lax.psum(acc * corr.transpose(0, 2, 1)[..., None], axes)
+        out = acc_g / jnp.maximum(l_g, 1e-20).transpose(0, 2, 1)[..., None]
+        return out.astype(q.dtype)
+
+    return jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(q_spec, cache_spec, cache_spec, P(axes), P(None)),
+        out_specs=q_spec,
+        check_vma=False,
+    )(q, k_cache, v_cache, kv_pos, q_pos)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for FedAttn compute hot-spots.
+
+Each kernel ships three artifacts:
+  <name>.py  pl.pallas_call + BlockSpec implementation (TPU target)
+  ops.py     jit'd public wrappers with shape checks + interpret fallback
+  ref.py     pure-jnp oracles used for validation and as CPU fallback
+"""

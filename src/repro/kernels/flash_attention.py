@@ -1,0 +1,206 @@
+"""Pallas TPU flash attention with FedAttn segment masking.
+
+One kernel serves all three attention modes of the protocol:
+
+  * Phase-I local attention  — ``local_only=True``: the segment-id block
+    mask restricts each query to same-participant keys,
+  * Phase-II global attention — no segment restriction (optionally a
+    sparse-exchange ``contributed`` row mask),
+  * sliding-window layers (gemma3) — relative-position window mask.
+
+TPU adaptation (DESIGN.md §6): blockwise online-softmax with explicit
+BlockSpec VMEM tiling. Q blocks of (BLOCK_Q, d_head) stream against KV
+blocks of (BLOCK_K, d_head); the MXU sees (BLOCK_Q × d_head) @
+(d_head × BLOCK_K) matmuls — both 128-aligned by construction. GQA is
+expressed in the index_map (kv head = q head // q_per_kv), so KV tiles are
+fetched once per group, not per query head. The m/l/acc running statistics
+live in VMEM scratch across the KV-block grid dimension (TPU grids iterate
+sequentially over the last axis, which makes the accumulation legal).
+
+Validated against kernels/ref.py with interpret=True on CPU
+(tests/test_kernels.py sweeps shapes, dtypes, and mask modes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+BLOCK_Q = 128
+BLOCK_K = 128
+
+
+def _kernel(
+    # prefetch-style scalar blocks come first as refs (we pass arrays)
+    q_ref,  # (1, BLOCK_Q, 1, dh)
+    k_ref,  # (1, BLOCK_K, 1, dh)
+    v_ref,
+    qpos_ref,  # (BLOCK_Q,)
+    kpos_ref,  # (BLOCK_K,)
+    qseg_ref,  # (BLOCK_Q,)
+    kseg_ref,  # (BLOCK_K,)
+    contrib_ref,  # (BLOCK_K,) int8
+    o_ref,  # (1, BLOCK_Q, 1, dh)
+    m_scr,  # scratch (BLOCK_Q,) f32
+    l_scr,
+    acc_scr,  # (BLOCK_Q, dh) f32
+    *,
+    causal: bool,
+    local_only: bool,
+    use_contrib: bool,
+    window: Optional[int],
+    soft_cap: Optional[float],
+    sm_scale: float,
+    n_k_blocks: int,
+):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * sm_scale  # (BQ, dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (BK, dh)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (BQ, BK)
+    if soft_cap:
+        s = jnp.tanh(s / soft_cap) * soft_cap
+
+    qpos = qpos_ref[...]
+    kpos = kpos_ref[...]
+    mask = jnp.ones(s.shape, dtype=jnp.bool_)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    else:
+        mask &= kpos[None, :] < jnp.iinfo(jnp.int32).max
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    if local_only:
+        mask &= qseg_ref[...][:, None] == kseg_ref[...][None, :]
+    elif use_contrib:
+        same = qseg_ref[...][:, None] == kseg_ref[...][None, :]
+        mask &= same | (contrib_ref[...][None, :] > 0)
+
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    acc = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Lq, nq, dh)
+    k: jnp.ndarray,  # (B, Lk, nkv, dh)
+    v: jnp.ndarray,
+    *,
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    q_seg: Optional[jnp.ndarray] = None,
+    kv_seg: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    local_only: bool = False,
+    contributed: Optional[jnp.ndarray] = None,
+    window: Optional[int] = None,
+    soft_cap: Optional[float] = None,
+    sm_scale: Optional[float] = None,
+    block_q: int = BLOCK_Q,
+    block_k: int = BLOCK_K,
+    interpret: bool = True,  # CPU container: interpret mode; False on TPU
+) -> jnp.ndarray:
+    B, Lq, nq, dh = q.shape
+    _, Lk, nkv, _ = k.shape
+    assert nq % nkv == 0
+    g = nq // nkv
+    scale = sm_scale if sm_scale is not None else dh**-0.5
+
+    block_q = min(block_q, Lq)
+    block_k = min(block_k, Lk)
+    # pad sequences to block multiples; padded kv rows carry sentinel pos
+    pad_q = (-Lq) % block_q
+    pad_k = (-Lk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad_q))
+        if q_seg is not None:
+            q_seg = jnp.pad(q_seg, (0, pad_q), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad_k), constant_values=jnp.iinfo(jnp.int32).max)
+        if kv_seg is not None:
+            kv_seg = jnp.pad(kv_seg, (0, pad_k), constant_values=-2)
+        if contributed is not None:
+            contributed = jnp.pad(contributed, (0, pad_k), constant_values=False)
+    Lq_p, Lk_p = Lq + pad_q, Lk + pad_k
+    n_q_blocks = Lq_p // block_q
+    n_k_blocks = Lk_p // block_k
+
+    use_seg = q_seg is not None and kv_seg is not None
+    if not use_seg:
+        q_seg = jnp.zeros((Lq_p,), jnp.int32)
+        kv_seg = jnp.zeros((Lk_p,), jnp.int32)
+    use_contrib = contributed is not None and not local_only and use_seg
+    contrib = (
+        contributed.astype(jnp.int8)
+        if use_contrib
+        else jnp.ones((Lk_p,), jnp.int8)
+    )
+
+    kernel = functools.partial(
+        _kernel,
+        causal=causal,
+        local_only=local_only and use_seg,
+        use_contrib=use_contrib,
+        window=window,
+        soft_cap=soft_cap,
+        sm_scale=scale,
+        n_k_blocks=n_k_blocks,
+    )
+
+    grid = (B, nq, n_q_blocks, n_k_blocks)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, dh), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_k, 1, dh), lambda b, h, qi, ki: (b, ki, h // g, 0)),
+            pl.BlockSpec((1, block_k, 1, dh), lambda b, h, qi, ki: (b, ki, h // g, 0)),
+            pl.BlockSpec((block_q,), lambda b, h, qi, ki: (qi,)),
+            pl.BlockSpec((block_k,), lambda b, h, qi, ki: (ki,)),
+            pl.BlockSpec((block_q,), lambda b, h, qi, ki: (qi,)),
+            pl.BlockSpec((block_k,), lambda b, h, qi, ki: (ki,)),
+            pl.BlockSpec((block_k,), lambda b, h, qi, ki: (ki,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, dh), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Lq_p, nq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, q_pos, kv_pos, q_seg, kv_seg, contrib)
+    return out[:, :Lq]

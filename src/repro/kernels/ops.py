@@ -1,0 +1,242 @@
+"""Public jit'd kernel wrappers with backend dispatch.
+
+Backends:
+  'xla'     pure-JAX implementations — `attention` uses a chunked
+            online-softmax (flash-style) scan so compiled memory stays
+            O(L · chunk) even at 500k context; RWKV/Mamba use lax.scan.
+            This is the default on CPU and inside the SPMD dry-run.
+  'pallas'  the Pallas TPU kernels (kernels/flash_attention.py etc.);
+            on CPU they run with interpret=True (kernel body executed by
+            the JAX interpreter) — used by the kernel validation tests.
+  'ref'     the pure-jnp oracles (kernels/ref.py), O(L^2) memory; smallest
+            code path, used for tests and tiny models.
+
+All wrappers share the FedAttn masking vocabulary: global positions,
+participant segment ids, `local_only` (Phase-I local attention) and
+`contributed` (sparse KV exchange at sync layers).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+NEG_INF = _ref.NEG_INF
+
+_DEFAULT_BACKEND = "xla"
+
+
+def set_default_backend(name: str) -> None:
+    global _DEFAULT_BACKEND
+    assert name in ("xla", "pallas", "ref")
+    _DEFAULT_BACKEND = name
+
+
+def default_backend() -> str:
+    return _DEFAULT_BACKEND
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    q_seg: Optional[jnp.ndarray] = None,
+    kv_seg: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    local_only: bool = False,
+    contributed: Optional[jnp.ndarray] = None,
+    window: Optional[int] = None,
+    soft_cap: Optional[float] = None,
+    sm_scale: Optional[float] = None,
+    backend: Optional[str] = None,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """FedAttn-aware multi-head attention. Shapes as attention_ref."""
+    backend = backend or _DEFAULT_BACKEND
+    if backend == "ref" or (backend == "xla" and q.shape[1] * k.shape[1] <= 256 * 256):
+        return _ref.attention_ref(
+            q, k, v, q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg, kv_seg=kv_seg,
+            causal=causal, local_only=local_only, contributed=contributed,
+            window=window, soft_cap=soft_cap, sm_scale=sm_scale,
+        )
+    if backend == "pallas":
+        from repro.kernels import flash_attention as fa
+
+        return fa.flash_attention(
+            q, k, v, q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg, kv_seg=kv_seg,
+            causal=causal, local_only=local_only, contributed=contributed,
+            window=window, soft_cap=soft_cap, sm_scale=sm_scale,
+        )
+    return _chunked_attention(
+        q, k, v, q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg, kv_seg=kv_seg,
+        causal=causal, local_only=local_only, contributed=contributed,
+        window=window, soft_cap=soft_cap, sm_scale=sm_scale, chunk=chunk,
+    )
+
+
+def _chunked_attention(
+    q, k, v, *, q_pos, kv_pos, q_seg, kv_seg, causal, local_only,
+    contributed, window, soft_cap, sm_scale, chunk,
+):
+    """Online-softmax attention, scanned over KV chunks. O(Lq·chunk) memory.
+
+    The KV sequence is padded to a multiple of ``chunk``; padded slots carry
+    kv_pos = +inf-like sentinel so the causal mask removes them.
+    """
+    B, Lq, nq, dh = q.shape
+    _, Lk, nkv, _ = k.shape
+    g = nq // nkv
+    scale = sm_scale if sm_scale is not None else dh**-0.5
+
+    pad = (-Lk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+        if kv_seg is not None:
+            kv_seg = jnp.pad(kv_seg, (0, pad), constant_values=-2)
+        if contributed is not None:
+            contributed = jnp.pad(contributed, (0, pad), constant_values=False)
+    n_chunks = (Lk + pad) // chunk
+
+    qf = q.astype(jnp.float32) * scale
+
+    def kv_chunk(i):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * chunk, chunk, axis=1)
+        sv = lambda a: jax.lax.dynamic_slice_in_dim(a, i * chunk, chunk, axis=0)
+        kc, vc = sl(k), sl(v)
+        posc = sv(kv_pos)
+        segc = sv(kv_seg) if kv_seg is not None else None
+        contc = sv(contributed) if contributed is not None else None
+        return kc, vc, posc, segc, contc
+
+    def body(carry, i):
+        m, l, acc = carry  # (B,nq,Lq), (B,nq,Lq), (B,Lq,nq,dh)
+        kc, vc, posc, segc, contc = kv_chunk(i)
+        kcf = jnp.repeat(kc.astype(jnp.float32), g, axis=2)
+        vcf = jnp.repeat(vc.astype(jnp.float32), g, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kcf)  # (B,nq,Lq,chunk)
+        if soft_cap:
+            s = jnp.tanh(s / soft_cap) * soft_cap
+        mask = jnp.ones((Lq, chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= posc[None, :]
+        else:
+            mask &= posc[None, :] < jnp.iinfo(jnp.int32).max  # drop padding
+        if window is not None:
+            mask &= (q_pos[:, None] - posc[None, :]) < window
+        if q_seg is not None and segc is not None:
+            same = q_seg[:, None] == segc[None, :]
+            if local_only:
+                mask &= same
+            elif contc is not None:
+                mask &= same | contc[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr.transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhqk,bkhd->bqhd", p, vcf
+        )
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, nq, Lq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, Lq), jnp.float32)
+    acc0 = jnp.zeros((B, Lq, nq, dh), jnp.float32)
+    from repro.kernels.probe import probe_mode
+
+    if probe_mode():
+        # cost-probe: unrolled loop so cost_analysis counts every chunk
+        carry = (m0, l0, acc0)
+        for i in range(n_chunks):
+            carry, _ = body(carry, jnp.asarray(i))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(n_chunks))
+    l = jnp.maximum(l, 1e-20)
+    out = acc / l.transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def attention_masked(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, mask: jnp.ndarray,
+    *, soft_cap: Optional[float] = None, sm_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Attention with a caller-supplied (Lq, Lk) visibility mask — used for
+    per-participant sync schedules (Fig. 8) where the mask is not expressible
+    through the standard flag vocabulary. Small-scale (O(L^2)) path."""
+    B, Lq, nq, dh = q.shape
+    nkv = k.shape[2]
+    g = nq // nkv
+    scale = sm_scale if sm_scale is not None else dh**-0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    if soft_cap:
+        s = jnp.tanh(s / soft_cap) * soft_cap
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, -1)[None, None, :, None], p, 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, S, nq, dh) with small S (usually 1)
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    **kw,
+) -> jnp.ndarray:
+    """Decode-step attention against a KV cache; same masking vocabulary."""
+    kw.setdefault("chunk", 2048)
+    return attention(q, k_cache, v_cache, **kw)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 / Mamba
+# ---------------------------------------------------------------------------
+
+
+def rwkv6(
+    r, k, v, w, u, *, initial_state=None, reset_mask=None, backend=None
+):
+    backend = backend or _DEFAULT_BACKEND
+    if backend == "pallas":
+        from repro.kernels import rwkv6 as _rk
+
+        return _rk.rwkv6_chunked(
+            r, k, v, w, u, initial_state=initial_state, reset_mask=reset_mask
+        )
+    return _ref.rwkv6_ref(
+        r, k, v, w, u, initial_state=initial_state, reset_mask=reset_mask
+    )
+
+
+def mamba_scan(
+    x, delta, A, Bm, C, D, *, initial_state=None, reset_mask=None, backend=None
+):
+    backend = backend or _DEFAULT_BACKEND
+    if backend == "pallas":
+        from repro.kernels import mamba_scan as _ms
+
+        return _ms.mamba_scan_chunked(
+            x, delta, A, Bm, C, D, initial_state=initial_state, reset_mask=reset_mask
+        )
+    return _ref.mamba_scan_ref(
+        x, delta, A, Bm, C, D, initial_state=initial_state, reset_mask=reset_mask
+    )

@@ -1,0 +1,29 @@
+"""Cost-probe mode: unroll every internal loop so ``compiled.cost_analysis``
+counts true FLOPs/bytes.
+
+XLA's cost analysis counts a while-loop body ONCE regardless of trip count
+(verified empirically — see EXPERIMENTS.md §Roofline methodology). The
+roofline harness therefore compiles small *probes* — 1 and 2 layer-pattern
+periods in loop mode — with this flag on, so the chunked-attention scan
+becomes an unrolled python loop and the recurrent layers use their chunked
+matrix form. Per-period cost = probe(2 periods) − probe(1 period); the full
+model cost = probe(1) + (n_periods − 1 + n_remainder/period) × per-period.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_PROBE = [False]
+
+
+def probe_mode() -> bool:
+    return _PROBE[0]
+
+
+@contextlib.contextmanager
+def probing():
+    _PROBE[0] = True
+    try:
+        yield
+    finally:
+        _PROBE[0] = False

@@ -1,0 +1,243 @@
+"""Pure-jnp oracles for every kernel. These define the semantics; the Pallas
+kernels (flash_attention.py, rwkv6.py, mamba_scan.py) must match them to
+numerical tolerance (tests/test_kernels.py sweeps shapes/dtypes).
+
+All oracles take float inputs of any dtype and compute in float32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Attention oracle (GQA + FedAttn segment masking + window + soft-cap)
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, Lq, nq, dh)
+    k: jnp.ndarray,  # (B, Lk, nkv, dh)
+    v: jnp.ndarray,  # (B, Lk, nkv, dh)
+    *,
+    q_pos: jnp.ndarray,  # (Lq,)
+    kv_pos: jnp.ndarray,  # (Lk,)
+    q_seg: Optional[jnp.ndarray] = None,  # (Lq,)
+    kv_seg: Optional[jnp.ndarray] = None,  # (Lk,)
+    causal: bool = True,
+    local_only: bool = False,  # FedAttn local layer (segment-diagonal)
+    contributed: Optional[jnp.ndarray] = None,  # (Lk,) sparse-exchange mask
+    window: Optional[int] = None,
+    soft_cap: Optional[float] = None,
+    sm_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Masked multi-head attention oracle, returns (B, Lq, nq, dh)."""
+    B, Lq, nq, dh = q.shape
+    _, Lk, nkv, _ = k.shape
+    assert nq % nkv == 0
+    g = nq // nkv
+    scale = sm_scale if sm_scale is not None else dh**-0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads for GQA
+    kf = jnp.repeat(kf, g, axis=2)
+    vf = jnp.repeat(vf, g, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    if soft_cap:
+        logits = jnp.tanh(logits / soft_cap) * soft_cap
+
+    mask = jnp.ones((Lq, Lk), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window is not None:
+        mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+    if q_seg is not None and kv_seg is not None:
+        same = q_seg[:, None] == kv_seg[None, :]
+        if local_only:
+            mask &= same
+        elif contributed is not None:
+            mask &= same | contributed[None, :]
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    # Guard fully-masked rows (softmax of all -inf → zeros, not NaN).
+    probs = jax.nn.softmax(logits, axis=-1)
+    any_vis = jnp.any(mask, axis=-1)  # (Lq,)
+    probs = jnp.where(any_vis[None, None, :, None], probs, 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # (B, 1, nq, dh)
+    k_cache: jnp.ndarray,  # (B, C, nkv, dh)
+    v_cache: jnp.ndarray,
+    **kw,
+) -> jnp.ndarray:
+    return attention_ref(q, k_cache, v_cache, **kw)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV oracle (data-dependent per-channel decay)
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_ref(
+    r: jnp.ndarray,  # (B, L, H, dk)
+    k: jnp.ndarray,  # (B, L, H, dk)
+    v: jnp.ndarray,  # (B, L, H, dv)
+    w: jnp.ndarray,  # (B, L, H, dk)  log-decay, w <= 0 (decay = exp(w))
+    u: jnp.ndarray,  # (H, dk)        bonus for the current token
+    *,
+    initial_state: Optional[jnp.ndarray] = None,  # (B, H, dk, dv)
+    reset_mask: Optional[jnp.ndarray] = None,  # (L,) True → reset state before t
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential WKV6 recurrence (Finch, arXiv:2404.05892):
+
+        y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+        S_t = diag(exp(w_t)) S_{t-1} + k_t v_t^T
+
+    ``reset_mask`` implements FedAttn-local semantics: the state is zeroed at
+    participant-segment starts so each participant scans only its own tokens.
+    Returns (y: (B, L, H, dv), final_state: (B, H, dk, dv)).
+    """
+    B, L, H, dk = r.shape
+    dv = v.shape[-1]
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    S0 = (
+        jnp.zeros((B, H, dk, dv), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(S, inputs):
+        rt, kt, vt, wt, reset = inputs  # (B,H,dk),(B,H,dk),(B,H,dv),(B,H,dk),()
+        S = jnp.where(reset, jnp.zeros_like(S), S)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,dk,dv)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + uf[None, :, :, None] * kv)
+        S = jnp.exp(wt)[..., :, None] * S + kv
+        return S, y
+
+    resets = (
+        reset_mask if reset_mask is not None else jnp.zeros((L,), bool)
+    )
+    xs = (
+        rf.transpose(1, 0, 2, 3),
+        kf.transpose(1, 0, 2, 3),
+        vf.transpose(1, 0, 2, 3),
+        wf.transpose(1, 0, 2, 3),
+        resets,
+    )
+    S, ys = jax.lax.scan(step, S0, xs)
+    y = ys.transpose(1, 0, 2, 3)  # (B, L, H, dv)
+    return y.astype(r.dtype), S
+
+
+def rwkv6_chunked_matrix(
+    r, k, v, w, u, *, chunk: int = 128, initial_state=None
+):
+    """Pure-jnp chunked matrix form of WKV6 — FLOPs-faithful stand-in for
+    the Pallas kernel (used by the roofline cost probe: python loop over
+    chunks, matmuls inside). Semantics identical to rwkv6_ref for w >= -5.
+    Returns (y, final_state)."""
+    B, L, H, dk = r.shape
+    dv = v.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, w = z(r), z(k), z(v), z(w)
+    n_chunks = (L + pad) // chunk
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = jnp.maximum(w.astype(jnp.float32), -5.0)
+    uf = u.astype(jnp.float32)
+    S = (
+        jnp.zeros((B, H, dk, dv), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    outs = []
+    C = chunk
+    tri = jnp.tril(jnp.ones((C, C), bool), k=-1)
+    eye = jnp.eye(C, dtype=bool)
+    for ci in range(n_chunks):
+        sl = slice(ci * C, (ci + 1) * C)
+        rc, kc, vc, wc = rf[:, sl], kf[:, sl], vf[:, sl], wf[:, sl]
+        W = jnp.cumsum(wc, axis=1)
+        W_prev = W - wc
+        W_tot = W[:, -1:]
+        r_dec = rc * jnp.exp(W_prev)
+        k_inv = kc * jnp.exp(-W)
+        A = jnp.einsum("bthd,bihd->bhti", r_dec, k_inv)
+        diag = jnp.einsum("bthd,bthd->bht", rc * uf[None, None], kc)
+        A = jnp.where(tri[None, None], A, 0.0) + jnp.where(
+            eye[None, None], diag[..., None] * eye[None, None], 0.0
+        )
+        y = jnp.einsum("bhti,bihd->bthd", A, vc)
+        y = y + jnp.einsum("bthd,bhde->bthe", r_dec, S)
+        outs.append(y)
+        k_dec = kc * jnp.exp(W_tot - W)
+        S = jnp.exp(W_tot[:, 0])[..., None] * S + jnp.einsum(
+            "bthd,bthe->bhde", k_dec, vc
+        )
+    y = jnp.concatenate(outs, axis=1)[:, :L]
+    return y.astype(r.dtype), S
+
+
+# ---------------------------------------------------------------------------
+# Mamba selective-scan oracle
+# ---------------------------------------------------------------------------
+
+
+def mamba_scan_ref(
+    x: jnp.ndarray,  # (B, L, d_in)
+    delta: jnp.ndarray,  # (B, L, d_in)  (post-softplus, > 0)
+    A: jnp.ndarray,  # (d_in, d_state)  (negative)
+    Bm: jnp.ndarray,  # (B, L, d_state)
+    C: jnp.ndarray,  # (B, L, d_state)
+    D: jnp.ndarray,  # (d_in,)
+    *,
+    initial_state: Optional[jnp.ndarray] = None,  # (B, d_in, d_state)
+    reset_mask: Optional[jnp.ndarray] = None,  # (L,)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Selective scan (Mamba1):
+
+        h_t = exp(Δ_t ⊙ A) h_{t-1} + (Δ_t x_t) B_t^T
+        y_t = h_t C_t + D ⊙ x_t
+
+    Returns (y: (B, L, d_in), final_state: (B, d_in, d_state)).
+    """
+    B, L, d_in = x.shape
+    d_state = A.shape[-1]
+    xf, df = x.astype(jnp.float32), delta.astype(jnp.float32)
+    Af, Bf, Cf = A.astype(jnp.float32), Bm.astype(jnp.float32), C.astype(jnp.float32)
+    h0 = (
+        jnp.zeros((B, d_in, d_state), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(h, inputs):
+        xt, dt, bt, ct, reset = inputs
+        h = jnp.where(reset, jnp.zeros_like(h), h)
+        decay = jnp.exp(dt[..., :, None] * Af[None])  # (B, d_in, d_state)
+        h = decay * h + (dt * xt)[..., :, None] * bt[..., None, :]
+        y = jnp.einsum("bds,bs->bd", h, ct)
+        return h, y
+
+    resets = reset_mask if reset_mask is not None else jnp.zeros((L,), bool)
+    xs = (
+        xf.transpose(1, 0, 2),
+        df.transpose(1, 0, 2),
+        Bf.transpose(1, 0, 2),
+        Cf.transpose(1, 0, 2),
+        resets,
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + D.astype(jnp.float32)[None, None] * xf
+    return y.astype(x.dtype), h

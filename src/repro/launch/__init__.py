@@ -1,0 +1,1 @@
+"""Launchers: production mesh, input specs, step builders, dry-run, train/serve."""

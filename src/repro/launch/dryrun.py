@@ -1,0 +1,213 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh)
+combination lowers AND compiles, and extract the roofline raw material.
+
+For each combination this script:
+  1. builds the workload (ShapeDtypeStruct inputs + shardings),
+  2. ``jax.jit(step, in_shardings=...).lower(...)`` under the SPMD runtime,
+  3. ``.compile()`` — sharding mismatches / unsupported collectives / OOM
+     at compile are FAILURES,
+  4. records ``memory_analysis()``, ``cost_analysis()`` and the collective
+     bytes parsed from the optimized HLO into a JSON artifact
+     (artifacts/dryrun/<arch>__<shape>__<mesh>.json) that §Roofline reads.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.distributed import runtime
+from repro.distributed.collectives import collective_bytes
+from repro.distributed.sharding import shard_params, replicated
+from repro.launch.mesh import make_production_mesh, require_devices
+from repro.launch.shapes import input_specs
+from repro.launch import steps as S
+from repro.models import build_model
+from repro.models.transformer import init_stacked
+from repro.optim import adamw_init
+from repro.types import INPUT_SHAPES
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _params_sds(config, *, scan: bool):
+    model = build_model(config)
+    if config.is_encoder_decoder:
+        return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    if scan:
+        return jax.eval_shape(lambda: init_stacked(model, jax.random.key(0)))
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool, compile_: bool = True):
+    """Lower + compile one (arch × shape × mesh). Returns the record dict."""
+    config = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    require_devices(512 if multi_pod else 256)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    wl = input_specs(config, shape, mesh)
+
+    scan_mode = (not config.is_encoder_decoder) and shape.mode in ("train", "prefill")
+    params_sds = _params_sds(config, scan=scan_mode)
+    # decode: Megatron-TP-style weight sharding (no per-step ZeRO gathers);
+    # recurrent-state archs use the single-axis split variant (§Perf it.4/5);
+    # train/prefill: FSDP-style largest-dim sharding
+    if shape.mode == "decode":
+        prefer = "last_split" if config.arch_type in ("ssm", "hybrid") else "last"
+    else:
+        prefer = "largest"
+    params_sh = shard_params(params_sds, mesh, prefer=prefer)
+
+    mode = "scan" if scan_mode else "loop"
+    t0 = time.time()
+    with runtime.spmd(
+        mesh,
+        batch_axes=wl.batch_axes,
+        cache_axes=wl.cache_axes,
+    ):
+        if shape.mode == "train":
+            step = S.make_train_step(
+                config, shape.seq_len, mode=mode, moe_impl="ragged", remat=True
+            )
+            opt_sds = jax.eval_shape(adamw_init, params_sds)
+            opt_sh = shard_params(opt_sds, mesh)
+            args = (params_sds, opt_sds, wl.inputs)
+            in_sh = (params_sh, opt_sh, wl.in_shardings)
+        elif shape.mode == "prefill":
+            step = S.make_prefill_step(
+                config, shape.seq_len, mode=mode, moe_impl="ragged"
+            )
+            if config.is_encoder_decoder:
+                args = (params_sds, wl.inputs["frames"], wl.inputs["dec_tokens"])
+                in_sh = (params_sh, wl.in_shardings["frames"], wl.in_shardings["dec_tokens"])
+            elif config.frontend == "vision":
+                args = (params_sds, wl.inputs["tokens"], wl.inputs["patch_embeds"])
+                in_sh = (params_sh, wl.in_shardings["tokens"], wl.in_shardings["patch_embeds"])
+            else:
+                args = (params_sds, wl.inputs["tokens"])
+                in_sh = (params_sh, wl.in_shardings["tokens"])
+        else:  # decode
+            step = S.make_serve_step(config, shape.seq_len, moe_impl="ragged")
+            cache_len = jax.ShapeDtypeStruct((), jnp.int32)
+            args = (params_sds, wl.inputs["cache"], wl.inputs["tokens"], cache_len)
+            in_sh = (
+                params_sh,
+                wl.in_shardings["cache"],
+                wl.in_shardings["tokens"],
+                replicated(mesh),
+            )
+
+        jitted = jax.jit(step, in_shardings=in_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        record = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "mode": shape.mode,
+            "lower_s": round(t_lower, 1),
+        }
+        if compile_:
+            t1 = time.time()
+            compiled = lowered.compile()
+            record["compile_s"] = round(time.time() - t1, 1)
+            mem = compiled.memory_analysis()
+            record["memory"] = {
+                "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_size_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None
+                ),
+            }
+            ca = compiled.cost_analysis() or {}
+            record["cost"] = {
+                k: ca.get(k) for k in ("flops", "bytes accessed") if k in ca
+            }
+            stats = collective_bytes(compiled.as_text())
+            record["collectives"] = {
+                "bytes_by_kind": dict(stats.bytes_by_kind),
+                "count_by_kind": dict(stats.count_by_kind),
+                "total_bytes": stats.total_bytes,
+            }
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(ASSIGNED_ARCHS), default=None)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every (arch × shape)")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--no-compile", action="store_true", help="lower only")
+    args = ap.parse_args()
+
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    pairs = []
+    archs = list(ASSIGNED_ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            pairs.append((a, s))
+
+    failures = []
+    for arch, shape in pairs:
+        mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+        out = ARTIFACTS / f"{arch}__{shape}__{mesh_tag}.json"
+        if args.skip_done and out.exists():
+            print(f"[skip] {arch} × {shape} × {mesh_tag}")
+            continue
+        print(f"[dryrun] {arch} × {shape} × {mesh_tag} ...", flush=True)
+        try:
+            rec = lower_one(
+                arch, shape, multi_pod=args.multi_pod,
+                compile_=not args.no_compile,
+            )
+            out.write_text(json.dumps(rec, indent=2))
+            mem = rec.get("memory", {})
+            print(
+                f"  ok: lower {rec['lower_s']}s compile {rec.get('compile_s', '-')}s "
+                f"args {_fmt(mem.get('argument_size_bytes'))} "
+                f"temp {_fmt(mem.get('temp_size_bytes'))} "
+                f"coll {_fmt(rec.get('collectives', {}).get('total_bytes'))}",
+                flush=True,
+            )
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures.append((arch, shape, repr(e)))
+            print(f"  FAIL: {e}\n{traceback.format_exc(limit=8)}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f[:2], f[2][:200])
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+def _fmt(n):
+    if n is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh definitions (TPU v5e-class pods).
+
+Functions, not module-level constants — importing this module never touches
+jax device state (critical because ``xla_force_host_platform_device_count``
+must be set before first jax init; see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Trivial 1-device mesh for tests / smoke runs on CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def require_devices(n: int) -> None:
+    have = len(jax.devices())
+    if have < n:
+        raise RuntimeError(
+            f"mesh needs {n} devices but only {have} present. For the "
+            "dry-run, set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} BEFORE any jax import (launch/dryrun.py does this)."
+        )

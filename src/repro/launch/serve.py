@@ -1,0 +1,74 @@
+"""Serving launcher — collaborative FedAttn inference on reduced configs.
+
+Demonstrates the paper's deployment story end to end: N participants hold
+private token segments; the engine runs FedAttn prefill (periodic KV
+exchange per the schedule) and the publisher decodes the answer.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --participants 4 \
+      --sync-interval 2 --kv-ratio 0.5 --n-new 16
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED_ARCHS, get_reduced_config
+from repro.serving import FedAttnEngine
+from repro.types import FedAttnConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ASSIGNED_ARCHS), default="qwen2-7b")
+    ap.add_argument("--participants", type=int, default=4)
+    ap.add_argument("--sync-interval", type=int, default=2)
+    ap.add_argument("--schedule", default="uniform")
+    ap.add_argument("--kv-ratio", type=float, default=1.0)
+    ap.add_argument("--kv-selection", default="random")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--n-new", type=int, default=8)
+    args = ap.parse_args()
+
+    config = get_reduced_config(args.arch)
+    if config.is_encoder_decoder:
+        raise SystemExit("decoder-only serving demo; enc-dec covered in examples")
+    fed = FedAttnConfig(
+        n_participants=args.participants,
+        sync_interval=args.sync_interval,
+        schedule=args.schedule,
+        kv_exchange_ratio=args.kv_ratio,
+        kv_selection=args.kv_selection,
+    )
+    model_params = None
+    from repro.models import build_model
+
+    model = build_model(config)
+    model_params = model.init(jax.random.key(0))
+    engine = FedAttnEngine(config, model_params, fedattn=fed)
+
+    tokens = jax.random.randint(
+        jax.random.key(1), (args.batch, args.seq_len), 3, config.vocab_size
+    )
+    extra = None
+    if config.frontend == "vision":
+        from repro.models.frontend import fake_vision_embeds
+
+        extra = fake_vision_embeds(
+            jax.random.key(2), args.batch, config.frontend_tokens, config.d_model
+        )
+    res = engine.generate(
+        tokens, args.n_new, rng=jax.random.key(3), extra_embeds=extra
+    )
+    print(f"arch={config.name} N={args.participants} H={args.sync_interval} "
+          f"schedule={args.schedule} kv_ratio={args.kv_ratio}")
+    print("generated tokens:\n", res.tokens)
+    print(f"prefill KV upload per participant: {res.prefill_comm_bytes:,.0f} bytes")
+
+
+if __name__ == "__main__":
+    main()

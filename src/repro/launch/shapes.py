@@ -1,0 +1,176 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every
+(architecture × input shape) workload — the dry-run's contract.
+
+Nothing here allocates device memory: specs are ShapeDtypeStructs, and the
+launchers use them with ``jit(...).lower(...)``.
+
+Workload semantics (DESIGN.md §4-5):
+
+  train_4k      train_step(params, opt_state, batch) — decoder-only LM loss
+                (enc-dec: frames→enc, tokens→dec); batch over (pod,)data,
+                sequence over model (FedAttn participants).
+  prefill_32k   prefill_step(params, tokens) → (last-token logits, KV/state
+                caches); sequence over model.
+  decode_32k    serve_step(params, cache, token, cache_len) — ONE new token
+                against a seq_len-long cache; cache length over model.
+  long_500k     serve_step with 524288-token cache, batch 1; cache length
+                over (data, model) = 256-way. Dense full-attention archs run
+                their FedAttn-local(+window) variant (the paper's technique
+                IS the sub-quadratic enabler — DESIGN.md §4 skips note).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import build_model
+from repro.types import INPUT_SHAPES, ModelConfig, ShapeSpec
+
+# decode cache gets one extra region for generated tokens, kept divisible by
+# every sharding degree we use (16, 256, 512)
+CACHE_PAD = 512
+DEC_LEN_FRACTION = 8  # enc-dec: decoder length = seq_len // 8 during train
+ENCDEC_DECODE_CAPACITY = 1024
+
+
+def batch_axes_for(shape: ShapeSpec, mesh: Mesh) -> tuple[str, ...]:
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if shape.global_batch % max(size, 1) == 0 and size > 1:
+        return tuple(axes)
+    # fall back to 'data' only, else unsharded
+    if "data" in mesh.axis_names and shape.global_batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return ()
+
+
+def cache_axes_for(shape: ShapeSpec, mesh: Mesh) -> tuple[str, ...]:
+    if shape.name == "long_500k":
+        return tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    return ("model",)
+
+
+@dataclass
+class WorkloadSpec:
+    """Everything the dry-run needs for one (arch × shape) lowering."""
+
+    config: ModelConfig
+    shape: ShapeSpec
+    batch_axes: tuple[str, ...]
+    cache_axes: tuple[str, ...]
+    inputs: dict  # name → ShapeDtypeStruct (pytrees allowed)
+    in_shardings: dict  # name → NamedSharding pytree
+    seq_axis: str = "model"
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+def input_specs(
+    config: ModelConfig, shape: ShapeSpec | str, mesh: Mesh
+) -> WorkloadSpec:
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    B, L = shape.global_batch, shape.seq_len
+    baxes = batch_axes_for(shape, mesh)
+    caxes = cache_axes_for(shape, mesh)
+    bspec = baxes if baxes else None
+    act_dt = jnp.dtype(config.dtype)
+    model = build_model(config)
+
+    inputs: dict[str, Any] = {}
+    shardings: dict[str, Any] = {}
+
+    if shape.mode in ("train", "prefill"):
+        if config.is_encoder_decoder:
+            dec_len = max(16, L // DEC_LEN_FRACTION) if shape.mode == "train" else 1
+            inputs["frames"] = _sds((B, L, config.d_model), act_dt)
+            shardings["frames"] = _ns(mesh, bspec, "model", None)
+            inputs["dec_tokens"] = _sds((B, dec_len), jnp.int32)
+            shardings["dec_tokens"] = _ns(
+                mesh, bspec, "model" if dec_len % mesh.shape["model"] == 0 else None
+            )
+            if shape.mode == "train":
+                inputs["labels"] = _sds((B, dec_len), jnp.int32)
+                shardings["labels"] = shardings["dec_tokens"]
+        else:
+            inputs["tokens"] = _sds((B, L), jnp.int32)
+            shardings["tokens"] = _ns(mesh, bspec, "model")
+            if shape.mode == "train":
+                inputs["labels"] = _sds((B, L), jnp.int32)
+                shardings["labels"] = _ns(mesh, bspec, "model")
+            if config.frontend == "vision":
+                Pn = config.frontend_tokens
+                inputs["patch_embeds"] = _sds((B, Pn, config.d_model), act_dt)
+                shardings["patch_embeds"] = _ns(
+                    mesh, bspec, "model" if Pn % mesh.shape["model"] == 0 else None, None
+                )
+    else:  # decode
+        capacity = L + CACHE_PAD
+        inputs["tokens"] = _sds((B, 1), jnp.int32)
+        shardings["tokens"] = _ns(mesh, bspec, None)
+        if config.is_encoder_decoder:
+            # self-attn KV (small decode region) + cross-attn memory KV
+            nkv, dh = config.n_kv_heads, config.head_dim
+            layer = {
+                "k": _sds((B, ENCDEC_DECODE_CAPACITY, nkv, dh), act_dt),
+                "v": _sds((B, ENCDEC_DECODE_CAPACITY, nkv, dh), act_dt),
+                "mk": _sds((B, L, nkv, dh), act_dt),
+                "mv": _sds((B, L, nkv, dh), act_dt),
+            }
+            inputs["cache"] = {"layers": [dict(layer) for _ in range(config.n_layers)]}
+            ls = {
+                "k": _ns(mesh, bspec, None, None, None),
+                "v": _ns(mesh, bspec, None, None, None),
+                "mk": _ns(mesh, bspec, caxes, None, None),
+                "mv": _ns(mesh, bspec, caxes, None, None),
+            }
+            shardings["cache"] = {"layers": [dict(ls) for _ in range(config.n_layers)]}
+        else:
+            cache_sds = jax.eval_shape(
+                lambda: model.init_cache(B, capacity)
+            )
+            inputs["cache"] = cache_sds
+            shardings["cache"] = [
+                _cache_layer_sharding(c, mesh, bspec, caxes) for c in cache_sds
+            ]
+    return WorkloadSpec(
+        config=config,
+        shape=shape,
+        batch_axes=baxes,
+        cache_axes=caxes,
+        inputs=inputs,
+        in_shardings=shardings,
+    )
+
+
+def _cache_layer_sharding(layer_sds: dict, mesh: Mesh, bspec, caxes):
+    out = {}
+    for k, v in layer_sds.items():
+        if k in ("k", "v"):
+            out[k] = _ns(mesh, bspec, caxes, None, None)
+        elif k == "state":
+            if v.ndim == 4:  # rwkv (B, H, dk, dv)
+                hshard = "model" if v.shape[1] % mesh.shape["model"] == 0 else None
+                out[k] = _ns(mesh, bspec, hshard, None, None)
+            else:  # mamba (B, d_in, ds)
+                dshard = "model" if v.shape[1] % mesh.shape["model"] == 0 else None
+                out[k] = _ns(mesh, bspec, dshard, None)
+        elif k == "conv":  # (B, dc-1, d_in)
+            dshard = "model" if v.shape[2] % mesh.shape["model"] == 0 else None
+            out[k] = _ns(mesh, bspec, None, dshard)
+        else:  # shift_t / shift_c (B, 1, D)
+            out[k] = _ns(mesh, bspec, None, None)
+    return out
+
+

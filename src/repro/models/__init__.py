@@ -1,0 +1,13 @@
+"""Model zoo: unified config-driven Transformer/SSM/hybrid definitions."""
+
+from repro.models.transformer import TransformerLM
+from repro.models.encdec import EncoderDecoderLM
+
+__all__ = ["TransformerLM", "EncoderDecoderLM", "build_model"]
+
+
+def build_model(config):
+    """Factory: pick the right model class for a ModelConfig."""
+    if config.is_encoder_decoder:
+        return EncoderDecoderLM(config)
+    return TransformerLM(config)

@@ -1,0 +1,213 @@
+"""GQA softmax attention layer, FedAttn-aware.
+
+The layer is where the paper's protocol meets the Transformer: depending on
+``sync`` (from the SyncSchedule) the attention runs
+
+  * Phase I  (local):  queries see only same-participant KV (eq. 18), or
+  * Phase II (global): queries see the aggregated global KV (eq. 21),
+    optionally thinned by the sparse-exchange contribution mask (eq. 37).
+
+Prefill/training operate on the full (B, L, D) sequence with masks; decode
+operates against a KV cache. Both call into :mod:`repro.kernels.ops`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fedattn import FedAttnContext
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.types import LayerSpec, ModelConfig
+
+Params = dict
+
+
+def init_attention(rng: jax.Array, config: ModelConfig) -> Params:
+    d, dh = config.d_model, config.head_dim
+    nq, nkv = config.n_heads, config.n_kv_heads
+    dt = jnp.dtype(config.dtype)
+    rq, rk, rv, ro = jax.random.split(rng, 4)
+    p: Params = {
+        "wq": L.dense_init(rq, (d, nq * dh), dt),
+        "wk": L.dense_init(rk, (d, nkv * dh), dt),
+        "wv": L.dense_init(rv, (d, nkv * dh), dt),
+        "wo": L.dense_init(ro, (nq * dh, d), dt),
+    }
+    if config.qkv_bias:
+        p["bq"] = jnp.zeros((nq * dh,), dt)
+        p["bk"] = jnp.zeros((nkv * dh,), dt)
+        p["bv"] = jnp.zeros((nkv * dh,), dt)
+    if config.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dt)
+        p["k_norm"] = jnp.ones((dh,), dt)
+    return p
+
+
+def _project_qkv(
+    p: Params, x: jnp.ndarray, config: ModelConfig, positions: jnp.ndarray,
+    rope_theta: float,
+):
+    B, S, d = x.shape
+    nq, nkv, dh = config.n_heads, config.n_kv_heads, config.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if config.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, nq, dh)
+    k = k.reshape(B, S, nkv, dh)
+    v = v.reshape(B, S, nkv, dh)
+    if config.qk_norm:
+        q = L.rms_head_norm(p["q_norm"], q, config.norm_eps)
+        k = L.rms_head_norm(p["k_norm"], k, config.norm_eps)
+    q = L.apply_rope(q, positions, rope_theta)
+    k = L.apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _rope_theta_for(spec: LayerSpec, config: ModelConfig) -> float:
+    if spec.window is not None and config.rope_theta_local is not None:
+        return config.rope_theta_local
+    return config.rope_theta
+
+
+def attention_block(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, D) — normalized input
+    ctx: FedAttnContext,
+    layer_idx: int,
+    spec: LayerSpec,
+    config: ModelConfig,
+    *,
+    sync: Optional[bool] = None,
+    backend: Optional[str] = None,
+    return_kv: bool = False,
+):
+    """Prefill/training attention. ``sync`` overrides the schedule (used by
+    scan-over-layers where the flag is structural)."""
+    theta = _rope_theta_for(spec, config)
+    q, k, v = _project_qkv(p, x, config, ctx.positions, theta)
+    if sync is None:
+        sync = ctx.schedule.is_sync(layer_idx)
+
+    from repro.distributed import runtime
+
+    if runtime.active() and x.shape[1] % runtime.current().n_seq_shards == 0:
+        from repro.distributed import spmd_attention
+
+        out = spmd_attention.prefill_attention(
+            q, k, v,
+            q_pos=ctx.positions,
+            causal=ctx.config.causal,
+            sync=sync or not ctx.enabled,
+            window=spec.window,
+            exchange_ratio=ctx.config.kv_exchange_ratio,
+            kv_selection=ctx.config.kv_selection,
+            soft_cap=config.attn_soft_cap,
+        )
+        B, S = x.shape[:2]
+        y = jnp.einsum("bse,ed->bsd", out.reshape(B, S, -1), p["wo"])
+        if return_kv:
+            return y, (k, v)
+        return y
+
+    if ctx.per_participant_sync is not None:
+        # Fig. 8 adaptive per-participant sync: explicit visibility mask
+        mask = ctx.layer_visibility(layer_idx, window=spec.window)
+        out = ops.attention_masked(q, k, v, mask, soft_cap=config.attn_soft_cap)
+        B, S = x.shape[:2]
+        y = jnp.einsum("bse,ed->bsd", out.reshape(B, S, -1), p["wo"])
+        return (y, (k, v)) if return_kv else y
+
+    contributed = None
+    if sync and ctx.contributed is not None:
+        t = ctx._round_of_layer(layer_idx) % ctx.contributed.shape[0]
+        contributed = ctx.contributed[t]
+    seg = ctx.segments if ctx.enabled else None
+    kv_seg = (ctx.kv_segments if ctx.kv_segments is not None else ctx.segments) if ctx.enabled else None
+    out = ops.attention(
+        q, k, v,
+        q_pos=ctx.positions,
+        kv_pos=ctx.kv_positions if ctx.kv_positions is not None else ctx.positions,
+        q_seg=seg,
+        kv_seg=kv_seg,
+        causal=ctx.config.causal,
+        local_only=(not sync) and ctx.enabled,
+        contributed=contributed,
+        window=spec.window,
+        soft_cap=config.attn_soft_cap,
+        backend=backend,
+    )
+    B, S = x.shape[:2]
+    y = jnp.einsum("bse,ed->bsd", out.reshape(B, S, -1), p["wo"])
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attention_decode_block(
+    p: Params,
+    x: jnp.ndarray,  # (B, S_new, D) — normalized input (usually S_new = 1)
+    k_cache: jnp.ndarray,  # (B, C, nkv, dh)
+    v_cache: jnp.ndarray,
+    cache_len,  # int or traced scalar: number of valid cache slots
+    ctx: FedAttnContext,  # built via for_decode_step
+    layer_idx: int,
+    spec: LayerSpec,
+    config: ModelConfig,
+    *,
+    sync: Optional[bool] = None,
+    backend: Optional[str] = None,
+):
+    """Decode-step attention against the cache; writes the new KV in-place
+    (dynamic_update_slice) and returns (y, k_cache, v_cache)."""
+    theta = _rope_theta_for(spec, config)
+    q, k_new, v_new = _project_qkv(p, x, config, ctx.positions, theta)
+    S_new = x.shape[1]
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), cache_len, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), cache_len, axis=1)
+    if sync is None:
+        sync = ctx.schedule.is_sync(layer_idx)
+
+    from repro.distributed import runtime
+
+    if runtime.active():
+        from repro.distributed import spmd_attention
+
+        publisher_lo = (
+            ctx.partition.publisher_start(ctx.config.publisher_index)
+            if ctx.enabled else 0
+        )
+        out = spmd_attention.decode_attention(
+            q, k_cache, v_cache,
+            q_pos=ctx.positions,
+            kv_pos=ctx.kv_positions,
+            publisher_lo=publisher_lo,
+            sync=sync or not ctx.enabled,
+            window=spec.window,
+            soft_cap=config.attn_soft_cap,
+        )
+        B = x.shape[0]
+        y = jnp.einsum("bse,ed->bsd", out.reshape(B, S_new, -1), p["wo"])
+        return y, k_cache, v_cache
+
+    seg = ctx.segments if ctx.enabled else None
+    kv_seg = ctx.kv_segments if ctx.enabled else None
+    out = ops.decode_attention(
+        q, k_cache, v_cache,
+        q_pos=ctx.positions,
+        kv_pos=ctx.kv_positions,
+        q_seg=seg,
+        kv_seg=kv_seg,
+        causal=True,
+        local_only=(not sync) and ctx.enabled,
+        window=spec.window,
+        soft_cap=config.attn_soft_cap,
+        backend=backend,
+    )
+    B = x.shape[0]
+    y = jnp.einsum("bse,ed->bsd", out.reshape(B, S_new, -1), p["wo"])
+    return y, k_cache, v_cache

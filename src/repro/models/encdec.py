@@ -1,0 +1,278 @@
+"""Encoder-decoder backbone (seamless-m4t-medium assignment).
+
+The encoder is the paper's *encoder-only FedAttn case*: bidirectional
+self-attention over participant-partitioned input frames with periodic KV
+exchange (eq. 16-21 with the bidirectional mask). The decoder is standard
+causal self-attention (generated tokens live at the task publisher) plus
+cross-attention to the encoder memory; the encoder KV for cross-attention
+is exchanged **once** after encoding — a single additional communication
+round (§IV-C output generation).
+
+The modality frontend (mel-spectrogram + conv feature extractor) is a STUB
+per the assignment: ``apply`` accepts precomputed frame embeddings.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fedattn import FedAttnContext
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.types import FedAttnConfig, LayerSpec, ModelConfig
+
+Params = dict
+
+
+def init_cross_attention(rng: jax.Array, config: ModelConfig) -> Params:
+    return A.init_attention(rng, config)
+
+
+def cross_attention_block(
+    p: Params,
+    x: jnp.ndarray,  # (B, S_dec, D) normalized decoder states
+    memory_k: jnp.ndarray,  # (B, S_enc, nkv, dh)
+    memory_v: jnp.ndarray,
+    config: ModelConfig,
+    *,
+    backend: Optional[str] = None,
+) -> jnp.ndarray:
+    from repro.kernels import ops
+
+    B, S, d = x.shape
+    nq, dh = config.n_heads, config.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    if config.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, S, nq, dh)
+    S_enc = memory_k.shape[1]
+
+    from repro.distributed import runtime
+
+    if runtime.active():
+        from repro.distributed import spmd_attention
+
+        n_shards = runtime.current().n_seq_shards
+        if S > 1 and S % n_shards == 0:
+            out = spmd_attention.cross_attention_spmd(
+                q, memory_k, memory_v, soft_cap=config.attn_soft_cap
+            )
+        else:
+            out = spmd_attention.decode_attention(
+                q, memory_k, memory_v,
+                q_pos=jnp.zeros((S,), jnp.int32),
+                kv_pos=jnp.arange(S_enc, dtype=jnp.int32),
+                publisher_lo=0, sync=True, causal=False,
+                soft_cap=config.attn_soft_cap,
+            )
+        return jnp.einsum("bse,ed->bsd", out.reshape(B, S, -1), p["wo"])
+
+    out = ops.attention(
+        q, memory_k, memory_v,
+        q_pos=jnp.arange(S, dtype=jnp.int32),
+        kv_pos=jnp.arange(S_enc, dtype=jnp.int32),
+        causal=False,
+        backend=backend,
+    )
+    return jnp.einsum("bse,ed->bsd", out.reshape(B, S, -1), p["wo"])
+
+
+def project_memory_kv(p: Params, memory: jnp.ndarray, config: ModelConfig):
+    """Project encoder memory to cross-attention K/V once (cached)."""
+    B, S, _ = memory.shape
+    nkv, dh = config.n_kv_heads, config.head_dim
+    k = jnp.einsum("bsd,de->bse", memory, p["wk"])
+    v = jnp.einsum("bsd,de->bse", memory, p["wv"])
+    if config.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return k.reshape(B, S, nkv, dh), v.reshape(B, S, nkv, dh)
+
+
+def init_decoder_layer(rng: jax.Array, config: ModelConfig) -> Params:
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {
+        "norm1": L.init_norm(config),
+        "self_attn": A.init_attention(r1, config),
+        "norm_x": L.init_norm(config),
+        "cross_attn": init_cross_attention(r2, config),
+        "norm2": L.init_norm(config),
+        "ffn": L.init_ffn(r3, config),
+    }
+
+
+@dataclass
+class EncoderDecoderLM:
+    config: ModelConfig
+
+    def init(self, rng: jax.Array) -> Params:
+        cfg = self.config
+        enc_specs = cfg.encoder_layer_specs()
+        dec_specs = cfg.layer_specs()
+        keys = jax.random.split(rng, len(enc_specs) + len(dec_specs) + 4)
+        i = 0
+        enc_layers = []
+        for s in enc_specs:
+            enc_layers.append(T.init_layer(keys[i], s, cfg))
+            i += 1
+        dec_layers = []
+        for _ in dec_specs:
+            dec_layers.append(init_decoder_layer(keys[i], cfg))
+            i += 1
+        return {
+            "embed": L.init_embedding(keys[i], cfg),
+            "frontend_proj": L.dense_init(
+                keys[i + 1], (cfg.d_model, cfg.d_model), jnp.dtype(cfg.dtype)
+            ),
+            "encoder": enc_layers,
+            "enc_norm": L.init_norm(cfg),
+            "decoder": dec_layers,
+            "final_norm": L.init_norm(cfg),
+            "head": L.init_lm_head(keys[i + 2], cfg),
+        }
+
+    # -- encoder -----------------------------------------------------------------
+
+    def encode(
+        self,
+        params: Params,
+        frame_embeds: jnp.ndarray,  # (B, S_enc, D) frontend-stub output
+        enc_ctx: FedAttnContext,  # bidirectional FedAttn context
+        *,
+        backend: Optional[str] = None,
+    ) -> jnp.ndarray:
+        cfg = self.config
+        x = jnp.einsum(
+            "bsd,de->bse", frame_embeds.astype(jnp.dtype(cfg.dtype)),
+            params["frontend_proj"],
+        )
+        for m, (p, spec) in enumerate(zip(params["encoder"], cfg.encoder_layer_specs())):
+            x, _ = T.apply_layer(p, x, enc_ctx, m, spec, cfg, backend=backend)
+        return L.apply_norm(params["enc_norm"], x, cfg)
+
+    # -- decoder (teacher-forced / prefill) ----------------------------------------
+
+    def decode_train(
+        self,
+        params: Params,
+        memory: jnp.ndarray,  # (B, S_enc, D)
+        dec_tokens: jnp.ndarray,  # (B, S_dec)
+        *,
+        backend: Optional[str] = None,
+        head_mode: str = "full",
+    ) -> jnp.ndarray:
+        cfg = self.config
+        x = L.embed_tokens(params["embed"], dec_tokens, cfg)
+        S_dec = dec_tokens.shape[1]
+        dec_ctx = FedAttnContext.centralized(cfg.n_layers, S_dec)
+        spec = LayerSpec()
+
+        from repro.distributed import runtime
+
+        if runtime.active() and memory.shape[1] % runtime.current().n_seq_shards == 0:
+            # §Perf it.6: gather the encoder memory once; every decoder
+            # layer's cross-attention KV is then collective-free.
+            from repro.distributed import spmd_attention
+
+            memory = spmd_attention.gather_memory_once(memory)
+        for m, p in enumerate(params["decoder"]):
+            h = L.apply_norm(p["norm1"], x, cfg)
+            o = A.attention_block(
+                p["self_attn"], h, dec_ctx, m, spec, cfg, sync=True, backend=backend
+            )
+            x = x + o
+            hx = L.apply_norm(p["norm_x"], x, cfg)
+            mk, mv = project_memory_kv(p["cross_attn"], memory, cfg)
+            x = x + cross_attention_block(
+                p["cross_attn"], hx, mk, mv, cfg, backend=backend
+            )
+            h2 = L.apply_norm(p["norm2"], x, cfg)
+            x = x + L.apply_ffn(p["ffn"], h2, cfg)
+        if head_mode == "last":
+            x = x[:, -1:]
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        if head_mode == "none":
+            return x
+        return L.apply_lm_head(params["head"], params["embed"], x, cfg)
+
+    def apply(
+        self,
+        params: Params,
+        frame_embeds: jnp.ndarray,
+        dec_tokens: jnp.ndarray,
+        enc_ctx: FedAttnContext,
+        *,
+        backend: Optional[str] = None,
+        head_mode: str = "full",
+    ) -> jnp.ndarray:
+        memory = self.encode(params, frame_embeds, enc_ctx, backend=backend)
+        return self.decode_train(
+            params, memory, dec_tokens, backend=backend, head_mode=head_mode
+        )
+
+    # -- incremental decode ---------------------------------------------------------
+
+    def init_decode_cache(
+        self, params: Params, memory: jnp.ndarray, capacity: int
+    ) -> dict:
+        """Cache = per-layer self-attn KV + precomputed cross-attn memory KV."""
+        cfg = self.config
+        B = memory.shape[0]
+        dt = jnp.dtype(cfg.dtype)
+        nkv, dh = cfg.n_kv_heads, cfg.head_dim
+        layers = []
+        for p in params["decoder"]:
+            mk, mv = project_memory_kv(p["cross_attn"], memory, cfg)
+            layers.append(
+                {
+                    "k": jnp.zeros((B, capacity, nkv, dh), dt),
+                    "v": jnp.zeros((B, capacity, nkv, dh), dt),
+                    "mk": mk,
+                    "mv": mv,
+                }
+            )
+        return {"layers": layers}
+
+    def decode_step(
+        self,
+        params: Params,
+        cache: dict,
+        tokens: jnp.ndarray,  # (B, 1)
+        cache_len,
+        *,
+        backend: Optional[str] = None,
+    ):
+        cfg = self.config
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        capacity = cache["layers"][0]["k"].shape[1]
+        import dataclasses
+
+        ctx = FedAttnContext.centralized(cfg.n_layers, capacity)
+        dctx = ctx.for_decode_step(capacity, 0)
+        # positions: the new token sits at cache_len
+        dctx = dataclasses.replace(
+            dctx, positions=jnp.reshape(jnp.asarray(cache_len, jnp.int32), (1,))
+        )
+        spec = LayerSpec()
+        new_layers = []
+        for m, p in enumerate(params["decoder"]):
+            c = cache["layers"][m]
+            h = L.apply_norm(p["norm1"], x, cfg)
+            o, kc, vc = A.attention_decode_block(
+                p["self_attn"], h, c["k"], c["v"], cache_len, dctx, m, spec, cfg,
+                sync=True, backend=backend,
+            )
+            x = x + o
+            hx = L.apply_norm(p["norm_x"], x, cfg)
+            x = x + cross_attention_block(
+                p["cross_attn"], hx, c["mk"], c["mv"], cfg, backend=backend
+            )
+            h2 = L.apply_norm(p["norm2"], x, cfg)
+            x = x + L.apply_ffn(p["ffn"], h2, cfg)
+            new_layers.append({**c, "k": kc, "v": vc})
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        logits = L.apply_lm_head(params["head"], params["embed"], x, cfg)
+        return logits, {"layers": new_layers}

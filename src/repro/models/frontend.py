@@ -1,0 +1,36 @@
+"""Modality frontend STUBS (the one sanctioned carve-out).
+
+The [audio] and [vlm] assignments specify the transformer *backbone* only;
+the mel-spectrogram/conv feature extractor (audio) and the ViT/SigLIP
+vision encoder + projector (VLM) are stubbed: these helpers produce
+correctly-shaped embedding stand-ins, and ``input_specs()`` (launch/shapes)
+produces the matching ShapeDtypeStructs for the dry-run.
+
+llava-next "anyres" tiling is modeled at the token-count level: a base
+image grid plus up to 4 high-res tiles, each 24x24=576 patches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LLAVA_PATCHES_PER_TILE = 576  # 24x24 @ patch 14 on 336px tiles
+LLAVA_ANYRES_TILES = 5  # base view + 4 tiles (anyres)
+
+
+def llava_next_num_patches(n_tiles: int = LLAVA_ANYRES_TILES) -> int:
+    return n_tiles * LLAVA_PATCHES_PER_TILE  # 2880
+
+
+def fake_vision_embeds(
+    rng: jax.Array, batch: int, n_patches: int, d_model: int, dtype=jnp.float32
+) -> jnp.ndarray:
+    """Stand-in for (frozen) vision-tower output after the MM projector."""
+    return jax.random.normal(rng, (batch, n_patches, d_model), jnp.float32).astype(dtype) * 0.02
+
+
+def fake_audio_frames(
+    rng: jax.Array, batch: int, n_frames: int, d_model: int, dtype=jnp.float32
+) -> jnp.ndarray:
+    """Stand-in for conv-subsampled speech-frame features (w2v-BERT-ish)."""
+    return jax.random.normal(rng, (batch, n_frames, d_model), jnp.float32).astype(dtype) * 0.02

@@ -1,0 +1,189 @@
+"""Shared neural-net layers: norms, RoPE, FFN, embeddings.
+
+Pure-functional style: ``init_*`` builds parameter pytrees, ``apply``-style
+functions consume them. No framework dependency beyond jax.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.types import ModelConfig
+
+Params = dict
+
+
+def _dtype(config: ModelConfig):
+    return jnp.dtype(config.dtype)
+
+
+def dense_init(rng: jax.Array, shape: tuple[int, ...], dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (matches common LLM practice)."""
+    fan_in = shape[0]
+    std = scale if scale is not None else fan_in**-0.5
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(config: ModelConfig) -> Params:
+    d = config.d_model
+    p = {"scale": jnp.ones((d,), _dtype(config))}
+    if config.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), _dtype(config))
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, config: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if config.norm == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + config.norm_eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + config.norm_eps)
+        y = y + p["bias"].astype(jnp.float32)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rms_head_norm(scale: jnp.ndarray, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Per-head RMS norm for QK-norm (gemma3-style). x: (..., d_head)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """Rotary embedding. x: (..., L, n_heads, d_head); positions: (L,) or (..., L)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    ang = positions.astype(jnp.float32)[..., :, None] * freqs  # (..., L, d/2)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., L, 1, d/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN (dense)
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(rng: jax.Array, config: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = config.d_model, d_ff or config.d_ff
+    dt = _dtype(config)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    if config.ffn_activation == "swiglu":
+        return {
+            "w_gate": dense_init(r1, (d, f), dt),
+            "w_up": dense_init(r2, (d, f), dt),
+            "w_down": dense_init(r3, (f, d), dt),
+        }
+    return {"w_up": dense_init(r1, (d, f), dt), "w_down": dense_init(r2, (f, d), dt)}
+
+
+def apply_ffn(p: Params, x: jnp.ndarray, config: ModelConfig) -> jnp.ndarray:
+    if config.ffn_activation == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, p["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["w_up"])
+        act = jax.nn.gelu if config.ffn_activation == "gelu" else jax.nn.relu
+        h = act(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(rng: jax.Array, config: ModelConfig) -> Params:
+    dt = _dtype(config)
+    # padded_vocab: extra rows are never indexed (token ids < vocab_size)
+    p = {"tok": dense_init(rng, (config.padded_vocab, config.d_model), dt, scale=1.0)}
+    return p
+
+
+def embed_tokens(p: Params, tokens: jnp.ndarray, config: ModelConfig) -> jnp.ndarray:
+    x = jnp.take(p["tok"], tokens, axis=0)
+    # Standard sqrt(d) embedding scaling (gemma-style); harmless for others.
+    if config.norm == "rmsnorm":
+        x = x * jnp.asarray(config.d_model**0.5, x.dtype)
+    return x
+
+
+def init_lm_head(rng: jax.Array, config: ModelConfig) -> Params:
+    if config.tie_embeddings:
+        return {}
+    dt = _dtype(config)
+    return {"w": dense_init(rng, (config.d_model, config.padded_vocab), dt)}
+
+
+def apply_lm_head(
+    head: Params, embed: Params, x: jnp.ndarray, config: ModelConfig
+) -> jnp.ndarray:
+    if config.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, embed["tok"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, head["w"])
+    logits = logits.astype(jnp.float32)
+    if config.logit_soft_cap:
+        c = config.logit_soft_cap
+        logits = jnp.tanh(logits / c) * c
+    Vp, V = config.padded_vocab, config.vocab_size
+    if Vp != V:
+        # mask padded columns (elementwise — keeps the vocab dim sharded);
+        # outside SPMD slice back so callers see exactly vocab_size columns
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(col < V, logits, jnp.asarray(-1e30, logits.dtype))
+        from repro.distributed import runtime
+
+        if not runtime.active():
+            logits = logits[..., :V]
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Segment-aware token shift / conv helpers (RWKV / Mamba under FedAttn)
+# ---------------------------------------------------------------------------
+
+
+def shift_right(
+    x: jnp.ndarray, segment_ids: Optional[jnp.ndarray]
+) -> jnp.ndarray:
+    """Shift sequence right by one (token-shift). If ``segment_ids`` given,
+    the shift does not cross participant boundaries (FedAttn-local
+    semantics): positions whose left neighbor belongs to another participant
+    receive zeros. x: (B, L, D); segment_ids: (L,)."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if segment_ids is not None:
+        prev = jnp.pad(segment_ids, (1, 0), constant_values=-1)[:-1]
+        same = (prev == segment_ids)[None, :, None]
+        shifted = jnp.where(same, shifted, jnp.zeros_like(shifted))
+    return shifted
+
+
+def segment_start_mask(segment_ids: jnp.ndarray) -> jnp.ndarray:
+    """(L,) bool — True at the first token of each participant segment."""
+    prev = jnp.pad(segment_ids, (1, 0), constant_values=-1)[:-1]
+    return prev != segment_ids

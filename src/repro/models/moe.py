@@ -1,0 +1,167 @@
+"""Mixture-of-Experts FFN: token-choice top-k router + expert computation.
+
+Positions are independent in an FFN, so MoE composes orthogonally with
+FedAttn (the partition never crosses the router). In the SPMD realization
+experts are sharded over the `model` mesh axis — the same axis that carries
+the sequence shards — so each participant's tokens dispatch to remote
+experts via all_to_all; see repro/distributed/sharding.py.
+
+Computation here is the dense-dispatch einsum formulation: every token is
+evaluated against its top-k experts via one-hot combine weights. That is the
+standard TPU-friendly form (static shapes, MXU-aligned einsums); a capacity
+-factor dropless variant is not needed since we never execute on real data
+at full size in this container.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.types import ModelConfig
+
+Params = dict
+
+
+def init_moe(rng: jax.Array, config: ModelConfig) -> Params:
+    d, f, e = config.d_model, config.expert_d_ff, config.n_experts
+    dt = jnp.dtype(config.dtype)
+    rr, rg, ru, rd, rs = jax.random.split(rng, 5)
+    p: Params = {
+        "router": L.dense_init(rr, (d, e), dt, scale=d**-0.5),
+        "w_gate": L.dense_init(rg, (e, d, f), dt),
+        "w_up": L.dense_init(ru, (e, d, f), dt),
+        "w_down": L.dense_init(rd, (e, f, d), dt),
+    }
+    if config.n_shared_experts:
+        p["shared"] = L.init_ffn(rs, config, d_ff=config.expert_d_ff * config.n_shared_experts)
+    return p
+
+
+def apply_moe(
+    p: Params, x: jnp.ndarray, config: ModelConfig, *, return_aux: bool = False
+):
+    """x: (B, S, D) → (B, S, D). Top-k routing with softmax-renormalized
+    combine weights; optional load-balance aux loss (Switch-style)."""
+    B, S, d = x.shape
+    e, k = config.n_experts, config.n_experts_per_token
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, k)  # (B, S, k)
+    top_w = top_w / jnp.clip(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
+
+    # Dense dispatch: combine[b,s,e] = Σ_j top_w[b,s,j]·1[top_idx[b,s,j]==e]
+    combine = jnp.sum(
+        jax.nn.one_hot(top_idx, e, dtype=jnp.float32) * top_w[..., None], axis=2
+    )  # (B, S, e)
+    combine = combine.astype(x.dtype)
+
+    # Expert FFN evaluated for all experts, gathered by combine weights.
+    # xe: (B, S, e, f) — big but static; the SPMD path shards e over `model`.
+    g = jnp.einsum("bsd,edf->bsef", x, p["w_gate"])
+    u = jnp.einsum("bsd,edf->bsef", x, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    ye = jnp.einsum("bsef,efd->bsed", h, p["w_down"])
+    y = jnp.einsum("bsed,bse->bsd", ye, combine)
+
+    if config.n_shared_experts:
+        y = y + L.apply_ffn(p["shared"], x, config)
+
+    if return_aux:
+        # Switch load-balance loss: e · Σ_e f_e · P_e
+        f_e = jnp.mean(
+            jnp.sum(jax.nn.one_hot(top_idx, e, dtype=jnp.float32), axis=2), axis=(0, 1)
+        )  # fraction routed per expert (summed over k)
+        p_e = jnp.mean(probs, axis=(0, 1))
+        aux = e * jnp.sum(f_e * p_e) / k
+        return y, aux
+    return y
+
+
+def route(p: Params, x: jnp.ndarray, config: ModelConfig):
+    """Top-k routing: returns (top_w, top_idx, probs). x: (..., D)."""
+    logits = jnp.einsum("...d,de->...e", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, config.n_experts_per_token)
+    top_w = top_w / jnp.clip(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
+    return top_w, top_idx, probs
+
+
+def apply_moe_ragged(
+    p: Params, x: jnp.ndarray, config: ModelConfig,
+    *, expert_lo: int = 0, n_local_experts: Optional[int] = None,
+) -> jnp.ndarray:
+    """Sorted grouped-GEMM dispatch via ``lax.ragged_dot`` — FLOPs scale with
+    *active* experts (T·k·d·f), not all experts. This is the full-size /
+    SPMD path: with ``expert_lo``/``n_local_experts`` it computes only the
+    expert shard living on this device (tokens routed elsewhere produce
+    zero rows, to be summed across shards by the caller's reduce-scatter).
+    """
+    B, S, d = x.shape
+    e, k = config.n_experts, config.n_experts_per_token
+    n_loc = n_local_experts if n_local_experts is not None else e
+    top_w, top_idx, _ = route(p, x, config)
+
+    T = B * S
+    xf = x.reshape(T, d)
+    eid = top_idx.reshape(T * k)  # global expert id per (token, slot)
+    w = top_w.reshape(T * k).astype(x.dtype)
+    # Map to local expert index; non-local slots go to a trash group (n_loc)
+    local_id = eid - expert_lo
+    is_local = (local_id >= 0) & (local_id < n_loc)
+    sort_key = jnp.where(is_local, local_id, n_loc)
+    order = jnp.argsort(sort_key)  # stable
+    tok_of_row = order // k  # which token each sorted row copies
+    xs = jnp.take(xf, tok_of_row, axis=0)  # (T*k, d)
+    group_sizes = jnp.bincount(
+        jnp.where(is_local, local_id, n_loc), length=n_loc + 1
+    )[:n_loc].astype(jnp.int32)
+
+    wg = jax.lax.slice_in_dim(p["w_gate"], 0, n_loc) if n_local_experts is None else p["w_gate"]
+    wu = jax.lax.slice_in_dim(p["w_up"], 0, n_loc) if n_local_experts is None else p["w_up"]
+    wd = jax.lax.slice_in_dim(p["w_down"], 0, n_loc) if n_local_experts is None else p["w_down"]
+    g = jax.lax.ragged_dot(xs, wg, group_sizes)
+    u = jax.lax.ragged_dot(xs, wu, group_sizes)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    ys = jax.lax.ragged_dot(h, wd, group_sizes)  # (T*k, d); non-local rows = 0
+
+    # Unsort and combine with routing weights.
+    y_rows = jnp.zeros((T * k, d), x.dtype).at[order].set(ys)
+    y = jnp.sum(y_rows.reshape(T, k, d) * w.reshape(T, k)[..., None], axis=1)
+    y = y.reshape(B, S, d)
+    if config.n_shared_experts and expert_lo == 0:
+        # shared experts computed once (on the shard owning expert 0)
+        y = y + L.apply_ffn(p["shared"], x, config)
+    return y
+
+
+def apply_moe_sparse(
+    p: Params, x: jnp.ndarray, config: ModelConfig
+) -> jnp.ndarray:
+    """Gather-based dispatch: evaluates only the k selected experts per token
+    via take-along-axis on expert weights. O(tokens·k·d·f) FLOPs (vs
+    O(tokens·e·d·f) for dense dispatch) at the price of gathering expert
+    weights per token — the right trade at small batch (decode).
+    """
+    B, S, d = x.shape
+    e, k = config.n_experts, config.n_experts_per_token
+    f = config.expert_d_ff
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, k)
+    top_w = (top_w / jnp.clip(jnp.sum(top_w, -1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    flat_idx = top_idx.reshape(-1)  # (B*S*k,)
+    wg = p["w_gate"][flat_idx].reshape(B, S, k, d, f)
+    wu = p["w_up"][flat_idx].reshape(B, S, k, d, f)
+    wd = p["w_down"][flat_idx].reshape(B, S, k, f, d)
+    g = jnp.einsum("bsd,bskdf->bskf", x, wg)
+    u = jnp.einsum("bsd,bskdf->bskf", x, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = jnp.einsum("bskf,bskfd->bskd", h, wd)
+    y = jnp.einsum("bskd,bsk->bsd", y, top_w)
+    if config.n_shared_experts:
+        y = y + L.apply_ffn(p["shared"], x, config)
+    return y

@@ -1,0 +1,262 @@
+"""Recurrent sequence-mixing layers: RWKV6 (Finch) and Mamba1.
+
+FedAttn semantics for recurrences (DESIGN.md §4): a recurrent layer has no
+K/V matrices to exchange, but the *same* local/global dichotomy exists:
+
+  * local layer  — each participant scans only its own segment (state is
+    reset at segment starts; token-shift/conv do not cross boundaries);
+  * sync layer   — the scan is continuous across participants (state flows
+    across segment boundaries — the recurrence analogue of KV exchange;
+    in SPMD this is the inter-shard state hand-off).
+
+Both layers expose ``sync: bool`` and consume the FedAttnContext partition.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fedattn import FedAttnContext
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.types import ModelConfig
+
+Params = dict
+
+
+def _segment_resets(ctx: FedAttnContext, S: int, sync: bool) -> Optional[jnp.ndarray]:
+    if not ctx.enabled or sync:
+        return None
+    resets = L.segment_start_mask(ctx.segments)
+    # never reset at position 0 (zero init covers it) — harmless either way
+    return resets
+
+
+def _shift_segments(ctx: FedAttnContext, sync: bool) -> Optional[jnp.ndarray]:
+    return ctx.segments if (ctx.enabled and not sync) else None
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch — data-dependent decay) [arXiv:2404.05892]
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv(rng: jax.Array, config: ModelConfig) -> Params:
+    d = config.d_model
+    dh = config.rwkv_head_dim
+    H = d // dh
+    dt = jnp.dtype(config.dtype)
+    ks = jax.random.split(rng, 10)
+    lora = max(32, d // 64)
+    p: Params = {
+        # token-shift lerp coefficients per stream
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt),
+        "mu_g": jnp.full((d,), 0.5, dt),
+        "mu_w": jnp.full((d,), 0.5, dt),
+        "w_r": L.dense_init(ks[0], (d, d), dt),
+        "w_k": L.dense_init(ks[1], (d, d), dt),
+        "w_v": L.dense_init(ks[2], (d, d), dt),
+        "w_g": L.dense_init(ks[3], (d, d), dt),
+        "w_o": L.dense_init(ks[4], (d, d), dt),
+        # data-dependent decay: w_t = bias + tanh(z A) B  (low-rank, Finch)
+        "decay_bias": jnp.full((d,), -2.0, dt),
+        "decay_A": L.dense_init(ks[5], (d, lora), dt),
+        "decay_B": L.dense_init(ks[6], (lora, d), dt, scale=0.01),
+        "u": jnp.zeros((H, dh), dt),  # per-head bonus
+        "ln_out": jnp.ones((dh,), dt),  # per-head group-norm scale
+    }
+    return p
+
+
+def rwkv_time_mix(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, D) normalized input
+    ctx: FedAttnContext,
+    config: ModelConfig,
+    *,
+    sync: bool,
+    state: Optional[jnp.ndarray] = None,  # (B, H, dk, dv) decode carry
+    shifted: Optional[jnp.ndarray] = None,  # (B, 1, D) decode token-shift carry
+    backend: Optional[str] = None,
+):
+    """Returns (y, new_state, last_x) — carries support decode."""
+    B, S, d = x.shape
+    dh = config.rwkv_head_dim
+    H = d // dh
+    if shifted is None:
+        xs = L.shift_right(x, _shift_segments(ctx, sync))
+    else:
+        xs = jnp.concatenate([shifted, x[:, :-1]], axis=1) if S > 1 else shifted
+
+    def lerp(mu):
+        return x + (xs - x) * mu
+
+    r = jnp.einsum("bsd,de->bse", lerp(p["mu_r"]), p["w_r"]).reshape(B, S, H, dh)
+    k = jnp.einsum("bsd,de->bse", lerp(p["mu_k"]), p["w_k"]).reshape(B, S, H, dh)
+    v = jnp.einsum("bsd,de->bse", lerp(p["mu_v"]), p["w_v"]).reshape(B, S, H, dh)
+    g = jnp.einsum("bsd,de->bse", lerp(p["mu_g"]), p["w_g"])
+    zw = lerp(p["mu_w"])
+    w_raw = p["decay_bias"] + jnp.einsum(
+        "bsl,ld->bsd", jnp.tanh(jnp.einsum("bsd,dl->bsl", zw, p["decay_A"])), p["decay_B"]
+    )
+    # log-decay w <= 0:  w = -exp(w_raw)  (Finch parameterization), clamped
+    # to w >= -5 so the chunked Pallas kernel's e^{-W} stays in f32 range
+    # (kernels/rwkv6.py docstring; standard in chunked GLA implementations)
+    w = -jnp.exp(w_raw.astype(jnp.float32)).reshape(B, S, H, dh)
+    w = jnp.maximum(w, -5.0)
+
+    resets = _segment_resets(ctx, S, sync)
+    from repro.distributed import runtime
+
+    if runtime.active() and S > 1 and S % runtime.current().n_seq_shards == 0:
+        from repro.distributed import spmd_ssm
+
+        y = spmd_ssm.rwkv6_spmd(r, k, v, w.astype(x.dtype), p["u"], sync=sync)
+        new_state = None
+    else:
+        y, new_state = ops.rwkv6(
+            r, k, v, w.astype(x.dtype), p["u"],
+            initial_state=state, reset_mask=resets, backend=backend,
+        )
+    y = L.rms_head_norm(p["ln_out"], y, config.norm_eps).reshape(B, S, d)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bsd,de->bse", y, p["w_o"])
+    return y, new_state, x[:, -1:]
+
+
+def init_rwkv_cmix(rng: jax.Array, config: ModelConfig) -> Params:
+    d, f = config.d_model, config.d_ff
+    dt = jnp.dtype(config.dtype)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "w_k": L.dense_init(r1, (d, f), dt),
+        "w_v": L.dense_init(r2, (f, d), dt),
+        "w_r": L.dense_init(r3, (d, d), dt),
+    }
+
+
+def rwkv_channel_mix(
+    p: Params, x: jnp.ndarray, ctx: FedAttnContext, config: ModelConfig,
+    *, sync: bool, shifted: Optional[jnp.ndarray] = None,
+):
+    """RWKV squared-ReLU channel mix with token shift. Returns (y, last_x)."""
+    S = x.shape[1]
+    if shifted is None:
+        xs = L.shift_right(x, _shift_segments(ctx, sync))
+    else:
+        xs = jnp.concatenate([shifted, x[:, :-1]], axis=1) if S > 1 else shifted
+    zk = x + (xs - x) * p["mu_k"]
+    zr = x + (xs - x) * p["mu_r"]
+    k = jnp.einsum("bsd,df->bsf", zk, p["w_k"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", zr, p["w_r"]).astype(jnp.float32))
+    y = r.astype(x.dtype) * jnp.einsum("bsf,fd->bsd", k, p["w_v"])
+    return y, x[:, -1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 (selective SSM) — the Jamba mixer [arXiv:2403.19887]
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(rng: jax.Array, config: ModelConfig) -> Params:
+    d = config.d_model
+    d_in = config.mamba_expand * d
+    ds, dc = config.mamba_d_state, config.mamba_d_conv
+    dt_rank = max(8, d // 16)
+    dt = jnp.dtype(config.dtype)
+    ks = jax.random.split(rng, 6)
+    A = -jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32), (d_in, 1))
+    return {
+        "in_proj": L.dense_init(ks[0], (d, 2 * d_in), dt),
+        "conv_w": L.dense_init(ks[1], (dc, d_in), dt, scale=dc**-0.5),
+        "conv_b": jnp.zeros((d_in,), dt),
+        "x_proj": L.dense_init(ks[2], (d_in, dt_rank + 2 * ds), dt),
+        "dt_proj": L.dense_init(ks[3], (dt_rank, d_in), dt, scale=dt_rank**-0.5),
+        "dt_bias": jnp.full((d_in,), -3.0, dt),  # softplus^-1(small)
+        "A_log": jnp.log(-A).astype(dt),
+        "D": jnp.ones((d_in,), dt),
+        "out_proj": L.dense_init(ks[4], (d_in, d), dt),
+    }
+
+
+def _causal_conv(
+    x: jnp.ndarray,  # (B, S, d_in)
+    w: jnp.ndarray,  # (dc, d_in)
+    b: jnp.ndarray,
+    segments: Optional[jnp.ndarray],
+    conv_state: Optional[jnp.ndarray] = None,  # (B, dc-1, d_in) decode carry
+):
+    """Depthwise causal conv1d as dc shifted adds; masked at segment
+    boundaries when ``segments`` is given (FedAttn local layers)."""
+    B, S, d_in = x.shape
+    dc = w.shape[0]
+    if conv_state is not None:
+        xext = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    else:
+        xext = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x)
+    for j in range(dc):
+        shift = dc - 1 - j  # how far back tap j reaches
+        xj = jax.lax.dynamic_slice_in_dim(xext, j, S, axis=1)
+        if segments is not None and shift > 0:
+            src = jnp.pad(segments, (shift, 0), constant_values=-1)[:-shift]
+            ok = (src == segments)[None, :, None]
+            xj = jnp.where(ok, xj, jnp.zeros_like(xj))
+        y = y + xj * w[j]
+    new_state = xext[:, -(dc - 1):] if dc > 1 else None
+    return y + b, new_state
+
+
+def mamba_block(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, D) normalized input
+    ctx: FedAttnContext,
+    config: ModelConfig,
+    *,
+    sync: bool,
+    state: Optional[jnp.ndarray] = None,  # (B, d_in, d_state)
+    conv_state: Optional[jnp.ndarray] = None,
+    backend: Optional[str] = None,
+):
+    """Returns (y, new_state, new_conv_state)."""
+    B, S, d = x.shape
+    d_in = config.mamba_expand * d
+    ds = config.mamba_d_state
+    dt_rank = p["dt_proj"].shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xm, z = jnp.split(xz, 2, axis=-1)
+    segs = _shift_segments(ctx, sync)
+    xm, new_conv = _causal_conv(xm, p["conv_w"], p["conv_b"], segs, conv_state)
+    xm = jax.nn.silu(xm.astype(jnp.float32)).astype(x.dtype)
+
+    proj = jnp.einsum("bse,ef->bsf", xm, p["x_proj"])
+    dt_raw, Bm, C = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_raw, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    ).astype(x.dtype)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    resets = _segment_resets(ctx, S, sync)
+    from repro.distributed import runtime
+
+    if runtime.active() and S > 1 and S % runtime.current().n_seq_shards == 0:
+        from repro.distributed import spmd_ssm
+
+        y = spmd_ssm.mamba_spmd(xm, delta, A, Bm, C, p["D"], sync=sync)
+        new_state = None
+    else:
+        y, new_state = ops.mamba_scan(
+            xm, delta, A, Bm, C, p["D"],
+            initial_state=state, reset_mask=resets, backend=backend,
+        )
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return y, new_state, new_conv

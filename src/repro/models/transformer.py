@@ -1,0 +1,427 @@
+"""Unified decoder-only TransformerLM — config-driven over all assigned
+architecture families (dense GQA / MoE / RWKV6 / Mamba-hybrid / VLM & audio
+backbones), FedAttn-integrated.
+
+Two application modes:
+
+  * ``loop``  — python loop over layers; supports arbitrary sync schedules,
+    trace capture for error analysis, per-layer introspection. Used by
+    tests, experiments, small models.
+  * ``scan``  — ``lax.scan`` over the repeating layer *pattern* (period);
+    HLO size O(period), so 62-layer full-size configs lower fast. Requires
+    a periodic sync schedule (the pattern's ``sync`` flags). Used by the
+    multi-pod dry-run and full-size lowering.
+
+Parameters are plain pytrees (dict of dicts / lists); ``stack_params``
+converts loop-form params to scan-form.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fedattn import FedAttnContext
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.types import LayerSpec, ModelConfig
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_layer(rng: jax.Array, spec: LayerSpec, config: ModelConfig) -> Params:
+    r1, r2, r3 = jax.random.split(rng, 3)
+    p: Params = {"norm1": L.init_norm(config), "norm2": L.init_norm(config)}
+    if spec.kind == "attn":
+        p["attn"] = A.init_attention(r1, config)
+    elif spec.kind == "mamba":
+        p["mamba"] = S.init_mamba(r1, config)
+    else:  # rwkv
+        p["tmix"] = S.init_rwkv(r1, config)
+    if spec.kind == "rwkv":
+        p["cmix"] = S.init_rwkv_cmix(r2, config)
+    elif spec.moe:
+        p["moe"] = M.init_moe(r2, config)
+    else:
+        p["ffn"] = L.init_ffn(r3, config)
+    return p
+
+
+def apply_layer(
+    p: Params,
+    x: jnp.ndarray,
+    ctx: FedAttnContext,
+    layer_idx: int,
+    spec: LayerSpec,
+    config: ModelConfig,
+    *,
+    sync: Optional[bool] = None,
+    backend: Optional[str] = None,
+    moe_impl: str = "dense",
+    collect_aux: bool = False,
+):
+    """One pre-LN block (eq. 19 update rule). Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(p["norm1"], x, config)
+    if sync is None:
+        sync = ctx.schedule.is_sync(layer_idx)
+    if spec.kind == "attn":
+        o = A.attention_block(
+            p["attn"], h, ctx, layer_idx, spec, config, sync=sync, backend=backend
+        )
+    elif spec.kind == "mamba":
+        o, _, _ = S.mamba_block(p["mamba"], h, ctx, config, sync=sync, backend=backend)
+    else:
+        o, _, _ = S.rwkv_time_mix(p["tmix"], h, ctx, config, sync=sync, backend=backend)
+    x = x + o
+    h2 = L.apply_norm(p["norm2"], x, config)
+    if spec.kind == "rwkv":
+        f, _ = S.rwkv_channel_mix(p["cmix"], h2, ctx, config, sync=sync)
+    elif spec.moe:
+        from repro.distributed import runtime as _rt
+
+        if moe_impl == "ragged" and _rt.active():
+            from repro.distributed import spmd_moe
+
+            if spmd_moe.applicable(config, h2.shape[1]):
+                f = spmd_moe.moe_expert_parallel(p["moe"], h2, config)
+            else:
+                f = M.apply_moe_ragged(p["moe"], h2, config)
+        elif moe_impl == "ragged":
+            f = M.apply_moe_ragged(p["moe"], h2, config)
+        elif collect_aux:
+            f, aux = M.apply_moe(p["moe"], h2, config, return_aux=True)
+        else:
+            f = M.apply_moe(p["moe"], h2, config)
+    else:
+        f = L.apply_ffn(p["ffn"], h2, config)
+    return x + f, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode-step per-layer (cache-carrying)
+# ---------------------------------------------------------------------------
+
+
+def init_layer_cache(
+    spec: LayerSpec, config: ModelConfig, batch: int, capacity: int, dtype
+) -> Params:
+    d = config.d_model
+    if spec.kind == "attn":
+        nkv, dh = config.n_kv_heads, config.head_dim
+        return {
+            "k": jnp.zeros((batch, capacity, nkv, dh), dtype),
+            "v": jnp.zeros((batch, capacity, nkv, dh), dtype),
+        }
+    if spec.kind == "mamba":
+        d_in = config.mamba_expand * d
+        return {
+            "state": jnp.zeros((batch, d_in, config.mamba_d_state), jnp.float32),
+            "conv": jnp.zeros((batch, config.mamba_d_conv - 1, d_in), dtype),
+        }
+    dh = config.rwkv_head_dim
+    H = d // dh
+    return {
+        "state": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "shift_t": jnp.zeros((batch, 1, d), dtype),
+        "shift_c": jnp.zeros((batch, 1, d), dtype),
+    }
+
+
+def apply_layer_decode(
+    p: Params,
+    cache: Params,
+    x: jnp.ndarray,  # (B, S_new, D)
+    cache_len,
+    ctx: FedAttnContext,  # decode-step context
+    layer_idx: int,
+    spec: LayerSpec,
+    config: ModelConfig,
+    *,
+    sync: Optional[bool] = None,
+    backend: Optional[str] = None,
+    moe_impl: str = "dense",
+):
+    """One decode block. Returns (x, new_cache)."""
+    if sync is None:
+        sync = ctx.schedule.is_sync(layer_idx)
+    h = L.apply_norm(p["norm1"], x, config)
+    new_cache = dict(cache)
+    if spec.kind == "attn":
+        o, kc, vc = A.attention_decode_block(
+            p["attn"], h, cache["k"], cache["v"], cache_len, ctx, layer_idx,
+            spec, config, sync=sync, backend=backend,
+        )
+        new_cache["k"], new_cache["v"] = kc, vc
+    elif spec.kind == "mamba":
+        # single-token decode: state continues (sync irrelevant); bulk
+        # prefill-via-decode (S_new > 1, engine) honors the real sync flag
+        ssm_sync = sync if x.shape[1] > 1 else True
+        o, st, cv = S.mamba_block(
+            p["mamba"], h, ctx, config, sync=ssm_sync,
+            state=cache["state"], conv_state=cache["conv"], backend=backend,
+        )
+        new_cache["state"], new_cache["conv"] = st, cv
+    else:
+        ssm_sync = sync if x.shape[1] > 1 else True
+        o, st, sh = S.rwkv_time_mix(
+            p["tmix"], h, ctx, config, sync=ssm_sync,
+            state=cache["state"], shifted=cache["shift_t"], backend=backend,
+        )
+        new_cache["state"], new_cache["shift_t"] = st, sh
+    x = x + o
+    h2 = L.apply_norm(p["norm2"], x, config)
+    if spec.kind == "rwkv":
+        f, sh2 = S.rwkv_channel_mix(
+            p["cmix"], h2, ctx, config, sync=True, shifted=cache["shift_c"]
+        )
+        new_cache["shift_c"] = sh2
+    elif spec.moe:
+        from repro.distributed import runtime as _rt
+
+        if moe_impl == "ragged" and _rt.active():
+            from repro.distributed import spmd_moe
+
+            if spmd_moe.applicable(config, h2.shape[1]):
+                f = spmd_moe.moe_expert_parallel(p["moe"], h2, config)
+            else:
+                f = M.apply_moe_ragged(p["moe"], h2, config)
+        elif moe_impl == "ragged":
+            f = M.apply_moe_ragged(p["moe"], h2, config)
+        else:
+            f = M.apply_moe(p["moe"], h2, config)
+    else:
+        f = L.apply_ffn(p["ffn"], h2, config)
+    return x + f, new_cache
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TransformerLM:
+    config: ModelConfig
+
+    # -- init -----------------------------------------------------------------
+
+    def init(self, rng: jax.Array) -> Params:
+        cfg = self.config
+        specs = cfg.layer_specs()
+        keys = jax.random.split(rng, len(specs) + 3)
+        params: Params = {
+            "embed": L.init_embedding(keys[-1], cfg),
+            "layers": [init_layer(keys[i], s, cfg) for i, s in enumerate(specs)],
+            "final_norm": L.init_norm(cfg),
+            "head": L.init_lm_head(keys[-2], cfg),
+        }
+        if cfg.frontend != "none":
+            params["frontend_proj"] = L.dense_init(
+                keys[-3], (cfg.d_model, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        return params
+
+    # -- embed ----------------------------------------------------------------
+
+    def _embed(self, params, tokens, extra_embeds):
+        cfg = self.config
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        if extra_embeds is not None:
+            P = extra_embeds.shape[1]
+            fe = jnp.einsum("bpd,de->bpe", extra_embeds.astype(x.dtype),
+                            params["frontend_proj"])
+            x = jnp.concatenate([fe, x[:, P:]], axis=1)
+        return x
+
+    # -- forward (prefill / train) ---------------------------------------------
+
+    def apply(
+        self,
+        params: Params,
+        tokens: jnp.ndarray,  # (B, L)
+        ctx: FedAttnContext,
+        *,
+        extra_embeds: Optional[jnp.ndarray] = None,
+        backend: Optional[str] = None,
+        mode: str = "loop",
+        moe_impl: str = "dense",
+        capture_trace: bool = False,
+        collect_aux: bool = False,
+        remat: bool = False,
+        head_mode: str = "full",
+    ):
+        """Returns logits (B, L, V); with capture_trace also the per-layer
+        hidden-state list; with collect_aux also the summed router aux loss.
+
+        head_mode: 'full' — logits for every position; 'last' — only the
+        final position (prefill); 'none' — return the final-norm hidden
+        states instead of logits (callers fuse their own head, e.g. the
+        chunked cross-entropy in launch/steps.py)."""
+        cfg = self.config
+        x = self._embed(params, tokens, extra_embeds)
+        trace = []
+        aux_total = jnp.zeros((), jnp.float32)
+        if mode == "loop":
+            for m, (p, spec) in enumerate(zip(params["layers"], cfg.layer_specs())):
+                fn = lambda p_, x_, m_=m, s_=spec: apply_layer(
+                    p_, x_, ctx, m_, s_, cfg,
+                    backend=backend, moe_impl=moe_impl, collect_aux=collect_aux,
+                )
+                if remat:
+                    fn = jax.checkpoint(fn)
+                x, aux = fn(p, x)
+                aux_total = aux_total + aux
+                if capture_trace:
+                    trace.append(x)
+        elif mode == "scan":
+            x = self._apply_scan(
+                params, x, ctx, backend=backend, moe_impl=moe_impl, remat=remat
+            )
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+        if head_mode == "last":
+            x = x[:, -1:]
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        if head_mode == "none":
+            out: tuple = (x,)
+            if capture_trace:
+                out += (trace,)
+            if collect_aux:
+                out += (aux_total,)
+            return out if len(out) > 1 else x
+        logits = L.apply_lm_head(params["head"], params["embed"], x, cfg)
+        out: tuple = (logits,)
+        if capture_trace:
+            out += (trace,)
+        if collect_aux:
+            out += (aux_total,)
+        return out if len(out) > 1 else logits
+
+    def _apply_scan(self, params, x, ctx, *, backend, moe_impl, remat=False):
+        """lax.scan over the repeating pattern (period). Sync flags come from
+        the pattern specs (structural), so collectives appear only in sync
+        sublayers. Remainder layers run in a trailing python loop."""
+        cfg = self.config
+        stacked = params.get("stacked")
+        if stacked is None:
+            raise ValueError("scan mode requires stack_params(params, config)")
+
+        def body(carry, per_params):
+            h = carry
+            for i, spec in enumerate(cfg.pattern):
+                h, _ = apply_layer(
+                    per_params[i], h, ctx, 0, spec, cfg,
+                    sync=spec.sync, backend=backend, moe_impl=moe_impl,
+                )
+            return h, None
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, stacked)
+        offset = cfg.n_periods * len(cfg.pattern)
+        for j, spec in enumerate(cfg.pattern_remainder):
+            x, _ = apply_layer(
+                params["remainder"][j], x, ctx, 0, spec, cfg,
+                sync=spec.sync, backend=backend, moe_impl=moe_impl,
+            )
+        return x
+
+    # -- decode ------------------------------------------------------------------
+
+    def init_cache(self, batch: int, capacity: int) -> list:
+        cfg = self.config
+        dt = jnp.dtype(cfg.dtype)
+        return [
+            init_layer_cache(s, cfg, batch, capacity, dt) for s in cfg.layer_specs()
+        ]
+
+    def decode_step(
+        self,
+        params: Params,
+        cache: list,
+        tokens: jnp.ndarray,  # (B, S_new)
+        cache_len,
+        ctx: FedAttnContext,  # prefill-shaped context; converted internally
+        step: int | jnp.ndarray = 0,
+        *,
+        backend: Optional[str] = None,
+        moe_impl: str = "dense",
+    ):
+        """One autoregressive step. Returns (logits (B, S_new, V), new_cache)."""
+        cfg = self.config
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        dctx = ctx.for_decode_step(_cache_capacity(cache), step)
+        new_cache = []
+        for m, (p, spec) in enumerate(zip(params["layers"], cfg.layer_specs())):
+            x, c = apply_layer_decode(
+                p, cache[m], x, cache_len, dctx, m, spec, cfg,
+                backend=backend, moe_impl=moe_impl,
+            )
+            new_cache.append(c)
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        logits = L.apply_lm_head(params["head"], params["embed"], x, cfg)
+        return logits, new_cache
+
+
+def _cache_capacity(cache: list) -> int:
+    for c in cache:
+        if "k" in c:
+            return c["k"].shape[1]
+    # SSM-only model: no KV positions are consumed; smallest valid capacity
+    return 1
+
+
+def stack_params(params: Params, config: ModelConfig) -> Params:
+    """Convert loop-form params to scan-form: group layers by period and
+    stack leaves over the period axis → leading dim n_periods."""
+    period = len(config.pattern)
+    n_per = config.n_periods
+    layers = params["layers"]
+    body = layers[: n_per * period]
+    remainder = layers[n_per * period:]
+    groups = [body[i * period : (i + 1) * period] for i in range(n_per)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    out = dict(params)
+    del out["layers"]
+    out["stacked"] = stacked
+    out["remainder"] = remainder
+    return out
+
+
+def init_stacked(model: TransformerLM, rng: jax.Array) -> Params:
+    """Initialize directly in scan form — per-period leaves are created with
+    a leading (n_periods,) dim via vmap, so full-size configs never
+    materialize a python list of 62 layer pytrees."""
+    cfg = model.config
+    r_emb, r_head, r_fe, r_stack, r_rem = jax.random.split(rng, 5)
+
+    def init_period(r):
+        ks = jax.random.split(r, len(cfg.pattern))
+        return [init_layer(ks[i], s, cfg) for i, s in enumerate(cfg.pattern)]
+
+    stacked = jax.vmap(init_period)(jax.random.split(r_stack, cfg.n_periods))
+    params: Params = {
+        "embed": L.init_embedding(r_emb, cfg),
+        "stacked": stacked,
+        "remainder": [
+            init_layer(jax.random.fold_in(r_rem, j), s, cfg)
+            for j, s in enumerate(cfg.pattern_remainder)
+        ],
+        "final_norm": L.init_norm(cfg),
+        "head": L.init_lm_head(r_head, cfg),
+    }
+    if cfg.frontend != "none":
+        params["frontend_proj"] = L.dense_init(
+            r_fe, (cfg.d_model, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    return params

@@ -1,0 +1,13 @@
+"""Optimizers and LR schedules (self-contained, no optax dependency)."""
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.schedules import cosine_schedule, linear_warmup
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "global_norm",
+    "cosine_schedule",
+    "linear_warmup",
+]

@@ -1,0 +1,82 @@
+"""AdamW with decoupled weight decay and global-norm gradient clipping.
+
+Moments are kept in float32 regardless of param dtype (mixed-precision
+training convention); the update is computed in f32 and cast back.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+
+
+def adamw_init(params: Any) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(
+    grads: Any,
+    state: dict,
+    params: Any,
+    config: AdamWConfig,
+    lr: jnp.ndarray | float,
+):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if config.grad_clip is not None:
+        scale = jnp.minimum(1.0, config.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    count = state["count"] + 1
+    b1, b2 = config.b1, config.b2
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * jnp.square(gf)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        step = mhat / (jnp.sqrt(vhat) + config.eps)
+        step = step + config.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return newp, m2, v2
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    news = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = treedef.unflatten([n[0] for n in news])
+    new_m = treedef.unflatten([n[1] for n in news])
+    new_v = treedef.unflatten([n[2] for n in news])
+    return (
+        new_params,
+        {"m": new_m, "v": new_v, "count": count},
+        {"grad_norm": gnorm},
+    )

@@ -1,0 +1,20 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int, peak: float):
+    return peak * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+
+
+def cosine_schedule(
+    step, peak: float, total_steps: int, warmup_steps: int = 0, floor: float = 0.0
+):
+    step = jnp.asarray(step, jnp.float32)
+    warm = linear_warmup(step, warmup_steps, peak)
+    t = jnp.clip(
+        (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    cos = floor + (peak - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,5 @@
+"""Serving: FedAttn collaborative-inference engine (prefill + decode)."""
+
+from repro.serving.engine import FedAttnEngine, GenerationResult
+
+__all__ = ["FedAttnEngine", "GenerationResult"]

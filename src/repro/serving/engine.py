@@ -1,0 +1,173 @@
+"""FedAttn collaborative-inference engine.
+
+Implements the paper's full inference flow (§IV):
+
+  1. **Prefill** (the non-autoregressive phase, Algorithm 1): participants'
+     token segments are prefix-assembled into the global sequence; the
+     model runs with the FedAttn visibility schedule, producing per-layer
+     KV caches — local KVs at local layers, global KVs at sync layers
+     (here: one physical cache with visibility masks, §IV-C).
+  2. **Decode**: the task publisher autoregressively extends from the final
+     global token, attending per layer according to the same schedule.
+
+The engine also supports batched requests (same partition structure across
+the batch — the SPMD-friendly regime) and greedy or temperature sampling.
+This is the small-scale/real-execution counterpart of launch/serve.py's
+full-size lowering.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fedattn import FedAttnContext
+from repro.core.partition import Partition
+from repro.configs import schedule_from_config
+from repro.models import build_model
+from repro.models.transformer import TransformerLM
+from repro.types import FedAttnConfig, ModelConfig
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray  # (B, n_new)
+    logprobs: Optional[np.ndarray] = None
+    prefill_comm_bytes: float = 0.0  # per-participant KV upload (paper §VII-A3)
+
+
+class FedAttnEngine:
+    """Greedy/sampling generation under the FedAttn protocol."""
+
+    def __init__(
+        self,
+        config: ModelConfig,
+        params,
+        *,
+        fedattn: Optional[FedAttnConfig] = None,
+        backend: Optional[str] = None,
+    ):
+        if config.is_encoder_decoder:
+            raise NotImplementedError("engine currently drives decoder-only models")
+        self.config = config
+        self.params = params
+        self.fed = fedattn if fedattn is not None else config.fedattn
+        self.model = build_model(config)
+        self.backend = backend
+
+    # -- protocol setup ---------------------------------------------------------
+
+    def build_context(
+        self,
+        seq_len: int,
+        *,
+        partition: Optional[Partition] = None,
+        rng: Optional[jax.Array] = None,
+    ) -> FedAttnContext:
+        sched = schedule_from_config(self.config)
+        if self.fed.schedule != "uniform":
+            from repro.core.schedule import SyncSchedule
+
+            sched = SyncSchedule.by_name(
+                self.fed.schedule, self.config.n_layers,
+                interval=self.fed.sync_interval,
+            )
+        return FedAttnContext.build(
+            self.fed, self.config.n_layers, seq_len,
+            partition=partition or Partition.contiguous(seq_len, self.fed.n_participants),
+            schedule=sched, rng=rng,
+        )
+
+    # -- generation ---------------------------------------------------------------
+
+    def generate(
+        self,
+        tokens: jnp.ndarray,  # (B, L) global input sequence (assembled)
+        n_new: int,
+        *,
+        partition: Optional[Partition] = None,
+        temperature: float = 0.0,
+        rng: Optional[jax.Array] = None,
+        extra_embeds: Optional[jnp.ndarray] = None,
+    ) -> GenerationResult:
+        B, L = tokens.shape
+        ctx = self.build_context(L, partition=partition, rng=rng)
+        capacity = L + n_new
+
+        # Prefill: run the full FedAttn forward once, rebuild the KV cache
+        # from per-layer projections by replaying decode writes in bulk.
+        cache = self.model.init_cache(B, capacity)
+        logits, cache = self._prefill(tokens, ctx, cache, extra_embeds)
+
+        out_tokens = []
+        logps = []
+        tok = self._sample(logits[:, -1], temperature, rng, 0)
+        out_tokens.append(tok)
+        for step in range(1, n_new):
+            logits_s, cache = self._decode_step_impl(
+                self.params, cache, tok[:, None], L + step - 1, ctx, step - 1
+            )
+            lp = jax.nn.log_softmax(logits_s[:, -1].astype(jnp.float32))
+            tok = self._sample(logits_s[:, -1], temperature, rng, step)
+            out_tokens.append(tok)
+            logps.append(lp)
+        comm = ctx.comm_bytes_per_participant(
+            self.config.n_kv_heads, self.config.head_dim
+        )
+        return GenerationResult(
+            tokens=np.stack([np.asarray(t) for t in out_tokens], axis=1),
+            prefill_comm_bytes=comm,
+        )
+
+    # -- internals ------------------------------------------------------------------
+
+    def _prefill(self, tokens, ctx, cache, extra_embeds):
+        """Run the FedAttn forward and seed the cache by bulk decode-writes:
+        we recompute K/V per layer via the decode path on the whole prefix
+        (positions 0..L-1) in one call with S_new = L."""
+        B, L = tokens.shape
+        # Bulk write: decode path with cache_len=0 and S_new=L reproduces the
+        # prefill attention exactly (the visibility masks are identical).
+        import dataclasses
+
+        dctx = ctx.for_decode_step(_capacity(cache), 0, n_new=L)
+        dctx = dataclasses.replace(
+            dctx,
+            positions=ctx.positions,
+            segments=ctx.segments,
+        )
+        from repro.models import transformer as T
+
+        cfg = self.config
+        from repro.models import layers as LY
+
+        x = self.model._embed(self.params, tokens, extra_embeds)
+        for m, (p, spec) in enumerate(zip(self.params["layers"], cfg.layer_specs())):
+            x, cache[m] = T.apply_layer_decode(
+                p, cache[m], x, 0, dctx, m, spec, cfg, backend=self.backend
+            )
+        x = LY.apply_norm(self.params["final_norm"], x, cfg)
+        logits = LY.apply_lm_head(self.params["head"], self.params["embed"], x, cfg)
+        return logits, cache
+
+    def _decode_step_impl(self, params, cache, tok, cache_len, ctx, step):
+        logits, cache = self.model.decode_step(
+            params, cache, tok, cache_len, ctx, step=step, backend=self.backend
+        )
+        return logits, cache
+
+    def _sample(self, logits, temperature, rng, step):
+        if temperature <= 0.0 or rng is None:
+            return jnp.argmax(logits, axis=-1)
+        r = jax.random.fold_in(rng, step)
+        return jax.random.categorical(r, logits.astype(jnp.float32) / temperature)
+
+
+def _capacity(cache) -> int:
+    for c in cache:
+        if "k" in c:
+            return c["k"].shape[1]
+    return 1

@@ -1,0 +1,35 @@
+"""Shared fixtures. NOTE: no xla_force_host_platform_device_count here —
+tests run on the single real CPU device by design (the multi-device SPMD
+equivalence test spawns a subprocess with its own XLA_FLAGS)."""
+import jax
+import pytest
+
+from repro.types import FedAttnConfig, LayerSpec, ModelConfig
+
+
+def tiny_config(**kw) -> ModelConfig:
+    base = dict(
+        name="tiny",
+        arch_type="dense",
+        n_layers=4,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab_size=97,
+        dtype="float32",
+        pattern=tuple(LayerSpec(sync=(i == 3)) for i in range(4)),
+        fedattn=FedAttnConfig(n_participants=4, sync_interval=4),
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture
+def rng():
+    return jax.random.key(0)
+
+
+@pytest.fixture
+def cfg():
+    return tiny_config()

@@ -1,0 +1,113 @@
+"""FedAttn visibility-mask properties (eq. 18/21 semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fedattn import FedAttnContext, visibility
+from repro.core.partition import Partition
+from repro.core.schedule import SyncSchedule
+from repro.types import FedAttnConfig
+
+
+def _pos(n):
+    return jnp.arange(n, dtype=jnp.int32)
+
+
+class TestVisibility:
+    def test_local_subset_of_global(self):
+        seg = jnp.repeat(jnp.arange(4), 8)
+        loc = visibility(_pos(32), _pos(32), seg, seg, sync=False)
+        glob = visibility(_pos(32), _pos(32), seg, seg, sync=True)
+        assert bool(jnp.all(jnp.logical_or(~loc, glob)))  # loc ⊆ glob
+
+    def test_causality_always(self):
+        seg = jnp.repeat(jnp.arange(2), 8)
+        for sync in (False, True):
+            v = visibility(_pos(16), _pos(16), seg, seg, sync=sync)
+            assert not bool(jnp.any(jnp.triu(v, k=1)))
+
+    def test_diag_always_visible(self):
+        seg = jnp.repeat(jnp.arange(4), 4)
+        for sync in (False, True):
+            v = visibility(_pos(16), _pos(16), seg, seg, sync=sync)
+            assert bool(jnp.all(jnp.diag(v)))
+
+    def test_bidirectional_local(self):
+        seg = jnp.repeat(jnp.arange(2), 4)
+        v = visibility(_pos(8), _pos(8), seg, seg, sync=False, causal=False)
+        want = seg[:, None] == seg[None, :]
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(want))
+
+    def test_window_intersects(self):
+        seg = jnp.zeros(16, jnp.int32)
+        v = visibility(_pos(16), _pos(16), seg, seg, sync=True, window=4)
+        assert bool(v[10, 7]) and not bool(v[10, 6])
+
+    def test_contributed_gates_remote_only(self):
+        seg = jnp.repeat(jnp.arange(2), 4)
+        contrib = jnp.zeros(8, bool)
+        v = visibility(_pos(8), _pos(8), seg, seg, sync=True, contributed=contrib)
+        # remote rows blocked, local fully visible (causal)
+        assert not bool(v[5, 2])
+        assert bool(v[5, 4])
+
+    def test_traced_sync_blend(self):
+        seg = jnp.repeat(jnp.arange(2), 4)
+        v0 = visibility(_pos(8), _pos(8), seg, seg, sync=jnp.asarray(False))
+        v1 = visibility(_pos(8), _pos(8), seg, seg, sync=jnp.asarray(True))
+        vf = visibility(_pos(8), _pos(8), seg, seg, sync=False)
+        vt = visibility(_pos(8), _pos(8), seg, seg, sync=True)
+        np.testing.assert_array_equal(np.asarray(v0), np.asarray(vf))
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(vt))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 6),
+    seq=st.integers(2, 48),
+    sync=st.booleans(),
+)
+def test_visibility_row_nonempty(n, seq, sync):
+    """Every query row sees at least itself (softmax well-defined)."""
+    part = Partition.contiguous(seq, min(n, seq))
+    v = visibility(
+        _pos(seq), _pos(seq), part.segment_ids, part.segment_ids, sync=sync
+    )
+    assert bool(jnp.all(jnp.any(v, axis=1)))
+
+
+class TestContext:
+    def test_round_of_layer(self):
+        cfg = FedAttnConfig(n_participants=2, sync_interval=2)
+        ctx = FedAttnContext.build(cfg, 8, 16)
+        assert ctx._round_of_layer(1) == 0  # first sync layer
+        assert ctx._round_of_layer(3) == 1
+        assert ctx._round_of_layer(7) == 3
+
+    def test_decode_context_positions(self):
+        cfg = FedAttnConfig(n_participants=4, sync_interval=2)
+        ctx = FedAttnContext.build(cfg, 4, 16)
+        d = ctx.for_decode_step(cache_len=20, step=3)
+        assert int(d.positions[0]) == 19
+        assert int(d.segments[0]) == 3  # publisher
+        # generated region (16..19) owned by publisher
+        np.testing.assert_array_equal(np.asarray(d.kv_segments[16:20]), [3] * 4)
+
+    def test_comm_bytes_scaling(self):
+        cfg = FedAttnConfig(n_participants=4, sync_interval=2)
+        ctx = FedAttnContext.build(cfg, 8, 64)
+        full = ctx.comm_bytes_per_participant(2, 64)
+        cfg2 = cfg.replace(kv_exchange_ratio=0.5, kv_selection="strided")
+        ctx2 = FedAttnContext.build(cfg2, 8, 64)
+        half = ctx2.comm_bytes_per_participant(2, 64)
+        assert half == pytest.approx(full / 2)
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            FedAttnConfig(n_participants=0)
+        with pytest.raises(ValueError):
+            FedAttnConfig(kv_exchange_ratio=0.0)
+        with pytest.raises(ValueError):
+            FedAttnConfig(local_sparsity=1.5)

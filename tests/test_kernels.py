@@ -1,0 +1,176 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(interpret=True — the kernel body executes on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan_chunked
+from repro.kernels.rwkv6 import rwkv6_chunked
+
+TOLS = {jnp.float32: 3e-5, jnp.bfloat16: 3e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Lq,Lk,nq,nkv,dh",
+    [
+        (1, 64, 64, 4, 4, 32),  # MHA, aligned
+        (2, 100, 100, 4, 2, 64),  # GQA, unaligned length (padding path)
+        (1, 33, 129, 8, 1, 64),  # MQA, Lq != Lk
+    ],
+)
+def test_flash_shapes_dtypes(B, Lq, Lk, nq, nkv, dh, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, Lq, nq, dh), dtype)
+    k = jax.random.normal(ks[1], (B, Lk, nkv, dh), dtype)
+    v = jax.random.normal(ks[2], (B, Lk, nkv, dh), dtype)
+    q_pos = jnp.arange(Lk - Lq, Lk)  # decode-suffix style positions
+    kv_pos = jnp.arange(Lk)
+    out = flash_attention(
+        q, k, v, q_pos=q_pos, kv_pos=kv_pos, block_q=32, block_k=32
+    )
+    want = ref.attention_ref(q, k, v, q_pos=q_pos, kv_pos=kv_pos)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=TOLS[dtype], rtol=TOLS[dtype],
+    )
+
+
+@pytest.mark.parametrize("mode", ["local", "sparse", "window", "softcap", "bidir"])
+def test_flash_fedattn_masks(mode):
+    B, Lq, nq, nkv, dh = 2, 96, 4, 2, 32
+    ks = jax.random.split(jax.random.key(1), 4)
+    q = jax.random.normal(ks[0], (B, Lq, nq, dh))
+    k = jax.random.normal(ks[1], (B, Lq, nkv, dh))
+    v = jax.random.normal(ks[2], (B, Lq, nkv, dh))
+    pos = jnp.arange(Lq)
+    seg = jnp.repeat(jnp.arange(4), 24)
+    kw = dict(q_pos=pos, kv_pos=pos)
+    if mode == "local":
+        kw.update(q_seg=seg, kv_seg=seg, local_only=True)
+    elif mode == "sparse":
+        kw.update(q_seg=seg, kv_seg=seg,
+                  contributed=jax.random.bernoulli(ks[3], 0.25, (Lq,)))
+    elif mode == "window":
+        kw.update(window=17)
+    elif mode == "softcap":
+        kw.update(soft_cap=20.0)
+    elif mode == "bidir":
+        kw.update(q_seg=seg, kv_seg=seg, local_only=True, causal=False)
+    out = flash_attention(q, k, v, block_q=32, block_k=32, **kw)
+    want = ref.attention_ref(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    Lq=st.integers(8, 80),
+    nkv=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 4]),
+    bq=st.sampled_from([16, 32]),
+)
+def test_flash_property_random_shapes(Lq, nkv, g, bq):
+    """Property: kernel == oracle for arbitrary (Lq, GQA grouping, blocks)."""
+    B, dh = 1, 32
+    nq = nkv * g
+    ks = jax.random.split(jax.random.key(Lq * 131 + nq), 3)
+    q = jax.random.normal(ks[0], (B, Lq, nq, dh))
+    k = jax.random.normal(ks[1], (B, Lq, nkv, dh))
+    v = jax.random.normal(ks[2], (B, Lq, nkv, dh))
+    pos = jnp.arange(Lq)
+    out = flash_attention(q, k, v, q_pos=pos, kv_pos=pos, block_q=bq, block_k=bq)
+    want = ref.attention_ref(q, k, v, q_pos=pos, kv_pos=pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,L,H,dk,chunk", [(1, 48, 2, 16, 16), (2, 70, 3, 32, 16)])
+def test_rwkv6_sweep(B, L, H, dk, chunk, dtype):
+    ks = jax.random.split(jax.random.key(0), 5)
+    r = jax.random.normal(ks[0], (B, L, H, dk), dtype)
+    k = jax.random.normal(ks[1], (B, L, H, dk), dtype)
+    v = jax.random.normal(ks[2], (B, L, H, dk), dtype)
+    w = jnp.maximum(-jnp.exp(jax.random.normal(ks[3], (B, L, H, dk))), -5.0).astype(dtype)
+    u = (jax.random.normal(ks[4], (H, dk)) * 0.5).astype(dtype)
+    y, _ = rwkv6_chunked(r, k, v, w, u, chunk=chunk)
+    want, _ = ref.rwkv6_ref(r, k, v, w, u)
+    scale = float(jnp.abs(want.astype(jnp.float32)).max()) + 1e-6
+    err = float(jnp.abs(y.astype(jnp.float32) - want.astype(jnp.float32)).max())
+    assert err / scale < TOLS[dtype], (err, scale)
+
+
+def test_rwkv6_reset_fallback_matches_segments():
+    """reset_mask (FedAttn-local) == independently scanning each segment."""
+    B, L, H, dk = 1, 24, 2, 8
+    ks = jax.random.split(jax.random.key(2), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, L, H, dk)) for i in range(3))
+    w = jnp.maximum(-jnp.exp(jax.random.normal(ks[3], (B, L, H, dk))), -5.0)
+    u = jax.random.normal(ks[4], (H, dk)) * 0.5
+    resets = jnp.zeros((L,), bool).at[jnp.array([8, 16])].set(True)
+    y, _ = ref.rwkv6_ref(r, k, v, w, u, reset_mask=resets)
+    pieces = []
+    for lo, hi in ((0, 8), (8, 16), (16, 24)):
+        yp, _ = ref.rwkv6_ref(
+            r[:, lo:hi], k[:, lo:hi], v[:, lo:hi], w[:, lo:hi], u
+        )
+        pieces.append(yp)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(jnp.concatenate(pieces, axis=1)), atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# mamba scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,L,d_in,ds", [(1, 40, 32, 8), (2, 70, 48, 16)])
+def test_mamba_sweep(B, L, d_in, ds, dtype):
+    ks = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(ks[0], (B, L, d_in), dtype)
+    delta = jax.nn.softplus(jax.random.normal(ks[1], (B, L, d_in))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (d_in, ds)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, L, ds), dtype)
+    C = jax.random.normal(ks[4], (B, L, ds), dtype)
+    D = jnp.ones((d_in,))
+    y, _ = mamba_scan_chunked(x, delta, A, Bm, C, D, chunk=16, block_d=32)
+    want, _ = ref.mamba_scan_ref(x, delta, A, Bm, C, D)
+    scale = float(jnp.abs(want.astype(jnp.float32)).max()) + 1e-6
+    err = float(jnp.abs(y.astype(jnp.float32) - want.astype(jnp.float32)).max())
+    assert err / scale < TOLS[dtype], (err, scale)
+
+
+def test_mamba_state_continuation():
+    """Chunk boundaries are invisible: splitting L in two with state carry
+    equals one scan (validates the inter-chunk state plumbing the SPMD
+    hand-off relies on)."""
+    B, L, d_in, ds = 1, 32, 16, 8
+    ks = jax.random.split(jax.random.key(1), 5)
+    x = jax.random.normal(ks[0], (B, L, d_in))
+    delta = jax.nn.softplus(jax.random.normal(ks[1], (B, L, d_in)))
+    A = -jnp.exp(jax.random.normal(ks[2], (d_in, ds)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, L, ds))
+    C = jax.random.normal(ks[4], (B, L, ds))
+    D = jnp.zeros((d_in,))
+    y_full, h_full = ref.mamba_scan_ref(x, delta, A, Bm, C, D)
+    y1, h1 = ref.mamba_scan_ref(x[:, :16], delta[:, :16], A, Bm[:, :16], C[:, :16], D)
+    y2, h2 = ref.mamba_scan_ref(
+        x[:, 16:], delta[:, 16:], A, Bm[:, 16:], C[:, 16:], D, initial_state=h1
+    )
+    np.testing.assert_allclose(np.asarray(y_full[:, 16:]), np.asarray(y2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h2), atol=1e-5)

@@ -1,0 +1,100 @@
+"""Partition (Π_n machinery) unit + property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import Partition
+
+
+class TestConstructors:
+    def test_contiguous_even(self):
+        p = Partition.contiguous(12, 3)
+        assert p.seq_len == 12
+        np.testing.assert_array_equal(np.asarray(p.sizes()), [4, 4, 4])
+        assert p.is_contiguous()
+
+    def test_contiguous_remainder(self):
+        p = Partition.contiguous(10, 3)
+        assert int(jnp.sum(p.sizes())) == 10
+        assert np.asarray(p.sizes()).min() >= 3
+
+    def test_tok_seg_q_exclusive(self):
+        p = Partition.tok_seg_q_exclusive(20, 4, question_len=5)
+        seg = np.asarray(p.segment_ids)
+        assert (seg[-5:] == 3).all()
+        assert seg[:15].max() <= 2
+
+    def test_sem_seg_units_intact(self):
+        units = [5, 3, 7, 2, 6]
+        p = Partition.sem_seg_q_agnostic(units, 3)
+        seg = np.asarray(p.segment_ids)
+        # every unit maps to a single participant
+        off = 0
+        for u in units:
+            assert len(set(seg[off : off + u].tolist())) == 1
+            off += u
+
+    def test_sem_seg_q_exclusive_publisher(self):
+        units = [4, 4, 4, 3]
+        p = Partition.sem_seg_q_exclusive(units, 3)
+        seg = np.asarray(p.segment_ids)
+        assert (seg[-3:] == 2).all()
+
+    def test_publisher_start(self):
+        p = Partition.contiguous(16, 4)
+        assert p.publisher_start() == 12
+        assert p.publisher_start(0) == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    seq_len=st.integers(1, 128),
+    n=st.integers(1, 8),
+)
+def test_contiguous_is_disjoint_cover(seq_len, n):
+    """Property (eq. 11-15): {L_n} is a disjoint partition of L."""
+    n = min(n, seq_len)
+    p = Partition.contiguous(seq_len, n)
+    seg = np.asarray(p.segment_ids)
+    assert seg.shape == (seq_len,)
+    assert seg.min() >= 0 and seg.max() < n
+    assert int(jnp.sum(p.sizes())) == seq_len
+    # contiguity: nondecreasing
+    assert (np.diff(seg) >= 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    units=st.lists(st.integers(1, 12), min_size=2, max_size=10),
+    n=st.integers(2, 5),
+)
+def test_sem_seg_cover(units, n):
+    p = Partition.sem_seg_q_agnostic(units, n)
+    assert p.seq_len == sum(units)
+    assert int(jnp.sum(p.sizes())) == sum(units)
+
+
+def test_local_mask_blockdiag():
+    p = Partition.contiguous(8, 2)
+    m = np.asarray(p.local_mask())
+    assert m[:4, :4].all() and m[4:, 4:].all()
+    assert not m[:4, 4:].any() and not m[4:, :4].any()
+
+
+def test_indicator_reconstruction():
+    """Σ_n Π_n Π_n^T = I (eq. 15 structure)."""
+    p = Partition.from_sizes([3, 2, 4])
+    total = np.zeros((9, 9))
+    for n in range(3):
+        pi = np.asarray(p.indicator(n))
+        total += pi @ pi.T
+    np.testing.assert_allclose(total, np.eye(9), atol=1e-6)
+
+
+def test_extend_assigns_publisher():
+    p = Partition.contiguous(8, 4)
+    p2 = p.extend(3, participant=3)
+    seg = np.asarray(p2.segment_ids)
+    assert (seg[-3:] == 3).all()
+    assert p2.seq_len == 11

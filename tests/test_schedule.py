@@ -1,0 +1,85 @@
+"""SyncSchedule unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedule import SyncSchedule
+
+
+class TestBuilders:
+    def test_uniform(self):
+        s = SyncSchedule.uniform(8, 4)
+        assert s.positions() == [3, 7]
+        assert s.comm_cost_factor() == 0.25
+
+    def test_h1_is_cenattn(self):
+        s = SyncSchedule.uniform(6, 1)
+        assert s.n_syncs == 6
+
+    def test_none_all(self):
+        assert SyncSchedule.none(5).n_syncs == 0
+        assert SyncSchedule.all(5).n_syncs == 5
+
+    def test_halves(self):
+        sh = SyncSchedule.shallow_half(16, 4)
+        dp = SyncSchedule.deep_half(16, 4)
+        assert all(p < 8 for p in sh.positions())
+        assert all(p >= 8 for p in dp.positions())
+        assert sh.n_syncs == dp.n_syncs == 4
+
+    def test_progressive_regressive_mirror(self):
+        pr = SyncSchedule.progressive(24, 5)
+        rg = SyncSchedule.regressive(24, 5)
+        assert pr.mask == tuple(reversed(rg.mask))
+        # progressive: denser early → mean sync position earlier
+        assert np.mean(pr.positions()) < np.mean(rg.positions())
+
+    def test_custom_validation(self):
+        with pytest.raises(ValueError):
+            SyncSchedule.custom([99], 8)
+
+    def test_from_error_weights(self):
+        w = np.array([1.0, 5.0, 2.0, 9.0])
+        s = SyncSchedule.from_error_weights(w, 2)
+        assert s.positions() == [1, 3]
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n_layers=st.integers(2, 64),
+    interval=st.integers(1, 16),
+)
+def test_uniform_properties(n_layers, interval):
+    s = SyncSchedule.uniform(n_layers, interval)
+    assert s.n_layers == n_layers
+    assert s.n_syncs == n_layers // interval
+    # every sync separated by exactly `interval`
+    pos = s.positions()
+    assert all(p % interval == interval - 1 for p in pos)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_layers=st.integers(4, 48),
+    n_syncs=st.integers(1, 8),
+    name=st.sampled_from(["shallow_half", "deep_half", "progressive", "regressive"]),
+)
+def test_named_schedules_sync_budget(n_layers, n_syncs, name):
+    """Fig. 7 comparison fairness: schedules must not exceed the budget."""
+    s = SyncSchedule.by_name(name, n_layers, n_syncs=n_syncs)
+    assert 1 <= s.n_syncs <= n_syncs
+    assert s.n_layers == n_layers
+
+
+def test_segments_roundtrip():
+    s = SyncSchedule.custom([2, 3, 7], 10)
+    segs = s.segments()
+    assert segs == [(3, True), (1, True), (4, True), (2, False)]
+    assert sum(r for r, _ in segs) == 10
+
+
+def test_periodic_pattern():
+    s = SyncSchedule.uniform(12, 4)
+    assert s.periodic_pattern(4) == [False, False, False, True]
+    with pytest.raises(ValueError):
+        SyncSchedule.custom([0], 12).periodic_pattern(4)

@@ -1,0 +1,116 @@
+"""End-to-end system behaviour tests.
+
+1. Training a small model on synthetic tasks under FedAttn actually learns
+   (loss decreases substantially).
+2. The serving engine produces the protocol's comm-cost accounting and
+   deterministic greedy generations.
+3. Optimizer/checkpoint/data substrates round-trip.
+"""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_config
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.data import batch_iterator, char_lm_task, multi_segment_recall_task
+from repro.launch import steps as S
+from repro.models.transformer import TransformerLM
+from repro.optim import AdamWConfig, adamw_init, cosine_schedule
+from repro.serving import FedAttnEngine
+from repro.types import FedAttnConfig, LayerSpec
+
+
+def test_training_learns_char_lm():
+    cfg = tiny_config(n_layers=2, pattern=(LayerSpec(), LayerSpec(sync=True)),
+                      vocab_size=64)
+    task = char_lm_task(seq_len=64, vocab_size=64)
+    step = jax.jit(S.make_train_step(cfg, 64, lr=3e-3))
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.key(0))
+    opt = adamw_init(params)
+    it = batch_iterator(task, 16, seed=0)
+    losses = []
+    for i in range(60):
+        b = next(it)
+        params, opt, m = step(
+            params, opt,
+            {"tokens": jnp.asarray(b["tokens"]), "labels": jnp.asarray(b["labels"])},
+        )
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.7, (losses[0], losses[-1])
+
+
+def test_assoc_recall_task_structure():
+    task = multi_segment_recall_task(n_participants=4, pairs_per_participant=4,
+                                     vocab_size=64)
+    rng = np.random.default_rng(0)
+    toks, labs, units, ap = task.sample_batch(rng, 8)
+    assert toks.shape == (8, task.seq_len)
+    assert (ap == task.seq_len - 1).all()
+    assert len(units) == 4
+    # the answer value token really is bound to the queried key upstream
+    t, l = toks[0], labs[0]
+    qk = t[-2]
+    pos = np.nonzero(t[:-3] == qk)[0]
+    assert len(pos) >= 1
+    assert l[-1] == t[pos[0] + 1]
+
+
+def test_engine_comm_accounting():
+    cfg = tiny_config()
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.key(0))
+    fed_full = cfg.fedattn.replace(kv_exchange_ratio=1.0)
+    fed_half = cfg.fedattn.replace(kv_exchange_ratio=0.5, kv_selection="strided")
+    toks = jax.random.randint(jax.random.key(1), (1, 32), 0, cfg.vocab_size)
+    r_full = FedAttnEngine(cfg, params, fedattn=fed_full).generate(toks, 2)
+    r_half = FedAttnEngine(cfg, params, fedattn=fed_half).generate(
+        toks, 2, rng=jax.random.key(2)
+    )
+    assert r_half.prefill_comm_bytes == pytest.approx(r_full.prefill_comm_bytes * 0.5)
+    assert r_full.tokens.shape == (1, 2)
+
+
+def test_engine_greedy_deterministic():
+    cfg = tiny_config()
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.key(0))
+    eng = FedAttnEngine(cfg, params)
+    toks = jax.random.randint(jax.random.key(1), (2, 32), 0, cfg.vocab_size)
+    a = eng.generate(toks, 4).tokens
+    b = eng.generate(toks, 4).tokens
+    np.testing.assert_array_equal(a, b)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = tiny_config()
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.key(0))
+    path = tmp_path / "ckpt.npz"
+    save_checkpoint(path, params, step=7)
+    restored, step = restore_checkpoint(path, params)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = adamw_init(params)
+    cfgo = AdamWConfig(lr=0.1, weight_decay=0.0)
+    loss = lambda p: jnp.sum(jnp.square(p["w"]))
+    from repro.optim import adamw_update
+
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(g, opt, params, cfgo, 0.1)
+    assert float(loss(params)) < 0.1
+
+
+def test_cosine_schedule_shape():
+    lrs = [float(cosine_schedule(s, 1.0, 100, warmup_steps=10)) for s in range(100)]
+    assert lrs[0] < 0.2 and abs(lrs[10] - 1.0) < 0.1
+    assert lrs[-1] < 0.01
