@@ -22,6 +22,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
 MODULES = [
     ("comm_cost", "comm-cost model (SVII-A3)"),
     ("kernel_bench", "kernel microbenchmarks"),
+    ("decode_throughput", "engine decode tokens/sec: eager vs jitted"),
     ("fig5_quality_vs_h", "Fig.5 quality vs H + comm"),
     ("fig6_quality_vs_n", "Fig.6 quality vs N + compute"),
     ("fig7_sync_schedules", "Fig.7 sync schemes"),

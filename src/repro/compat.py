@@ -1,0 +1,72 @@
+"""JAX cross-version compatibility helpers.
+
+The repo targets current JAX, but must also run on older 0.4.x releases
+(e.g. 0.4.37 images without the newer sharding APIs). Differences papered
+over here:
+
+  * ``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg of
+    ``jax.make_mesh``) only exist in newer JAX. On 0.4.x a plain mesh is
+    equivalent for everything this repo does (all uses are
+    ``AxisType.Auto``).
+  * ``jax.sharding.AbstractMesh`` changed signature: new JAX takes
+    ``(axis_sizes, axis_names)``; 0.4.x takes a single
+    ``((name, size), ...)`` tuple.
+  * ``jax.shard_map`` was promoted from ``jax.experimental.shard_map``
+    after 0.4.x.
+
+Keep ALL version probing in this module — callers (launch/mesh.py, tests)
+must never touch ``jax.sharding.AxisType`` directly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+
+def has_axis_type() -> bool:
+    """True when this JAX exposes jax.sharding.AxisType (≥ 0.5-era API)."""
+    return hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(
+    shape: Sequence[int],
+    axes: Sequence[str],
+    *,
+    devices: Optional[Sequence] = None,
+):
+    """``jax.make_mesh`` with ``AxisType.Auto`` axes where supported.
+
+    On JAX without AxisType (0.4.x) the plain mesh has identical semantics
+    for this repo (auto sharding is the default there).
+    """
+    if has_axis_type():
+        axis_type = jax.sharding.AxisType.Auto
+        try:
+            return jax.make_mesh(
+                tuple(shape), tuple(axes), devices=devices,
+                axis_types=(axis_type,) * len(axes),
+            )
+        except TypeError:  # transitional releases without the kwarg
+            pass
+    return jax.make_mesh(tuple(shape), tuple(axes), devices=devices)
+
+
+def make_abstract_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Version-portable ``jax.sharding.AbstractMesh`` constructor."""
+    abstract_mesh = jax.sharding.AbstractMesh
+    try:
+        return abstract_mesh(tuple(shape), tuple(axes))
+    except TypeError:  # JAX 0.4.x: AbstractMesh(((name, size), ...))
+        return abstract_mesh(tuple(zip(axes, shape)))
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # JAX 0.4.x: experimental location, `check_rep` instead of `check_vma`
+    from jax.experimental.shard_map import shard_map as _shard_map_04x
+
+    def shard_map(f, *args, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map_04x(f, *args, **kwargs)

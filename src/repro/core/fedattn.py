@@ -230,6 +230,15 @@ class FedAttnContext:
         the task publisher, §IV-C); the KV-side vectors describe the cache:
         prefill positions keep their original partition, generated positions
         belong to the publisher.
+
+        Jit-stability: ``cache_len`` and ``n_new`` must be static (they fix
+        array shapes), but ``step`` may be a traced scalar — it only enters
+        through the query-position arithmetic. With a fixed-capacity cache
+        (``cache_len = capacity``) the KV-side vectors are step-invariant:
+        slots past the write frontier carry positions in the causal future
+        of every query, so the visibility mask excludes them without any
+        dynamic-shape bookkeeping. The serving engine's compiled decode
+        driver exploits exactly this (see :meth:`decode_template`).
         """
         pub = self.partition.publisher(self.config.publisher_index)
         L0 = self.partition.seq_len
@@ -247,6 +256,17 @@ class FedAttnContext:
             kv_positions=kv_pos,
             kv_segments=kv_seg,
         )
+
+    def decode_template(self, capacity: int) -> "FedAttnContext":
+        """Step-0 single-token decode context over a fixed-capacity cache.
+
+        All its arrays are step-invariant except ``positions``; a jitted
+        multi-token decode loop advances it with plain traced arithmetic —
+        ``replace(tpl, positions=tpl.positions + step)`` — instead of
+        constructing fresh Python contexts per token (eq. 21's decode-time
+        visibility depends only on position/segment vectors, so this is
+        exact, not an approximation)."""
+        return self.for_decode_step(capacity, 0)
 
     # -- bookkeeping -------------------------------------------------------------
 

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.distributed import runtime
 
 INT_MAX = jnp.iinfo(jnp.int32).max
@@ -130,7 +131,9 @@ def prefill_attention(
         kg = jax.lax.all_gather(ks, ax, axis=1, tiled=True)
         vg = jax.lax.all_gather(vs, ax, axis=1, tiled=True)
         pg = jax.lax.all_gather(ps, ax, axis=0, tiled=True)
-        n_shards = jax.lax.axis_size(ax)
+        # static shard count from the gathered shape (jax.lax.axis_size is
+        # not available on JAX 0.4.x, and arange needs a static extent)
+        n_shards = kg.shape[1] // n_keep
         owner = jnp.repeat(jnp.arange(n_shards), n_keep)
         pg = jnp.where(owner == me, INT_MAX, pg)
         k_all = jnp.concatenate([k, kg], axis=1)
@@ -144,7 +147,7 @@ def prefill_attention(
         fn = sync_full_fn
     else:
         fn = sync_sparse_fn
-    return jax.shard_map(
+    return shard_map(
         fn,
         mesh=mesh,
         in_specs=(bspec, bspec, bspec, P(ax)),
@@ -179,7 +182,7 @@ def gather_memory_once(memory: jnp.ndarray) -> jnp.ndarray:
     assert ctx is not None
     mesh, ax = ctx.mesh, ctx.seq_axis
 
-    return jax.shard_map(
+    return shard_map(
         lambda m: jax.lax.all_gather(m, ax, axis=1, tiled=True),
         mesh=mesh,
         in_specs=P(ctx.bfirst, ax, None),
@@ -224,7 +227,7 @@ def cross_attention_spmd(
             sm_scale=sm_scale, chunk=min(512, Lk),
         )
 
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh, in_specs=(spec, mspec, mspec), out_specs=spec,
         check_vma=False,
     )(q, mk, mv)
@@ -275,7 +278,7 @@ def decode_attention(
         out = acc_g / jnp.maximum(l_g, 1e-20).transpose(0, 2, 1)[..., None]
         return out.astype(q.dtype)
 
-    return jax.shard_map(
+    return shard_map(
         fn,
         mesh=mesh,
         in_specs=(q_spec, cache_spec, cache_spec, P(axes), P(None)),

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.distributed import runtime
 from repro.models import moe as M
 from repro.types import ModelConfig
@@ -81,7 +82,7 @@ def moe_expert_parallel(p, x: jnp.ndarray, config: ModelConfig) -> jnp.ndarray:
         return jax.lax.psum(y, ax)
 
     p_in = {k: p[k] for k in expert_spec}
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(expert_spec, x_spec),
         out_specs=x_spec,

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.distributed import runtime
 from repro.kernels import ref as _ref
 from repro.kernels.probe import probe_mode
@@ -95,7 +96,7 @@ def rwkv6_spmd(
         return y
 
     fn = sync_fn if sync else local_fn
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh, in_specs=(spec, spec, spec, spec), out_specs=spec,
         check_vma=False,
     )(r, k, v, w)
@@ -131,7 +132,7 @@ def mamba_spmd(
         return y
 
     fn = sync_fn if sync else local_fn
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh, in_specs=(s3, s3, s3, s3), out_specs=s3,
         check_vma=False,
     )(x, delta, Bm, C)

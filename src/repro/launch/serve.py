@@ -4,6 +4,10 @@ Demonstrates the paper's deployment story end to end: N participants hold
 private token segments; the engine runs FedAttn prefill (periodic KV
 exchange per the schedule) and the publisher decodes the answer.
 
+Decode uses the engine's jitted lax.scan fast path by default; pass
+``--no-compile`` to run the eager per-token reference loop instead (same
+numbers, ~30x slower on CPU — see benchmarks/decode_throughput.py).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --participants 4 \
       --sync-interval 2 --kv-ratio 0.5 --n-new 16
@@ -11,10 +15,9 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ASSIGNED_ARCHS, get_reduced_config
 from repro.serving import FedAttnEngine
@@ -32,6 +35,8 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--n-new", type=int, default=8)
+    ap.add_argument("--no-compile", action="store_true",
+                    help="eager per-token decode (reference path)")
     args = ap.parse_args()
 
     config = get_reduced_config(args.arch)
@@ -61,12 +66,26 @@ def main() -> None:
         extra = fake_vision_embeds(
             jax.random.key(2), args.batch, config.frontend_tokens, config.d_model
         )
+    compile_decode = not args.no_compile
+    if compile_decode:
+        # warmup: compile the decode driver so the timed call below measures
+        # steady state (eager mode has no compile step to amortize)
+        engine.generate(
+            tokens, args.n_new, rng=jax.random.key(3), extra_embeds=extra,
+        )
+    t0 = time.perf_counter()
     res = engine.generate(
-        tokens, args.n_new, rng=jax.random.key(3), extra_embeds=extra
+        tokens, args.n_new, rng=jax.random.key(3), extra_embeds=extra,
+        compile=compile_decode,
     )
+    dt = time.perf_counter() - t0
     print(f"arch={config.name} N={args.participants} H={args.sync_interval} "
-          f"schedule={args.schedule} kv_ratio={args.kv_ratio}")
+          f"schedule={args.schedule} kv_ratio={args.kv_ratio} "
+          f"decode={'jit' if compile_decode else 'eager'}")
     print("generated tokens:\n", res.tokens)
+    print("mean token logprob:", float(res.logprobs.mean()))
+    print(f"decode throughput: {args.n_new * args.batch / dt:,.1f} tok/s "
+          f"(batch x n_new / wall, prefill included)")
     print(f"prefill KV upload per participant: {res.prefill_comm_bytes:,.0f} bytes")
 
 

@@ -356,11 +356,19 @@ class TransformerLM:
         *,
         backend: Optional[str] = None,
         moe_impl: str = "dense",
+        dctx: Optional[FedAttnContext] = None,
     ):
-        """One autoregressive step. Returns (logits (B, S_new, V), new_cache)."""
+        """One autoregressive step. Returns (logits (B, S_new, V), new_cache).
+
+        Jit-stable: ``cache_len`` and ``step`` may be traced scalars (cache
+        capacity is taken from static shapes). Callers running a compiled
+        multi-token loop pass ``dctx`` — a decode context advanced from
+        ``ctx.decode_template(capacity)`` — to avoid rebuilding the context
+        from the prefill-shaped ``ctx`` at every unrolled trace."""
         cfg = self.config
         x = L.embed_tokens(params["embed"], tokens, cfg)
-        dctx = ctx.for_decode_step(_cache_capacity(cache), step)
+        if dctx is None:
+            dctx = ctx.for_decode_step(_cache_capacity(cache), step)
         new_cache = []
         for m, (p, spec) in enumerate(zip(params["layers"], cfg.layer_specs())):
             x, c = apply_layer_decode(

@@ -10,6 +10,20 @@ Implements the paper's full inference flow (§IV):
   2. **Decode**: the task publisher autoregressively extends from the final
      global token, attending per layer according to the same schedule.
 
+Decode runs on one of two drivers:
+
+  * **compiled** (default): one ``jax.jit``-compiled ``lax.scan`` over all
+    remaining tokens. The KV cache has fixed capacity ``L + n_new`` so every
+    step is shape-stable; the FedAttn decode context is built ONCE from
+    :meth:`FedAttnContext.decode_template` and advanced inside the scan by
+    traced position arithmetic — no Python object churn per token. Compiled
+    functions are cached on the engine per (batch, lengths, sampling) key,
+    with all per-call arrays (partition segment ids, positions) passed as
+    traced arguments so a cached executable is never stale.
+  * **eager** (``compile=False``): the original per-token Python loop.
+    Reference semantics; `tests/test_engine_decode.py` pins greedy-token
+    and logit parity between the two drivers.
+
 The engine also supports batched requests (same partition structure across
 the batch — the SPMD-friendly regime) and greedy or temperature sampling.
 This is the small-scale/real-execution counterpart of launch/serve.py's
@@ -17,8 +31,9 @@ full-size lowering.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,14 +43,15 @@ from repro.core.fedattn import FedAttnContext
 from repro.core.partition import Partition
 from repro.configs import schedule_from_config
 from repro.models import build_model
-from repro.models.transformer import TransformerLM
+from repro.models import layers as LY
+from repro.models import transformer as T
 from repro.types import FedAttnConfig, ModelConfig
 
 
 @dataclass
 class GenerationResult:
     tokens: np.ndarray  # (B, n_new)
-    logprobs: Optional[np.ndarray] = None
+    logprobs: Optional[np.ndarray] = None  # (B, n_new) — model logprob of each emitted token
     prefill_comm_bytes: float = 0.0  # per-participant KV upload (paper §VII-A3)
 
 
@@ -57,6 +73,8 @@ class FedAttnEngine:
         self.fed = fedattn if fedattn is not None else config.fedattn
         self.model = build_model(config)
         self.backend = backend
+        # compiled decode drivers, keyed by (B, L, n_new, temperature, sampled)
+        self._decode_fns: dict = {}
 
     # -- protocol setup ---------------------------------------------------------
 
@@ -92,6 +110,7 @@ class FedAttnEngine:
         temperature: float = 0.0,
         rng: Optional[jax.Array] = None,
         extra_embeds: Optional[jnp.ndarray] = None,
+        compile: bool = True,
     ) -> GenerationResult:
         B, L = tokens.shape
         ctx = self.build_context(L, partition=partition, rng=rng)
@@ -102,23 +121,36 @@ class FedAttnEngine:
         cache = self.model.init_cache(B, capacity)
         logits, cache = self._prefill(tokens, ctx, cache, extra_embeds)
 
-        out_tokens = []
-        logps = []
-        tok = self._sample(logits[:, -1], temperature, rng, 0)
-        out_tokens.append(tok)
-        for step in range(1, n_new):
-            logits_s, cache = self._decode_step_impl(
-                self.params, cache, tok[:, None], L + step - 1, ctx, step - 1
-            )
-            lp = jax.nn.log_softmax(logits_s[:, -1].astype(jnp.float32))
-            tok = self._sample(logits_s[:, -1], temperature, rng, step)
-            out_tokens.append(tok)
-            logps.append(lp)
+        last = logits[:, -1]
+        tok0 = self._sample(last, temperature, rng, 0)
+        lp0 = _token_logprob(last, tok0)
+        sampled = temperature > 0.0 and rng is not None
+        if n_new == 1:
+            toks, lps = tok0[:, None], lp0[:, None]
+        else:
+            dctx0 = ctx.decode_template(capacity)
+            if compile:
+                fn = self._decode_fn(B, L, n_new, sampled)
+                rng_arg = rng if rng is not None else jax.random.key(0)
+                rest_toks, rest_lps, cache = fn(
+                    self.params, cache, tok0, rng_arg,
+                    jnp.float32(max(temperature, 1e-6)),
+                    dctx0.positions, dctx0.segments,
+                    dctx0.kv_positions, dctx0.kv_segments,
+                )
+            else:
+                rest_toks, rest_lps, cache = self._eager_decode(
+                    cache, tok0, L, n_new, ctx, dctx0, temperature, rng
+                )
+            toks = jnp.concatenate([tok0[:, None], rest_toks], axis=1)
+            lps = jnp.concatenate([lp0[:, None], rest_lps], axis=1)
+
         comm = ctx.comm_bytes_per_participant(
             self.config.n_kv_heads, self.config.head_dim
         )
         return GenerationResult(
-            tokens=np.stack([np.asarray(t) for t in out_tokens], axis=1),
+            tokens=np.asarray(toks),
+            logprobs=np.asarray(lps),
             prefill_comm_bytes=comm,
         )
 
@@ -131,19 +163,13 @@ class FedAttnEngine:
         B, L = tokens.shape
         # Bulk write: decode path with cache_len=0 and S_new=L reproduces the
         # prefill attention exactly (the visibility masks are identical).
-        import dataclasses
-
         dctx = ctx.for_decode_step(_capacity(cache), 0, n_new=L)
         dctx = dataclasses.replace(
             dctx,
             positions=ctx.positions,
             segments=ctx.segments,
         )
-        from repro.models import transformer as T
-
         cfg = self.config
-        from repro.models import layers as LY
-
         x = self.model._embed(self.params, tokens, extra_embeds)
         for m, (p, spec) in enumerate(zip(self.params["layers"], cfg.layer_specs())):
             x, cache[m] = T.apply_layer_decode(
@@ -153,17 +179,92 @@ class FedAttnEngine:
         logits = LY.apply_lm_head(self.params["head"], self.params["embed"], x, cfg)
         return logits, cache
 
-    def _decode_step_impl(self, params, cache, tok, cache_len, ctx, step):
-        logits, cache = self.model.decode_step(
-            params, cache, tok, cache_len, ctx, step=step, backend=self.backend
+    def _decode_fn(self, B: int, L: int, n_new: int, sampled: bool):
+        """Build (or fetch) the jitted multi-token decode driver.
+
+        The closure only bakes in engine-invariant state (model config,
+        sync schedule, backend) plus the static key (shapes, sampling mode).
+        Everything that varies call-to-call — params, cache, first token,
+        rng, temperature, and the decode-context vectors derived from the
+        partition — is a traced argument, so reusing a cached executable is
+        always sound and sweeping the temperature never recompiles.
+        """
+        key = (B, L, n_new, sampled)
+        fn = self._decode_fns.get(key)
+        if fn is not None:
+            return fn
+
+        model, backend = self.model, self.backend
+        # Proto context: carries the engine-fixed config/schedule objects the
+        # layers consult; its array fields are all overridden below.
+        proto = self.build_context(L).decode_template(L + n_new)
+
+        def run(params, cache, tok0, rng, temp, q_pos0, q_seg, kv_pos, kv_seg):
+            tpl = dataclasses.replace(
+                proto, positions=q_pos0, segments=q_seg,
+                kv_positions=kv_pos, kv_segments=kv_seg, contributed=None,
+            )
+
+            def body(carry, step):
+                cache, tok = carry
+                dctx = dataclasses.replace(tpl, positions=q_pos0 + step)
+                logits, cache = model.decode_step(
+                    params, cache, tok[:, None], L + step, tpl, step=step,
+                    backend=backend, dctx=dctx,
+                )
+                nxt_logits = logits[:, -1]
+                if sampled:
+                    r = jax.random.fold_in(rng, step + 1)
+                    nxt = jax.random.categorical(
+                        r, nxt_logits.astype(jnp.float32) / temp
+                    )
+                else:
+                    nxt = jnp.argmax(nxt_logits, axis=-1)
+                return (cache, nxt), (nxt, _token_logprob(nxt_logits, nxt))
+
+            (cache, _), (toks, lps) = jax.lax.scan(
+                body, (cache, tok0), jnp.arange(n_new - 1)
+            )
+            return toks.T, lps.T, cache  # (B, n_new-1) each
+
+        # Donate the cache so the compiled step updates it in place
+        # (donation is a no-op warning on CPU — skip it there).
+        donate = (1,) if jax.default_backend() != "cpu" else ()
+        fn = jax.jit(run, donate_argnums=donate)
+        self._decode_fns[key] = fn
+        return fn
+
+    def _eager_decode(self, cache, tok0, L, n_new, ctx, dctx0, temperature, rng):
+        """Reference per-token Python loop (`compile=False` fallback)."""
+        tok = tok0
+        out_tokens, out_lps = [], []
+        for step in range(n_new - 1):
+            dctx = dataclasses.replace(dctx0, positions=dctx0.positions + step)
+            logits, cache = self.model.decode_step(
+                self.params, cache, tok[:, None], L + step, ctx, step=step,
+                backend=self.backend, dctx=dctx,
+            )
+            last = logits[:, -1]
+            tok = self._sample(last, temperature, rng, step + 1)
+            out_tokens.append(tok)
+            out_lps.append(_token_logprob(last, tok))
+        return (
+            jnp.stack(out_tokens, axis=1),
+            jnp.stack(out_lps, axis=1),
+            cache,
         )
-        return logits, cache
 
     def _sample(self, logits, temperature, rng, step):
         if temperature <= 0.0 or rng is None:
             return jnp.argmax(logits, axis=-1)
         r = jax.random.fold_in(rng, step)
         return jax.random.categorical(r, logits.astype(jnp.float32) / temperature)
+
+
+def _token_logprob(logits: jnp.ndarray, tok: jnp.ndarray) -> jnp.ndarray:
+    """(B,) log p(tok | prefix) under the model's (untempered) softmax."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0]
 
 
 def _capacity(cache) -> int:

@@ -1,0 +1,153 @@
+"""Offline stand-in for the `hypothesis` property-testing library.
+
+Installed into ``sys.modules`` by ``conftest.py`` ONLY when the real
+package is unavailable (air-gapped CI / minimal images). It degrades
+``@given`` property tests into deterministic fixed-example tests: each
+strategy yields its boundary values first (min/max, first/last element),
+then seeded pseudo-random draws, so the properties are still exercised
+across a small, reproducible example set.
+
+Only the strategy surface used by this repo's tests is implemented:
+``integers``, ``floats``, ``booleans``, ``sampled_from``, ``lists`` —
+plus ``given``, ``settings`` and ``assume``. Anything else raises so a
+silent no-op can't masquerade as coverage.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import types
+
+# Cap on examples per test in stub mode (the real hypothesis honors
+# settings(max_examples=...); the stub trades breadth for determinism and
+# suite runtime: 2 boundary examples + 4 seeded random draws).
+MAX_STUB_EXAMPLES = 6
+
+
+class _Assumption(Exception):
+    """Raised by assume(False); the runner skips that example."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Assumption()
+    return True
+
+
+class Strategy:
+    """A deterministic example generator: draw(rnd, i) where ``i`` is the
+    example index (0, 1 → boundaries; ≥2 → seeded random draws)."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random, i: int):
+        return self._draw(rnd, i)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    def draw(rnd, i):
+        if i == 0:
+            return min_value
+        if i == 1:
+            return max_value
+        return rnd.randint(min_value, max_value)
+
+    return Strategy(draw)
+
+
+def floats(min_value: float, max_value: float, **_kw) -> Strategy:
+    def draw(rnd, i):
+        if i == 0:
+            return min_value
+        if i == 1:
+            return max_value
+        return rnd.uniform(min_value, max_value)
+
+    return Strategy(draw)
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rnd, i: bool(i % 2) if i < 2 else rnd.random() < 0.5)
+
+
+def sampled_from(elements) -> Strategy:
+    elements = list(elements)
+
+    def draw(rnd, i):
+        if i < len(elements):
+            return elements[i]
+        return rnd.choice(elements)
+
+    return Strategy(draw)
+
+
+def lists(element: Strategy, *, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def draw(rnd, i):
+        if i == 0:
+            n = min_size
+        elif i == 1:
+            n = max_size
+        else:
+            n = rnd.randint(min_size, max_size)
+        return [element.example(rnd, (i + j) % (MAX_STUB_EXAMPLES + 2))
+                for j in range(n)]
+
+    return Strategy(draw)
+
+
+def given(*args, **strategies):
+    if args:
+        raise NotImplementedError("stub @given supports keyword strategies only")
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        fixture_params = [
+            p for name, p in sig.parameters.items() if name not in strategies
+        ]
+
+        def runner(*f_args, **f_kwargs):
+            n = getattr(runner, "_stub_max_examples", MAX_STUB_EXAMPLES)
+            rnd = random.Random(0x5EED)
+            for i in range(n):
+                drawn = {
+                    name: s.example(rnd, i) for name, s in strategies.items()
+                }
+                try:
+                    fn(*f_args, **f_kwargs, **drawn)
+                except _Assumption:
+                    continue
+
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        # pytest must see only the fixture params (not the drawn ones);
+        # deliberately no functools.wraps — __wrapped__ would expose the
+        # original signature and pytest would demand fixtures for it.
+        runner.__signature__ = inspect.Signature(fixture_params)
+        runner.hypothesis_stub_inner = fn
+        return runner
+
+    return deco
+
+
+class settings:
+    """Accepts the real-hypothesis kwargs; only max_examples is honored
+    (capped at MAX_STUB_EXAMPLES)."""
+
+    def __init__(self, max_examples: int = MAX_STUB_EXAMPLES, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_max_examples = min(self.max_examples, MAX_STUB_EXAMPLES)
+        return fn
+
+
+# `from hypothesis import strategies as st` / `import hypothesis.strategies`
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.booleans = booleans
+strategies.sampled_from = sampled_from
+strategies.lists = lists

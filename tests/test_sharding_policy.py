@@ -3,15 +3,16 @@ import jax
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_abstract_mesh
 from repro.distributed.sharding import param_spec
 
 
 @pytest.fixture(scope="module")
 def mesh():
     # abstract mesh over the single CPU device is fine for spec generation
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_big_2d_gets_combined_axes(mesh):

@@ -18,7 +18,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh
 from repro.core.fedattn import FedAttnContext
 from repro.distributed import runtime
 from repro.launch import steps as S
@@ -41,7 +42,7 @@ ctx = S.build_context(cfg, L)
 # reference on the implicit single-device path
 ref = model.apply(params, tokens, ctx)
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 tok_sh = jax.device_put(tokens, NamedSharding(mesh, P("data", "model")))
 with runtime.spmd(mesh, batch_axes=("data",)):
     got = jax.jit(lambda p, t: model.apply(p, t, ctx))(params, tok_sh)
@@ -55,7 +56,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh
 from repro.distributed import runtime
 from repro.launch import steps as S
 from repro.models.transformer import TransformerLM
@@ -86,7 +88,7 @@ for m, (p, spec) in enumerate(zip(params["layers"], cfg.layer_specs())):
 
 ref_logits, _ = model.decode_step(params, cache, tokens[:, L:], L, ctx, step=0)
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 cache_sh = [
     {k: jax.device_put(v, NamedSharding(mesh, P("data", "model", None, None)))
      for k, v in c.items()}
