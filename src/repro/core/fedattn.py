@@ -75,6 +75,10 @@ def visibility(
         base &= q_pos[:, None] >= kv_pos[None, :]
     if window is not None:
         base &= (q_pos[:, None] - kv_pos[None, :]) < window
+    # negative kv segments are shape-bucketing padding sentinels (the engine
+    # pads prefill tokens with segment -1; kernels pad with -2) — a padded
+    # KV slot is never visible, in either phase
+    base &= kv_seg[None, :] >= 0
     same = q_seg[:, None] == kv_seg[None, :]
     if contributed is None:
         global_vis = base

@@ -52,6 +52,7 @@ def _kernel(
     acc_scr,  # (BLOCK_Q, dh) f32
     *,
     causal: bool,
+    use_seg: bool,
     local_only: bool,
     use_contrib: bool,
     window: Optional[int],
@@ -85,6 +86,10 @@ def _kernel(
         mask &= kpos[None, :] < jnp.iinfo(jnp.int32).max
     if window is not None:
         mask &= (qpos[:, None] - kpos[None, :]) < window
+    if use_seg:
+        # negative kv segments are padding sentinels (bucketed prefill pads
+        # with -1, this kernel's own block padding uses -2) — never visible
+        mask &= kseg_ref[...][None, :] >= 0
     if local_only:
         mask &= qseg_ref[...][:, None] == kseg_ref[...][None, :]
     elif use_contrib:
@@ -172,6 +177,7 @@ def flash_attention(
     kernel = functools.partial(
         _kernel,
         causal=causal,
+        use_seg=use_seg,
         local_only=local_only and use_seg,
         use_contrib=use_contrib,
         window=window,

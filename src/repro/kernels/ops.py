@@ -93,13 +93,17 @@ def _chunked_attention(
     """Online-softmax attention, scanned over KV chunks. O(Lq·chunk) memory.
 
     The KV sequence is padded to a multiple of ``chunk``; padded slots carry
-    kv_pos = +inf-like sentinel so the causal mask removes them.
+    kv_pos = +inf-like sentinel (and kv_seg = -2) so the masks remove them.
+    ``chunk`` is clamped to Lk first — otherwise a short KV (e.g. a 128-slot
+    decode cache under the decode default chunk=2048) would be padded up to
+    a full chunk, wasting 16x the attention FLOPs/memory on masked slots.
     """
     B, Lq, nq, dh = q.shape
     _, Lk, nkv, _ = k.shape
     g = nq // nkv
     scale = sm_scale if sm_scale is not None else dh**-0.5
 
+    chunk = max(1, min(chunk, Lk))
     pad = (-Lk) % chunk
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
@@ -109,6 +113,9 @@ def _chunked_attention(
             kv_seg = jnp.pad(kv_seg, (0, pad), constant_values=-2)
         if contributed is not None:
             contributed = jnp.pad(contributed, (0, pad), constant_values=False)
+    assert k.shape[1] == Lk + pad and pad < chunk, (
+        f"over-padded KV: Lk={Lk} chunk={chunk} padded={k.shape[1]}"
+    )
     n_chunks = (Lk + pad) // chunk
 
     qf = q.astype(jnp.float32) * scale
@@ -138,6 +145,10 @@ def _chunked_attention(
         if window is not None:
             mask &= (q_pos[:, None] - posc[None, :]) < window
         if q_seg is not None and segc is not None:
+            # negative kv segments are padding sentinels (bucketed prefill
+            # pads with -1; this kernel's own chunk padding uses -2) — never
+            # visible regardless of sync phase
+            mask &= segc[None, :] >= 0
             same = q_seg[:, None] == segc[None, :]
             if local_only:
                 mask &= same

@@ -58,6 +58,9 @@ def attention_ref(
     if window is not None:
         mask &= (q_pos[:, None] - kv_pos[None, :]) < window
     if q_seg is not None and kv_seg is not None:
+        # negative kv segments are padding sentinels (shape-bucketed prefill
+        # pads with -1, chunked/flash kernels pad with -2) — never visible
+        mask &= kv_seg[None, :] >= 0
         same = q_seg[:, None] == kv_seg[None, :]
         if local_only:
             mask &= same

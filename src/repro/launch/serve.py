@@ -4,9 +4,17 @@ Demonstrates the paper's deployment story end to end: N participants hold
 private token segments; the engine runs FedAttn prefill (periodic KV
 exchange per the schedule) and the publisher decodes the answer.
 
-Decode uses the engine's jitted lax.scan fast path by default; pass
-``--no-compile`` to run the eager per-token reference loop instead (same
-numbers, ~30x slower on CPU — see benchmarks/decode_throughput.py).
+Both phases run compiled by default: a jitted shape-bucketed prefill plus
+the jitted lax.scan decode driver (scan-over-layers when the sync schedule
+is periodic). Pass ``--no-compile`` to run the eager per-token reference
+loops instead (same numbers, ~30x slower decode on CPU — see
+benchmarks/decode_throughput.py and benchmarks/prefill_throughput.py).
+
+Bucket policy: with ``--bucket pow2`` (default) the request length and
+n-new are padded up to power-of-two buckets so mixed request lengths share
+one compiled executable per bucket — steady-state serving never
+recompiles. ``--bucket none`` compiles per exact shape (more executables,
+no padded FLOPs).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --participants 4 \
@@ -36,7 +44,20 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--n-new", type=int, default=8)
     ap.add_argument("--no-compile", action="store_true",
-                    help="eager per-token decode (reference path)")
+                    help="eager per-token decode + per-layer prefill "
+                         "(reference path)")
+    ap.add_argument("--bucket", choices=["pow2", "none"], default="pow2",
+                    help="executable-sharing policy: 'pow2' pads L and "
+                         "n-new up to power-of-two buckets so mixed request "
+                         "lengths reuse one compiled executable per bucket; "
+                         "'none' compiles per exact shape")
+    ap.add_argument("--layers-mode", choices=["auto", "loop", "scan"],
+                    default="auto",
+                    help="compiled layer lowering: 'scan' traces the "
+                         "repeating layer pattern once (HLO O(period), fast "
+                         "compiles on deep configs; needs a periodic sync "
+                         "schedule), 'loop' traces every layer; 'auto' "
+                         "picks scan whenever the schedule allows it")
     args = ap.parse_args()
 
     config = get_reduced_config(args.arch)
@@ -54,7 +75,10 @@ def main() -> None:
 
     model = build_model(config)
     model_params = model.init(jax.random.key(0))
-    engine = FedAttnEngine(config, model_params, fedattn=fed)
+    engine = FedAttnEngine(
+        config, model_params, fedattn=fed, bucket=args.bucket,
+        layers_mode=None if args.layers_mode == "auto" else args.layers_mode,
+    )
 
     tokens = jax.random.randint(
         jax.random.key(1), (args.batch, args.seq_len), 3, config.vocab_size
@@ -67,12 +91,15 @@ def main() -> None:
             jax.random.key(2), args.batch, config.frontend_tokens, config.d_model
         )
     compile_decode = not args.no_compile
+    t_compile = 0.0
     if compile_decode:
-        # warmup: compile the decode driver so the timed call below measures
-        # steady state (eager mode has no compile step to amortize)
+        # warmup: compile the prefill + decode drivers so the timed call
+        # below measures steady state (eager mode has no compile step)
+        t0 = time.perf_counter()
         engine.generate(
             tokens, args.n_new, rng=jax.random.key(3), extra_embeds=extra,
         )
+        t_compile = time.perf_counter() - t0
     t0 = time.perf_counter()
     res = engine.generate(
         tokens, args.n_new, rng=jax.random.key(3), extra_embeds=extra,
@@ -81,11 +108,15 @@ def main() -> None:
     dt = time.perf_counter() - t0
     print(f"arch={config.name} N={args.participants} H={args.sync_interval} "
           f"schedule={args.schedule} kv_ratio={args.kv_ratio} "
-          f"decode={'jit' if compile_decode else 'eager'}")
+          f"drivers={'jit' if compile_decode else 'eager'} "
+          f"bucket={args.bucket} layers={engine.layers_mode}")
     print("generated tokens:\n", res.tokens)
     print("mean token logprob:", float(res.logprobs.mean()))
     print(f"decode throughput: {args.n_new * args.batch / dt:,.1f} tok/s "
           f"(batch x n_new / wall, prefill included)")
+    if compile_decode:
+        print(f"warmup (compile) time: {t_compile:.2f}s; compiled drivers: "
+              f"{engine.compile_counts}")
     print(f"prefill KV upload per participant: {res.prefill_comm_bytes:,.0f} bytes")
 
 

@@ -161,9 +161,14 @@ def attention_decode_block(
     *,
     sync: Optional[bool] = None,
     backend: Optional[str] = None,
+    contributed: Optional[jnp.ndarray] = None,
 ):
     """Decode-step attention against the cache; writes the new KV in-place
-    (dynamic_update_slice) and returns (y, k_cache, v_cache)."""
+    (dynamic_update_slice) and returns (y, k_cache, v_cache).
+
+    ``contributed`` is the (capacity,)-shaped sparse-KV-exchange mask for
+    this layer's communication round — only set during bulk prefill-via-
+    decode at sync layers (single-token decode attends the full cache)."""
     theta = _rope_theta_for(spec, config)
     q, k_new, v_new = _project_qkv(p, x, config, ctx.positions, theta)
     S_new = x.shape[1]
@@ -204,6 +209,7 @@ def attention_decode_block(
         kv_seg=kv_seg,
         causal=True,
         local_only=(not sync) and ctx.enabled,
+        contributed=contributed if (sync and ctx.enabled) else None,
         window=spec.window,
         soft_cap=config.attn_soft_cap,
         backend=backend,

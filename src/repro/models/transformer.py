@@ -150,8 +150,10 @@ def apply_layer_decode(
     sync: Optional[bool] = None,
     backend: Optional[str] = None,
     moe_impl: str = "dense",
+    contributed: Optional[jnp.ndarray] = None,
 ):
-    """One decode block. Returns (x, new_cache)."""
+    """One decode block. Returns (x, new_cache). ``contributed`` is this
+    layer's sparse-KV-exchange row during bulk prefill-via-decode."""
     if sync is None:
         sync = ctx.schedule.is_sync(layer_idx)
     h = L.apply_norm(p["norm1"], x, config)
@@ -159,7 +161,7 @@ def apply_layer_decode(
     if spec.kind == "attn":
         o, kc, vc = A.attention_decode_block(
             p["attn"], h, cache["k"], cache["v"], cache_len, ctx, layer_idx,
-            spec, config, sync=sync, backend=backend,
+            spec, config, sync=sync, backend=backend, contributed=contributed,
         )
         new_cache["k"], new_cache["v"] = kc, vc
     elif spec.kind == "mamba":
@@ -202,6 +204,146 @@ def apply_layer_decode(
     else:
         f = L.apply_ffn(p["ffn"], h2, config)
     return x + f, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Scan-over-layers decode (ScanPlan + stacked caches)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ScanPlan:
+    """Static description of a scan-over-layers lowering of the decode path.
+
+    The model body is viewed as ``n_periods`` repetitions of a ``period``-
+    layer unit whose sync flags (from the SyncSchedule) are identical in
+    every repetition, plus trailing ``remainder`` layers applied in a python
+    loop. ``period`` is a multiple of the architecture's pattern period but
+    may be larger — e.g. a homogeneous (period-1) stack with sync every H-th
+    layer scans over an H-layer unit. Traced HLO is O(period), not
+    O(n_layers), so deep configs compile in near-constant time.
+    """
+
+    period: int
+    specs: tuple[LayerSpec, ...]  # one scan unit, len == period
+    sync: tuple[bool, ...]  # schedule flags of the unit
+    n_periods: int
+    remainder_specs: tuple[LayerSpec, ...]
+    remainder_sync: tuple[bool, ...]
+
+    @property
+    def syncs_per_period(self) -> int:
+        return sum(self.sync)
+
+    @staticmethod
+    def from_schedule(config: ModelConfig, schedule) -> Optional["ScanPlan"]:
+        """Smallest valid plan for ``schedule``, or None when the schedule is
+        not periodic over the pattern body (scan lowering inapplicable)."""
+        base_p = len(config.pattern)
+        n_body = config.n_periods * base_p
+        mask = tuple(schedule.mask)
+        specs = config.layer_specs()
+        for p in range(base_p, n_body // 2 + 1, base_p):
+            if n_body % p:
+                continue
+            base = mask[:p]
+            if all(mask[s : s + p] == base for s in range(0, n_body, p)):
+                return ScanPlan(
+                    period=p,
+                    specs=tuple(specs[:p]),
+                    sync=base,
+                    n_periods=n_body // p,
+                    remainder_specs=tuple(config.pattern_remainder),
+                    remainder_sync=tuple(mask[n_body:]),
+                )
+        return None
+
+
+def init_cache_scan(
+    config: ModelConfig, plan: ScanPlan, batch: int, capacity: int
+) -> Params:
+    """Decode caches in scan form: ``stacked`` mirrors one scan unit (a list
+    of per-slot caches) with every leaf gaining a leading (n_periods,) dim;
+    ``remainder`` is a plain list for the trailing layers."""
+    dt = jnp.dtype(config.dtype)
+    per = [init_layer_cache(s, config, batch, capacity, dt) for s in plan.specs]
+    stacked = jax.tree.map(
+        lambda x: jnp.zeros((plan.n_periods,) + x.shape, x.dtype), per
+    )
+    remainder = [
+        init_layer_cache(s, config, batch, capacity, dt)
+        for s in plan.remainder_specs
+    ]
+    return {"stacked": stacked, "remainder": remainder}
+
+
+def apply_layers_decode_scan(
+    params: Params,
+    cache: Params,
+    x: jnp.ndarray,  # (B, S_new, D) embedded input
+    cache_len,
+    dctx: FedAttnContext,
+    config: ModelConfig,
+    plan: ScanPlan,
+    *,
+    backend: Optional[str] = None,
+    moe_impl: str = "dense",
+    contributed: Optional[jnp.ndarray] = None,  # (rounds, capacity) prefill rows
+):
+    """All decoder layers as one ``lax.scan`` over the plan's scan units.
+
+    The hidden state is the scan carry; the per-period (params, cache
+    [, contributed-rows]) stacks are the scanned inputs and the updated
+    caches come back as the stacked outputs — so the trace contains each
+    unit's layers exactly once. Per-round sparse-exchange rows are sliced
+    per scan step ((n_periods, syncs_per_period, capacity) reshape), keeping
+    round ordering identical to the python-loop path.
+    Returns (x, new_cache) with the cache still in scan form."""
+    spp = plan.syncs_per_period
+    contrib_body = None
+    if contributed is not None and spp > 0:
+        contrib_body = contributed[: plan.n_periods * spp].reshape(
+            plan.n_periods, spp, contributed.shape[-1]
+        )
+
+    def unit(h, per_params, per_cache, contrib_rows):
+        new_c = []
+        ci = 0
+        for i, spec in enumerate(plan.specs):
+            row = None
+            if contrib_rows is not None and plan.sync[i]:
+                row = contrib_rows[ci]
+                ci += 1
+            h, c = apply_layer_decode(
+                per_params[i], per_cache[i], h, cache_len, dctx, 0, spec,
+                config, sync=plan.sync[i], backend=backend, moe_impl=moe_impl,
+                contributed=row,
+            )
+            new_c.append(c)
+        return h, new_c
+
+    if contrib_body is None:
+        body = lambda h, xs: unit(h, xs[0], xs[1], None)
+        xs = (params["stacked"], cache["stacked"])
+    else:
+        body = lambda h, xs: unit(h, xs[0], xs[1], xs[2])
+        xs = (params["stacked"], cache["stacked"], contrib_body)
+    x, new_stacked = jax.lax.scan(body, x, xs)
+
+    new_rem = []
+    ri = plan.n_periods * spp
+    for j, spec in enumerate(plan.remainder_specs):
+        row = None
+        if contributed is not None and plan.remainder_sync[j]:
+            row = contributed[ri]
+            ri += 1
+        x, c = apply_layer_decode(
+            params["remainder"][j], cache["remainder"][j], x, cache_len,
+            dctx, 0, spec, config, sync=plan.remainder_sync[j],
+            backend=backend, moe_impl=moe_impl, contributed=row,
+        )
+        new_rem.append(c)
+    return x, {"stacked": new_stacked, "remainder": new_rem}
 
 
 # ---------------------------------------------------------------------------
@@ -338,8 +480,14 @@ class TransformerLM:
 
     # -- decode ------------------------------------------------------------------
 
-    def init_cache(self, batch: int, capacity: int) -> list:
+    def init_cache(
+        self, batch: int, capacity: int, *, plan: Optional[ScanPlan] = None
+    ):
+        """Decode caches: a per-layer list (loop mode), or — given a
+        :class:`ScanPlan` — the stacked scan form (see init_cache_scan)."""
         cfg = self.config
+        if plan is not None:
+            return init_cache_scan(cfg, plan, batch, capacity)
         dt = jnp.dtype(cfg.dtype)
         return [
             init_layer_cache(s, cfg, batch, capacity, dt) for s in cfg.layer_specs()
@@ -348,7 +496,7 @@ class TransformerLM:
     def decode_step(
         self,
         params: Params,
-        cache: list,
+        cache,
         tokens: jnp.ndarray,  # (B, S_new)
         cache_len,
         ctx: FedAttnContext,  # prefill-shaped context; converted internally
@@ -357,6 +505,8 @@ class TransformerLM:
         backend: Optional[str] = None,
         moe_impl: str = "dense",
         dctx: Optional[FedAttnContext] = None,
+        mode: str = "loop",
+        plan: Optional[ScanPlan] = None,
     ):
         """One autoregressive step. Returns (logits (B, S_new, V), new_cache).
 
@@ -364,24 +514,44 @@ class TransformerLM:
         capacity is taken from static shapes). Callers running a compiled
         multi-token loop pass ``dctx`` — a decode context advanced from
         ``ctx.decode_template(capacity)`` — to avoid rebuilding the context
-        from the prefill-shaped ``ctx`` at every unrolled trace."""
+        from the prefill-shaped ``ctx`` at every unrolled trace.
+
+        mode='scan' scans over the layer pattern instead of tracing every
+        layer: requires a :class:`ScanPlan` (periodic sync schedule), params
+        in scan form (``stack_params``) and the cache from
+        ``init_cache(..., plan=plan)``. Traced HLO is O(plan.period)."""
         cfg = self.config
         x = L.embed_tokens(params["embed"], tokens, cfg)
         if dctx is None:
             dctx = ctx.for_decode_step(_cache_capacity(cache), step)
-        new_cache = []
-        for m, (p, spec) in enumerate(zip(params["layers"], cfg.layer_specs())):
-            x, c = apply_layer_decode(
-                p, cache[m], x, cache_len, dctx, m, spec, cfg,
+        if mode == "scan":
+            if plan is None:
+                raise ValueError("decode_step(mode='scan') requires a ScanPlan")
+            x, new_cache = apply_layers_decode_scan(
+                params, cache, x, cache_len, dctx, cfg, plan,
                 backend=backend, moe_impl=moe_impl,
             )
-            new_cache.append(c)
+        elif mode == "loop":
+            new_cache = []
+            for m, (p, spec) in enumerate(zip(params["layers"], cfg.layer_specs())):
+                x, c = apply_layer_decode(
+                    p, cache[m], x, cache_len, dctx, m, spec, cfg,
+                    backend=backend, moe_impl=moe_impl,
+                )
+                new_cache.append(c)
+        else:
+            raise ValueError(f"unknown decode mode {mode!r}")
         x = L.apply_norm(params["final_norm"], x, cfg)
         logits = L.apply_lm_head(params["head"], params["embed"], x, cfg)
         return logits, new_cache
 
 
-def _cache_capacity(cache: list) -> int:
+def _cache_capacity(cache) -> int:
+    if isinstance(cache, dict):  # scan form
+        for c in list(cache["stacked"]) + list(cache["remainder"]):
+            if "k" in c:
+                return c["k"].shape[-3]  # (..., B, capacity, nkv, dh)
+        return 1
     for c in cache:
         if "k" in c:
             return c["k"].shape[1]
@@ -389,11 +559,21 @@ def _cache_capacity(cache: list) -> int:
     return 1
 
 
-def stack_params(params: Params, config: ModelConfig) -> Params:
+def stack_params(
+    params: Params, config: ModelConfig, period: Optional[int] = None
+) -> Params:
     """Convert loop-form params to scan-form: group layers by period and
-    stack leaves over the period axis → leading dim n_periods."""
-    period = len(config.pattern)
-    n_per = config.n_periods
+    stack leaves over the period axis → leading dim n_periods.
+
+    ``period`` defaults to the architecture's pattern period; a ScanPlan may
+    ask for a larger multiple (e.g. the sync interval on a homogeneous
+    stack) — it must divide the pattern body evenly."""
+    if period is None:
+        period = len(config.pattern)
+    n_body = config.n_periods * len(config.pattern)
+    if period <= 0 or n_body % period:
+        raise ValueError(f"period {period} does not divide the body ({n_body})")
+    n_per = n_body // period
     layers = params["layers"]
     body = layers[: n_per * period]
     remainder = layers[n_per * period:]

@@ -1,4 +1,4 @@
-"""FedAttn collaborative-inference engine.
+"""FedAttn collaborative-inference engine — compiled end to end.
 
 Implements the paper's full inference flow (§IV):
 
@@ -10,19 +10,47 @@ Implements the paper's full inference flow (§IV):
   2. **Decode**: the task publisher autoregressively extends from the final
      global token, attending per layer according to the same schedule.
 
-Decode runs on one of two drivers:
+With ``compile=True`` (default) both phases run as cached ``jax.jit``
+executables; ``compile=False`` keeps the original eager per-token /
+per-layer Python loops as the reference semantics (parity is pinned in
+``tests/test_engine_decode.py``).
 
-  * **compiled** (default): one ``jax.jit``-compiled ``lax.scan`` over all
-    remaining tokens. The KV cache has fixed capacity ``L + n_new`` so every
-    step is shape-stable; the FedAttn decode context is built ONCE from
-    :meth:`FedAttnContext.decode_template` and advanced inside the scan by
-    traced position arithmetic — no Python object churn per token. Compiled
-    functions are cached on the engine per (batch, lengths, sampling) key,
-    with all per-call arrays (partition segment ids, positions) passed as
-    traced arguments so a cached executable is never stale.
-  * **eager** (``compile=False``): the original per-token Python loop.
-    Reference semantics; `tests/test_engine_decode.py` pins greedy-token
-    and logit parity between the two drivers.
+Compiled-serving architecture
+-----------------------------
+* **Jitted prefill** — one fused forward seeds the whole KV cache by bulk
+  decode-writes and returns only the final-position logits (the LM head
+  runs on a single position, not all L). Everything that varies per call —
+  tokens, positions, segments, sparse-exchange contribution masks — is a
+  traced argument, so one executable serves any partition / rng / request
+  in the same shape bucket.
+* **Shape bucketing** — request length L and n_new are padded up to
+  power-of-two buckets (``bucket='pow2'``). Padded prefill tokens carry
+  segment ``-1``, the repo-wide padding sentinel (kernels pad with ``-2``):
+  the FedAttn visibility mask excludes them from every real query, and the
+  garbage they bulk-write into cache slots [L, Lp) sits strictly past the
+  decode write frontier, so the fixed-capacity causal convention masks it
+  until the slot is overwritten by a real generated token. Mixed request
+  lengths therefore share one executable per bucket — steady-state serving
+  does zero recompilation. L-bucketing auto-disables for SSM/hybrid stacks
+  (a recurrence would scan the padded suffix into its state); n_new
+  bucketing is always safe (extra steps happen after the kept tokens).
+  The trade-off is the classic one: up to ~2x padded work at the top of a
+  bucket (both the padded prefill and the discarded decode tail) in
+  exchange for executable reuse — ``bucket='none'`` opts out per engine.
+* **Scan-over-layers** — when the sync schedule is periodic over the layer
+  body (``ScanPlan.from_schedule``), prefill and decode lower as one
+  ``lax.scan`` over the repeating layer unit with stacked params and
+  stacked per-period KV caches: traced HLO is O(period), not O(n_layers),
+  so deep configs compile in near-constant time. ``layers_mode`` forces
+  'loop'/'scan'; the default picks scan whenever the plan applies. Note
+  the stacked params are a second resident copy of the weights (the
+  loop-form copy backs the eager reference path) — fine at reduced scale;
+  full-size serving should init directly in scan form
+  (``transformer.init_stacked``) and force ``layers_mode='scan'``.
+* **Executable caches** — ``_prefill_fns`` / ``_decode_fns`` are keyed on
+  the bucketed shapes only (never on partition content); the real length
+  enters the decode driver as a traced scalar. ``compile_counts`` exposes
+  the cache sizes to benchmarks/tests as the recompile metric.
 
 The engine also supports batched requests (same partition structure across
 the batch — the SPMD-friendly regime) and greedy or temperature sampling.
@@ -55,6 +83,13 @@ class GenerationResult:
     prefill_comm_bytes: float = 0.0  # per-participant KV upload (paper §VII-A3)
 
 
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
 class FedAttnEngine:
     """Greedy/sampling generation under the FedAttn protocol."""
 
@@ -65,26 +100,47 @@ class FedAttnEngine:
         *,
         fedattn: Optional[FedAttnConfig] = None,
         backend: Optional[str] = None,
+        bucket: str = "pow2",
+        layers_mode: Optional[str] = None,
     ):
+        """bucket: 'pow2' pads L/n_new to power-of-two buckets so mixed
+        request lengths share compiled executables; 'none' compiles per
+        exact shape. layers_mode: None (auto), 'loop', or 'scan'."""
         if config.is_encoder_decoder:
             raise NotImplementedError("engine currently drives decoder-only models")
+        if bucket not in ("pow2", "none"):
+            raise ValueError(f"unknown bucket policy {bucket!r}")
         self.config = config
         self.params = params
         self.fed = fedattn if fedattn is not None else config.fedattn
         self.model = build_model(config)
         self.backend = backend
-        # compiled decode drivers, keyed by (B, L, n_new, temperature, sampled)
+        self.bucket = bucket
+        self._schedule = self._build_schedule()
+        self._plan = T.ScanPlan.from_schedule(config, self._schedule)
+        if layers_mode not in (None, "loop", "scan"):
+            raise ValueError(f"unknown layers_mode {layers_mode!r}")
+        if layers_mode == "scan" and self._plan is None:
+            raise ValueError(
+                "layers_mode='scan' requires a sync schedule periodic over "
+                "the layer body (ScanPlan.from_schedule returned None)"
+            )
+        self.layers_mode = layers_mode or ("scan" if self._plan else "loop")
+        # bucketing L pads the *prefill* — a recurrence (mamba/rwkv) would
+        # scan the padded suffix into its carried state, so only pure-
+        # attention causal stacks bucket L; n_new always buckets (extra
+        # decode steps run after the kept tokens and are discarded)
+        self._bucket_L_ok = self.fed.causal and all(
+            s.kind == "attn" for s in config.layer_specs()
+        )
+        self._scan_params = None  # lazily stacked params for scan mode
+        # compiled drivers, keyed by bucketed shapes + sampling mode only
+        self._prefill_fns: dict = {}
         self._decode_fns: dict = {}
 
     # -- protocol setup ---------------------------------------------------------
 
-    def build_context(
-        self,
-        seq_len: int,
-        *,
-        partition: Optional[Partition] = None,
-        rng: Optional[jax.Array] = None,
-    ) -> FedAttnContext:
+    def _build_schedule(self):
         sched = schedule_from_config(self.config)
         if self.fed.schedule != "uniform":
             from repro.core.schedule import SyncSchedule
@@ -93,11 +149,101 @@ class FedAttnEngine:
                 self.fed.schedule, self.config.n_layers,
                 interval=self.fed.sync_interval,
             )
+        elif sched.n_syncs == 0:
+            # The pattern carries no structural sync flags (e.g. a plain
+            # homogeneous stack): 'uniform' then means every H-th layer, not
+            # LocAttn — previously this silently degenerated to zero sync
+            # layers, making sync_interval a no-op (want LocAttn? use
+            # schedule='none').
+            from repro.core.schedule import SyncSchedule
+
+            sched = SyncSchedule.uniform(
+                self.config.n_layers, self.fed.sync_interval
+            )
+        return sched
+
+    def build_context(
+        self,
+        seq_len: int,
+        *,
+        partition: Optional[Partition] = None,
+        rng: Optional[jax.Array] = None,
+    ) -> FedAttnContext:
         return FedAttnContext.build(
             self.fed, self.config.n_layers, seq_len,
             partition=partition or Partition.contiguous(seq_len, self.fed.n_participants),
-            schedule=sched, rng=rng,
+            schedule=self._schedule, rng=rng,
         )
+
+    def _proto_ctx(self, capacity: int) -> FedAttnContext:
+        """Decode-shaped context whose non-array fields (config, schedule)
+        the compiled drivers bake in; every array field is overridden by
+        traced per-call arguments. Built with full exchange so no rng is
+        needed (the real contribution masks arrive as traced args)."""
+        fed = self.fed.replace(kv_exchange_ratio=1.0)
+        ctx = FedAttnContext.build(
+            fed, self.config.n_layers, capacity,
+            partition=Partition.contiguous(capacity, fed.n_participants),
+            schedule=self._schedule,
+        )
+        return ctx.decode_template(capacity)
+
+    @property
+    def compile_counts(self) -> dict:
+        """Number of cached compiled drivers — the recompile metric."""
+        return {
+            "prefill": len(self._prefill_fns),
+            "decode": len(self._decode_fns),
+        }
+
+    def decode_trace_size(self, B: int, L: int, n_new: int, *, sampled: bool = False) -> int:
+        """Length of the decode driver's pretty-printed jaxpr — a proxy for
+        traced-HLO size. O(period) in scan mode (depth-independent),
+        O(n_layers) in loop mode; tests/benchmarks pin the scaling."""
+        Lp, Nb = self._bucket_len(L), self._bucket_new(n_new)
+        capacity = Lp + Nb
+        plan = self._plan if self.layers_mode == "scan" else None
+        cache = self.model.init_cache(B, capacity, plan=plan)
+        fn = self._decode_fn(B, capacity, Nb, sampled)
+        d0 = self.build_context(L).decode_template(capacity)
+        jaxpr = jax.make_jaxpr(fn)(
+            self._run_params(), cache, jnp.zeros((B,), jnp.int32),
+            jnp.int32(L), jax.random.key(0), jnp.float32(1.0),
+            d0.positions, d0.segments, d0.kv_positions, d0.kv_segments,
+        )
+        return len(str(jaxpr))
+
+    def _run_params(self):
+        """Params in the layout the compiled drivers consume."""
+        if self.layers_mode != "scan":
+            return self.params
+        if self._scan_params is None:
+            if "stacked" in self.params:
+                # already scan-form (init_stacked) — no second weight copy,
+                # but the stacking period must match the plan's
+                if self._plan.period != len(self.config.pattern):
+                    raise ValueError(
+                        "scan-form params are stacked by the pattern period "
+                        f"({len(self.config.pattern)}) but the schedule's "
+                        f"scan unit is {self._plan.period} layers; pass "
+                        "loop-form params and let the engine restack"
+                    )
+                self._scan_params = self.params
+            else:
+                self._scan_params = T.stack_params(
+                    self.params, self.config, self._plan.period
+                )
+        return self._scan_params
+
+    def _bucket_len(self, L: int) -> int:
+        if self.bucket == "pow2" and self._bucket_L_ok:
+            return _next_pow2(L)
+        return L
+
+    def _bucket_new(self, n_new: int) -> int:
+        if self.bucket == "pow2":
+            return _next_pow2(n_new)
+        return n_new
 
     # -- generation ---------------------------------------------------------------
 
@@ -114,30 +260,40 @@ class FedAttnEngine:
     ) -> GenerationResult:
         B, L = tokens.shape
         ctx = self.build_context(L, partition=partition, rng=rng)
-        capacity = L + n_new
+        sampled = temperature > 0.0 and rng is not None
 
-        # Prefill: run the full FedAttn forward once, rebuild the KV cache
-        # from per-layer projections by replaying decode writes in bulk.
-        cache = self.model.init_cache(B, capacity)
-        logits, cache = self._prefill(tokens, ctx, cache, extra_embeds)
+        if compile:
+            Lp = self._bucket_len(L)
+            Nb = self._bucket_new(n_new)
+            capacity = Lp + Nb
+            plan = self._plan if self.layers_mode == "scan" else None
+            cache = self.model.init_cache(B, capacity, plan=plan)
+            last, cache = self._prefill_compiled(
+                tokens, ctx, cache, extra_embeds, L, Lp, capacity
+            )
+        else:
+            capacity = L + n_new
+            cache = self.model.init_cache(B, capacity)
+            logits, cache = self._prefill(tokens, ctx, cache, extra_embeds)
+            last = logits[:, -1]
 
-        last = logits[:, -1]
         tok0 = self._sample(last, temperature, rng, 0)
         lp0 = _token_logprob(last, tok0)
-        sampled = temperature > 0.0 and rng is not None
         if n_new == 1:
             toks, lps = tok0[:, None], lp0[:, None]
         else:
             dctx0 = ctx.decode_template(capacity)
             if compile:
-                fn = self._decode_fn(B, L, n_new, sampled)
+                fn = self._decode_fn(B, capacity, Nb, sampled)
                 rng_arg = rng if rng is not None else jax.random.key(0)
                 rest_toks, rest_lps, cache = fn(
-                    self.params, cache, tok0, rng_arg,
+                    self._run_params(), cache, tok0, jnp.int32(L), rng_arg,
                     jnp.float32(max(temperature, 1e-6)),
                     dctx0.positions, dctx0.segments,
                     dctx0.kv_positions, dctx0.kv_segments,
                 )
+                rest_toks = rest_toks[:, : n_new - 1]
+                rest_lps = rest_lps[:, : n_new - 1]
             else:
                 rest_toks, rest_lps, cache = self._eager_decode(
                     cache, tok0, L, n_new, ctx, dctx0, temperature, rng
@@ -154,16 +310,30 @@ class FedAttnEngine:
             prefill_comm_bytes=comm,
         )
 
-    # -- internals ------------------------------------------------------------------
+    # -- prefill ------------------------------------------------------------------
+
+    def _round_of(self, layer: int) -> int:
+        """Communication-round index of the sync at ``layer`` — the single
+        numbering both the eager and the compiled prefill use (mirrors
+        FedAttnContext._round_of_layer on the engine's schedule)."""
+        return sum(1 for m in range(layer) if self._schedule.mask[m])
+
+    def _layer_contrib(self, ctx: FedAttnContext, layer: int, capacity: int):
+        """This layer's sparse-exchange row, padded to the cache capacity
+        (None at local layers / full exchange)."""
+        if ctx.contributed is None or not self._schedule.is_sync(layer):
+            return None
+        row = ctx.contributed[self._round_of(layer) % ctx.contributed.shape[0]]
+        return jnp.pad(row, (0, capacity - row.shape[0]), constant_values=False)
 
     def _prefill(self, tokens, ctx, cache, extra_embeds):
-        """Run the FedAttn forward and seed the cache by bulk decode-writes:
-        we recompute K/V per layer via the decode path on the whole prefix
-        (positions 0..L-1) in one call with S_new = L."""
+        """Eager reference prefill: run the FedAttn forward and seed the
+        cache by bulk decode-writes — the decode path with cache_len=0 and
+        S_new=L reproduces prefill attention exactly (identical visibility
+        masks, including the per-round sparse-exchange rows)."""
         B, L = tokens.shape
-        # Bulk write: decode path with cache_len=0 and S_new=L reproduces the
-        # prefill attention exactly (the visibility masks are identical).
-        dctx = ctx.for_decode_step(_capacity(cache), 0, n_new=L)
+        capacity = _capacity(cache)
+        dctx = ctx.for_decode_step(capacity, 0, n_new=L)
         dctx = dataclasses.replace(
             dctx,
             positions=ctx.positions,
@@ -173,33 +343,114 @@ class FedAttnEngine:
         x = self.model._embed(self.params, tokens, extra_embeds)
         for m, (p, spec) in enumerate(zip(self.params["layers"], cfg.layer_specs())):
             x, cache[m] = T.apply_layer_decode(
-                p, cache[m], x, 0, dctx, m, spec, cfg, backend=self.backend
+                p, cache[m], x, 0, dctx, m, spec, cfg, backend=self.backend,
+                contributed=self._layer_contrib(ctx, m, capacity),
             )
         x = LY.apply_norm(self.params["final_norm"], x, cfg)
         logits = LY.apply_lm_head(self.params["head"], self.params["embed"], x, cfg)
         return logits, cache
 
-    def _decode_fn(self, B: int, L: int, n_new: int, sampled: bool):
+    def _prefill_compiled(self, tokens, ctx, cache, extra_embeds, L, Lp, capacity):
+        """Pad the request into its bucket and run the jitted prefill.
+        Returns (last-position logits (B, V), seeded cache)."""
+        B = tokens.shape[0]
+        pad = Lp - L
+        if pad:
+            tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
+        q_pos = jnp.arange(Lp, dtype=jnp.int32)
+        q_seg = jnp.pad(ctx.segments, (0, pad), constant_values=-1)
+        dctx0 = ctx.for_decode_step(capacity, 0)
+        contrib = None
+        if ctx.contributed is not None:
+            contrib = jnp.pad(
+                ctx.contributed,
+                ((0, 0), (0, capacity - ctx.contributed.shape[1])),
+                constant_values=False,
+            )
+        n_rounds = None if contrib is None else contrib.shape[0]
+        fn = self._prefill_fn(B, Lp, capacity, n_rounds, extra_embeds is not None)
+        return fn(
+            self._run_params(), cache, tokens, jnp.int32(L),
+            q_pos, q_seg, dctx0.kv_positions, dctx0.kv_segments,
+            contrib, extra_embeds,
+        )
+
+    def _prefill_fn(self, B, Lp, capacity, n_rounds, has_extra):
+        """Build (or fetch) the jitted bucketed prefill.
+
+        The closure bakes in engine-invariant state only (config, schedule,
+        layers mode); tokens, the real length, position/segment vectors and
+        contribution masks are traced arguments — any request in the same
+        (B, Lp, capacity) bucket reuses the executable."""
+        key = (B, Lp, capacity, n_rounds, has_extra)
+        fn = self._prefill_fns.get(key)
+        if fn is not None:
+            return fn
+
+        model, backend, cfg = self.model, self.backend, self.config
+        schedule, plan = self._schedule, self._plan
+        scan = self.layers_mode == "scan"
+        proto = self._proto_ctx(capacity)
+        round_of = [self._round_of(m) for m in range(cfg.n_layers)]
+
+        def run(params, cache, tokens, real_len, q_pos, q_seg, kv_pos, kv_seg,
+                contributed, extra):
+            dctx = dataclasses.replace(
+                proto, positions=q_pos, segments=q_seg,
+                kv_positions=kv_pos, kv_segments=kv_seg, contributed=None,
+            )
+            x = model._embed(params, tokens, extra)
+            if scan:
+                x, cache = T.apply_layers_decode_scan(
+                    params, cache, x, 0, dctx, cfg, plan,
+                    backend=backend, contributed=contributed,
+                )
+            else:
+                for m, (p, spec) in enumerate(zip(params["layers"], cfg.layer_specs())):
+                    row = None
+                    if contributed is not None and schedule.is_sync(m):
+                        row = contributed[round_of[m] % n_rounds]
+                    x, cache[m] = T.apply_layer_decode(
+                        p, cache[m], x, 0, dctx, m, spec, cfg,
+                        backend=backend, contributed=row,
+                    )
+            # LM head on the last real position only (L may be < Lp)
+            x = jax.lax.dynamic_slice_in_dim(x, real_len - 1, 1, axis=1)
+            x = LY.apply_norm(params["final_norm"], x, cfg)
+            logits = LY.apply_lm_head(params["head"], params["embed"], x, cfg)
+            return logits[:, 0], cache
+
+        donate = (1,) if jax.default_backend() != "cpu" else ()
+        fn = jax.jit(run, donate_argnums=donate)
+        self._prefill_fns[key] = fn
+        return fn
+
+    # -- decode -------------------------------------------------------------------
+
+    def _decode_fn(self, B: int, capacity: int, n_steps: int, sampled: bool):
         """Build (or fetch) the jitted multi-token decode driver.
 
         The closure only bakes in engine-invariant state (model config,
-        sync schedule, backend) plus the static key (shapes, sampling mode).
-        Everything that varies call-to-call — params, cache, first token,
-        rng, temperature, and the decode-context vectors derived from the
+        sync schedule, layers mode, backend) plus the static key (bucketed
+        shapes, sampling mode). Everything that varies call-to-call —
+        params, cache, first token, the real prefill length, rng,
+        temperature, and the decode-context vectors derived from the
         partition — is a traced argument, so reusing a cached executable is
-        always sound and sweeping the temperature never recompiles.
-        """
-        key = (B, L, n_new, sampled)
+        always sound: sweeping the temperature, the partition, or any L in
+        the bucket never recompiles."""
+        key = (B, capacity, n_steps, sampled)
         fn = self._decode_fns.get(key)
         if fn is not None:
             return fn
 
         model, backend = self.model, self.backend
-        # Proto context: carries the engine-fixed config/schedule objects the
-        # layers consult; its array fields are all overridden below.
-        proto = self.build_context(L).decode_template(L + n_new)
+        mode, plan = self.layers_mode, self._plan
+        # Proto context: engine-fixed config/schedule objects; array fields
+        # are all overridden below.
+        proto = self._proto_ctx(capacity)
 
-        def run(params, cache, tok0, rng, temp, q_pos0, q_seg, kv_pos, kv_seg):
+        def run(params, cache, tok0, real_len, rng, temp,
+                q_pos0, q_seg, kv_pos, kv_seg):
             tpl = dataclasses.replace(
                 proto, positions=q_pos0, segments=q_seg,
                 kv_positions=kv_pos, kv_segments=kv_seg, contributed=None,
@@ -209,8 +460,9 @@ class FedAttnEngine:
                 cache, tok = carry
                 dctx = dataclasses.replace(tpl, positions=q_pos0 + step)
                 logits, cache = model.decode_step(
-                    params, cache, tok[:, None], L + step, tpl, step=step,
-                    backend=backend, dctx=dctx,
+                    params, cache, tok[:, None], real_len + step, tpl,
+                    step=step, backend=backend, dctx=dctx, mode=mode,
+                    plan=plan,
                 )
                 nxt_logits = logits[:, -1]
                 if sampled:
@@ -223,9 +475,9 @@ class FedAttnEngine:
                 return (cache, nxt), (nxt, _token_logprob(nxt_logits, nxt))
 
             (cache, _), (toks, lps) = jax.lax.scan(
-                body, (cache, tok0), jnp.arange(n_new - 1)
+                body, (cache, tok0), jnp.arange(n_steps - 1)
             )
-            return toks.T, lps.T, cache  # (B, n_new-1) each
+            return toks.T, lps.T, cache  # (B, n_steps-1) each
 
         # Donate the cache so the compiled step updates it in place
         # (donation is a no-op warning on CPU — skip it there).

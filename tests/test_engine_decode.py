@@ -1,7 +1,10 @@
-"""Engine decode drivers: the jitted lax.scan fast path must reproduce the
-eager per-token reference exactly (greedy tokens) / to float tolerance
-(logprobs), across FedAttn schedules, participant counts and sparse KV
-exchange. Also pins the GenerationResult.logprobs contract."""
+"""Engine serving drivers: the compiled path (jitted shape-bucketed prefill
+plus the jitted lax.scan decode driver, loop- or scan-over-layers) must
+reproduce the eager per-token reference exactly (greedy tokens) / to float
+tolerance (logprobs), across FedAttn schedules, participant counts, sparse
+KV exchange and windowed layers. Also pins the bucketed executable-cache
+contract (zero recompiles within a bucket) and the O(period) trace-size
+scaling of scan mode. Pins the GenerationResult.logprobs contract."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,11 +17,11 @@ from repro.types import FedAttnConfig, LayerSpec
 B, L, N_NEW = 2, 24, 8
 
 
-def _engine(cfg):
+def _engine(cfg, **kw):
     from repro.models import build_model
 
     params = build_model(cfg).init(jax.random.key(0))
-    return FedAttnEngine(cfg, params)
+    return FedAttnEngine(cfg, params, **kw)
 
 
 @pytest.fixture(scope="module")
@@ -102,6 +105,140 @@ def test_n_new_1_shapes(default_engine):
     res = eng.generate(_tokens(cfg), 1)
     assert res.tokens.shape == (B, 1)
     assert res.logprobs.shape == (B, 1)
+
+
+def _schedule_cfgs():
+    """The three schedule regimes the compiled prefill must match eager on."""
+    return {
+        "multiparticipant": (tiny_config(), None),
+        "sparse_kv": (
+            tiny_config(
+                fedattn=FedAttnConfig(
+                    n_participants=4, sync_interval=2,
+                    kv_exchange_ratio=0.5, kv_selection="random",
+                ),
+            ),
+            jax.random.key(7),
+        ),
+        "windowed": (
+            tiny_config(pattern=(LayerSpec(window=8), LayerSpec(sync=True)), n_layers=4),
+            None,
+        ),
+    }
+
+
+@pytest.mark.parametrize("regime", ["multiparticipant", "sparse_kv", "windowed"])
+def test_prefill_parity_jit_vs_eager(regime):
+    """n_new=1 isolates the prefill: the jitted shape-bucketed prefill (L=24
+    padded into the 32-bucket with segment -1 sentinels) must reproduce the
+    eager per-layer loop's final-position logits distribution."""
+    cfg, rng = _schedule_cfgs()[regime]
+    eng = _engine(cfg)
+    toks = _tokens(cfg)
+    r_jit = eng.generate(toks, 1, rng=rng)
+    r_eager = eng.generate(toks, 1, rng=rng, compile=False)
+    np.testing.assert_array_equal(r_jit.tokens, r_eager.tokens)
+    np.testing.assert_allclose(
+        r_jit.logprobs, r_eager.logprobs, atol=1e-4, rtol=1e-4
+    )
+    assert eng.compile_counts["prefill"] == 1
+
+
+def _deep_cfg(**fed_kw):
+    """Period-2 pattern, 8 layers, periodic schedule — scan-plan eligible."""
+    return tiny_config(
+        n_layers=8,
+        pattern=(LayerSpec(), LayerSpec(sync=True)),
+        fedattn=FedAttnConfig(n_participants=4, sync_interval=2, **fed_kw),
+    )
+
+
+@pytest.mark.parametrize("regime", ["plain", "sparse_kv", "windowed"])
+def test_scan_vs_loop_decode_parity(regime):
+    """Scan-over-layers (stacked params + stacked per-period KV caches) must
+    match the loop lowering and the eager reference across schedules."""
+    from repro.models import build_model
+
+    if regime == "sparse_kv":
+        cfg = _deep_cfg(kv_exchange_ratio=0.5, kv_selection="strided")
+    elif regime == "windowed":
+        cfg = tiny_config(
+            n_layers=8,
+            pattern=(LayerSpec(window=8), LayerSpec(sync=True)),
+            fedattn=FedAttnConfig(n_participants=4, sync_interval=2),
+        )
+    else:
+        cfg = _deep_cfg()
+    params = build_model(cfg).init(jax.random.key(0))
+    eng_scan = FedAttnEngine(cfg, params)  # auto resolves to scan
+    eng_loop = FedAttnEngine(cfg, params, layers_mode="loop")
+    assert eng_scan.layers_mode == "scan"
+    toks = _tokens(cfg)
+    rng = jax.random.key(7)
+    r_scan = eng_scan.generate(toks, N_NEW, rng=rng)
+    r_loop = eng_loop.generate(toks, N_NEW, rng=rng)
+    r_eager = eng_loop.generate(toks, N_NEW, rng=rng, compile=False)
+    np.testing.assert_array_equal(r_scan.tokens, r_eager.tokens)
+    np.testing.assert_array_equal(r_loop.tokens, r_eager.tokens)
+    np.testing.assert_allclose(
+        r_scan.logprobs, r_eager.logprobs, atol=1e-4, rtol=1e-4
+    )
+
+
+def test_bucket_reuse_no_recompile():
+    """Two requests with different L in the same pow2 bucket (and different
+    n_new in the same bucket) must share the compiled executables — zero new
+    cache entries on the second call — while staying exact vs eager."""
+    cfg = tiny_config()
+    eng = _engine(cfg)
+    toks24 = _tokens(cfg)
+    eng.generate(toks24, 5)  # L=24→32 bucket, n_new=5→8 bucket
+    assert eng.compile_counts == {"prefill": 1, "decode": 1}
+    toks28 = jax.random.randint(jax.random.key(2), (B, 28), 0, cfg.vocab_size)
+    r28 = eng.generate(toks28, N_NEW)  # L=28→same bucket, n_new=8→same
+    assert eng.compile_counts == {"prefill": 1, "decode": 1}  # no recompile
+    r28_eager = eng.generate(toks28, N_NEW, compile=False)
+    np.testing.assert_array_equal(r28.tokens, r28_eager.tokens)
+    np.testing.assert_allclose(
+        r28.logprobs, r28_eager.logprobs, atol=1e-4, rtol=1e-4
+    )
+    # out-of-bucket length compiles a fresh prefill executable
+    toks40 = jax.random.randint(jax.random.key(3), (B, 40), 0, cfg.vocab_size)
+    eng.generate(toks40, N_NEW)
+    assert eng.compile_counts["prefill"] == 2
+
+
+def test_bucket_none_policy_exact_shapes():
+    cfg = tiny_config()
+    eng = _engine(cfg, bucket="none")
+    eng.generate(_tokens(cfg), N_NEW)
+    toks28 = jax.random.randint(jax.random.key(2), (B, 28), 0, cfg.vocab_size)
+    r = eng.generate(toks28, N_NEW)
+    assert eng.compile_counts["prefill"] == 2  # exact-shape policy recompiles
+    r_eager = eng.generate(toks28, N_NEW, compile=False)
+    np.testing.assert_array_equal(r.tokens, r_eager.tokens)
+
+
+def test_scan_decode_trace_size_is_O_period():
+    """Acceptance: the compiled decode driver for a periodic schedule traces
+    the layer pattern once — doubling n_layers must not grow the trace
+    (O(period)), while the loop lowering's trace is O(n_layers)."""
+    from repro.models import build_model
+
+    def eng_for(n_layers, mode):
+        cfg = tiny_config(
+            n_layers=n_layers,
+            pattern=(LayerSpec(), LayerSpec(sync=True)),
+            fedattn=FedAttnConfig(n_participants=4, sync_interval=2),
+        )
+        params = build_model(cfg).init(jax.random.key(0))
+        return FedAttnEngine(cfg, params, layers_mode=mode)
+
+    s8 = eng_for(8, "scan").decode_trace_size(B, L, N_NEW)
+    s16 = eng_for(16, "scan").decode_trace_size(B, L, N_NEW)
+    l16 = eng_for(16, "loop").decode_trace_size(B, L, N_NEW)
+    assert s16 < 1.2 * s8, f"scan trace grew with depth: {s8} -> {s16}"
+    assert l16 > 2.0 * s16, f"scan trace not smaller than loop: {s16} vs {l16}"
 
 
 def test_compiled_driver_cached_and_partition_safe():

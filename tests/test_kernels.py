@@ -174,3 +174,59 @@ def test_mamba_state_continuation():
     )
     np.testing.assert_allclose(np.asarray(y_full[:, 16:]), np.asarray(y2), atol=1e-5)
     np.testing.assert_allclose(np.asarray(h_full), np.asarray(h2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunked (xla) attention — clamp + sentinel conventions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [2048, 64, 100])
+def test_chunked_attention_chunk_clamp(chunk):
+    """chunk > Lk must not over-pad the KV (the decode default chunk=2048 on
+    a short cache used to pad it to a full chunk); all chunk settings match
+    the oracle and keep the internal padding below one clamped chunk."""
+    from repro.kernels.ops import _chunked_attention
+
+    B, Lq, Lk, nq, nkv, dh = 1, 8, 128, 4, 2, 16
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (B, Lq, nq, dh))
+    k = jax.random.normal(ks[1], (B, Lk, nkv, dh))
+    v = jax.random.normal(ks[2], (B, Lk, nkv, dh))
+    q_pos = jnp.arange(Lk - Lq, Lk)
+    kv_pos = jnp.arange(Lk)
+    seg = jnp.repeat(jnp.arange(4), Lk // 4)
+    out = _chunked_attention(
+        q, k, v, q_pos=q_pos, kv_pos=kv_pos, q_seg=seg[-Lq:], kv_seg=seg,
+        causal=True, local_only=True, contributed=None, window=None,
+        soft_cap=None, sm_scale=None, chunk=chunk,
+    )
+    want = ref.attention_ref(
+        q, k, v, q_pos=q_pos, kv_pos=kv_pos, q_seg=seg[-Lq:], kv_seg=seg,
+        local_only=True,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
+def test_negative_kv_segments_are_padding_sentinels():
+    """kv_seg < 0 marks bucketing padding: those slots must be invisible in
+    BOTH phases (sync layers included — position sentinels aside)."""
+    B, Lk, nq, nkv, dh = 1, 32, 2, 2, 16
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (B, 1, nq, dh))
+    k = jax.random.normal(ks[1], (B, Lk, nkv, dh))
+    v = jax.random.normal(ks[2], (B, Lk, nkv, dh))
+    kv_pos = jnp.arange(Lk)
+    q_pos = jnp.array([Lk - 1])
+    q_seg = jnp.array([0])
+    kv_seg_clean = jnp.zeros((Lk,), jnp.int32)
+    # same positions, but the last 8 slots marked as padding with garbage KV
+    kv_seg_pad = kv_seg_clean.at[24:].set(-1)
+    want = ref.attention_ref(
+        q, k[:, :24], v[:, :24], q_pos=q_pos, kv_pos=kv_pos[:24],
+        q_seg=q_seg, kv_seg=kv_seg_clean[:24],
+    )
+    got = ref.attention_ref(
+        q, k, v, q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg, kv_seg=kv_seg_pad
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-6)

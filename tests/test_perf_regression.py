@@ -1,0 +1,65 @@
+"""Throughput regression floors for the compiled serving path (slow-marked;
+run with `-m slow`). benchmarks/decode_throughput.py observes ~30-90x and
+benchmarks/prefill_throughput.py ~6-10x on a 2-vCPU container — the floors
+here (3x decode, 2x prefill) are deliberately conservative so the test
+fails only on a real regression (e.g. the compiled driver silently falling
+back to eager or recompiling per call), not on machine noise."""
+import time
+
+import jax
+import pytest
+
+from conftest import tiny_config
+from repro.serving import FedAttnEngine
+from repro.types import FedAttnConfig, LayerSpec
+
+
+def _engine():
+    from repro.models import build_model
+
+    cfg = tiny_config(
+        n_layers=8,
+        d_model=128,
+        pattern=(LayerSpec(), LayerSpec(sync=True)),
+        fedattn=FedAttnConfig(n_participants=4, sync_interval=2),
+    )
+    params = build_model(cfg).init(jax.random.key(0))
+    return cfg, FedAttnEngine(cfg, params)
+
+
+def _best(fn, reps):
+    """Best-of-reps wall time — robust to scheduler noise on small boxes."""
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+@pytest.mark.slow
+def test_compiled_decode_at_least_3x_eager():
+    cfg, eng = _engine()
+    toks = jax.random.randint(jax.random.key(1), (2, 48), 0, cfg.vocab_size)
+    n_new = 32
+    eng.generate(toks, n_new)  # compile warmup
+    t_jit = _best(lambda: eng.generate(toks, n_new), reps=3)
+    t_eager = _best(lambda: eng.generate(toks, n_new, compile=False), reps=1)
+    assert eng.compile_counts == {"prefill": 1, "decode": 1}
+    assert t_eager / t_jit >= 3.0, (
+        f"compiled decode only {t_eager / t_jit:.1f}x eager "
+        f"(jit {t_jit*1e3:.1f}ms vs eager {t_eager*1e3:.1f}ms)"
+    )
+
+
+@pytest.mark.slow
+def test_compiled_prefill_at_least_2x_eager():
+    cfg, eng = _engine()
+    toks = jax.random.randint(jax.random.key(1), (2, 48), 0, cfg.vocab_size)
+    eng.generate(toks, 1)  # compile warmup (n_new=1 isolates the prefill)
+    t_jit = _best(lambda: eng.generate(toks, 1), reps=3)
+    t_eager = _best(lambda: eng.generate(toks, 1, compile=False), reps=2)
+    assert t_eager / t_jit >= 2.0, (
+        f"compiled prefill only {t_eager / t_jit:.1f}x eager "
+        f"(jit {t_jit*1e3:.1f}ms vs eager {t_eager*1e3:.1f}ms)"
+    )
