@@ -29,13 +29,16 @@ import traceback
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
 
 # modules whose main() returns serving-perf records for BENCH_serving.json
-SERVING_MODULES = ("decode_throughput", "prefill_throughput")
+SERVING_MODULES = (
+    "decode_throughput", "prefill_throughput", "serving_throughput"
+)
 
 MODULES = [
     ("comm_cost", "comm-cost model (SVII-A3)"),
     ("kernel_bench", "kernel microbenchmarks"),
     ("decode_throughput", "engine decode tokens/sec: eager vs jitted"),
     ("prefill_throughput", "engine prefill latency: eager vs jitted+bucketed"),
+    ("serving_throughput", "continuous batching vs sequential generate"),
     ("fig5_quality_vs_h", "Fig.5 quality vs H + comm"),
     ("fig6_quality_vs_n", "Fig.6 quality vs N + compute"),
     ("fig7_sync_schedules", "Fig.7 sync schemes"),

@@ -107,6 +107,9 @@ class FedAttnContext:
     config: FedAttnConfig
     schedule: SyncSchedule
     partition: Partition
+    # Query-side vectors. 1-D (L,) normally; a pooled decode step (serving/
+    # scheduler.py) carries per-slot rows — (B, S) positions/segments and
+    # (B, capacity) kv vectors — which visibility()/the kernels broadcast.
     positions: jnp.ndarray  # (L,) global positions of the current q tokens
     segments: jnp.ndarray  # (L,) participant ids of the current q tokens
     # Per-round contribution masks for sparse KV exchange: (T, L) bool, or
@@ -248,18 +251,30 @@ class FedAttnContext:
         L0 = self.partition.seq_len
         q_pos = jnp.arange(n_new, dtype=jnp.int32) + (L0 + step)
         q_seg = jnp.full((n_new,), pub, dtype=jnp.int32)
-        n_gen = cache_len - L0
-        kv_pos = jnp.arange(cache_len, dtype=jnp.int32)
-        kv_seg = jnp.concatenate(
-            [self.partition.segment_ids, jnp.full((max(n_gen, 0),), pub, jnp.int32)]
-        )[:cache_len]
         return replace(
             self,
             positions=q_pos,
             segments=q_seg,
-            kv_positions=kv_pos,
-            kv_segments=kv_seg,
+            kv_positions=jnp.arange(cache_len, dtype=jnp.int32),
+            kv_segments=self.decode_kv_segments(cache_len),
         )
+
+    def decode_kv_segments(self, capacity: int) -> jnp.ndarray:
+        """Step-invariant KV-side segment vector of a fixed-capacity decode
+        cache: prompt slots keep their partition's participant ids; every
+        slot past the prompt belongs to the publisher (generated text is
+        owned by the task publisher, §IV-C). Used by single-request decode
+        (:meth:`for_decode_step`) and by the continuous-batching slot pool,
+        where each pool row carries its occupant request's vector — the
+        per-slot contexts differ only in these arrays, so one compiled
+        decode step serves heterogeneous offsets/partitions by taking them
+        as traced (B, capacity) arguments."""
+        pub = self.partition.publisher(self.config.publisher_index)
+        L0 = self.partition.seq_len
+        n_gen = capacity - L0
+        return jnp.concatenate(
+            [self.partition.segment_ids, jnp.full((max(n_gen, 0),), pub, jnp.int32)]
+        )[:capacity]
 
     def decode_template(self, capacity: int) -> "FedAttnContext":
         """Step-0 single-token decode context over a fixed-capacity cache.

@@ -63,8 +63,17 @@ def attention(
     backend: Optional[str] = None,
     chunk: int = 512,
 ) -> jnp.ndarray:
-    """FedAttn-aware multi-head attention. Shapes as attention_ref."""
+    """FedAttn-aware multi-head attention. Shapes as attention_ref; the
+    position/segment vectors may be per batch row (2-D) — continuous-batching
+    decode against a slot pool — which the ref and xla backends support
+    natively (the Pallas kernel does not yet; batched calls fall back to the
+    chunked xla path)."""
     backend = backend or _DEFAULT_BACKEND
+    batched_vecs = any(
+        a is not None and a.ndim == 2 for a in (q_pos, kv_pos, q_seg, kv_seg)
+    )
+    if backend == "pallas" and batched_vecs:
+        backend = "xla"
     if backend == "ref" or (backend == "xla" and q.shape[1] * k.shape[1] <= 256 * 256):
         return _ref.attention_ref(
             q, k, v, q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg, kv_seg=kv_seg,
@@ -97,6 +106,10 @@ def _chunked_attention(
     ``chunk`` is clamped to Lk first — otherwise a short KV (e.g. a 128-slot
     decode cache under the decode default chunk=2048) would be padded up to
     a full chunk, wasting 16x the attention FLOPs/memory on masked slots.
+
+    Position/segment vectors may be per batch row (2-D); padding and chunk
+    slicing then run along the last axis and the per-chunk mask carries a
+    batch dim (see kernels.ref.visibility_mask).
     """
     B, Lq, nq, dh = q.shape
     _, Lk, nkv, _ = k.shape
@@ -106,13 +119,16 @@ def _chunked_attention(
     chunk = max(1, min(chunk, Lk))
     pad = (-Lk) % chunk
     if pad:
+        padv = lambda a, val: jnp.pad(
+            a, [(0, 0)] * (a.ndim - 1) + [(0, pad)], constant_values=val
+        )
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+        kv_pos = padv(kv_pos, jnp.iinfo(jnp.int32).max)
         if kv_seg is not None:
-            kv_seg = jnp.pad(kv_seg, (0, pad), constant_values=-2)
+            kv_seg = padv(kv_seg, -2)
         if contributed is not None:
-            contributed = jnp.pad(contributed, (0, pad), constant_values=False)
+            contributed = padv(contributed, False)
     assert k.shape[1] == Lk + pad and pad < chunk, (
         f"over-padded KV: Lk={Lk} chunk={chunk} padded={k.shape[1]}"
     )
@@ -122,7 +138,10 @@ def _chunked_attention(
 
     def kv_chunk(i):
         sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * chunk, chunk, axis=1)
-        sv = lambda a: jax.lax.dynamic_slice_in_dim(a, i * chunk, chunk, axis=0)
+        # pos/seg vectors: chunk along the (last) KV axis, shared or per-row
+        sv = lambda a: jax.lax.dynamic_slice_in_dim(
+            a, i * chunk, chunk, axis=a.ndim - 1
+        )
         kc, vc = sl(k), sl(v)
         posc = sv(kv_pos)
         segc = sv(kv_seg) if kv_seg is not None else None
@@ -137,27 +156,14 @@ def _chunked_attention(
         s = jnp.einsum("bqhd,bkhd->bhqk", qf, kcf)  # (B,nq,Lq,chunk)
         if soft_cap:
             s = jnp.tanh(s / soft_cap) * soft_cap
-        mask = jnp.ones((Lq, chunk), bool)
-        if causal:
-            mask &= q_pos[:, None] >= posc[None, :]
-        else:
-            mask &= posc[None, :] < jnp.iinfo(jnp.int32).max  # drop padding
-        if window is not None:
-            mask &= (q_pos[:, None] - posc[None, :]) < window
-        if q_seg is not None and segc is not None:
-            # negative kv segments are padding sentinels (bucketed prefill
-            # pads with -1; this kernel's own chunk padding uses -2) — never
-            # visible regardless of sync phase
-            mask &= segc[None, :] >= 0
-            same = q_seg[:, None] == segc[None, :]
-            if local_only:
-                mask &= same
-            elif contc is not None:
-                mask &= same | contc[None, :]
-        s = jnp.where(mask[None, None], s, NEG_INF)
+        mask = _ref.visibility_mask(
+            q_pos, posc, q_seg, segc, causal=causal, local_only=local_only,
+            contributed=contc, window=window,
+        )  # (Bm, Lq, chunk), Bm ∈ {1, B}
+        s = jnp.where(mask[:, None], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
-        p = jnp.where(mask[None, None], p, 0.0)
+        p = jnp.where(mask[:, None], p, 0.0)
         corr = jnp.exp(m - m_new)
         l_new = l * corr + jnp.sum(p, axis=-1)
         acc = acc * corr.transpose(0, 2, 1)[..., None] + jnp.einsum(

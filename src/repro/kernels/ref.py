@@ -19,6 +19,51 @@ NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 # ---------------------------------------------------------------------------
 
 
+def visibility_mask(
+    q_pos: jnp.ndarray,  # (Lq,) or (B, Lq)
+    kv_pos: jnp.ndarray,  # (Lk,) or (B, Lk)
+    q_seg: Optional[jnp.ndarray] = None,  # (Lq,) or (B, Lq)
+    kv_seg: Optional[jnp.ndarray] = None,  # (Lk,) or (B, Lk)
+    *,
+    causal: bool = True,
+    local_only: bool = False,
+    contributed: Optional[jnp.ndarray] = None,  # (Lk,) or (B, Lk)
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """FedAttn visibility as a (Bm, Lq, Lk) bool mask.
+
+    Every position/segment vector may be shared across the batch (1-D) or
+    per batch row (2-D — continuous-batching decode, where each KV-pool slot
+    sits at its own offset with its own partition); ``Bm`` is the broadcast
+    of the leading dims (1 when everything is shared, so the mask collapses
+    to the classic (1, Lq, Lk) form).
+
+    Padding sentinels: kv_pos == int32 max (kernel chunk padding) and
+    kv_seg < 0 (bucketed-prefill -1 / kernel -2 / inactive pool slots) are
+    never visible.
+    """
+    as2 = lambda a: a if a.ndim == 2 else a[None]
+    qp, kp = as2(q_pos), as2(kv_pos)
+    if causal:
+        mask = qp[:, :, None] >= kp[:, None, :]
+    else:
+        mask = jnp.broadcast_to(
+            kp[:, None, :] < jnp.iinfo(jnp.int32).max,
+            (max(qp.shape[0], kp.shape[0]), qp.shape[1], kp.shape[1]),
+        )
+    if window is not None:
+        mask &= (qp[:, :, None] - kp[:, None, :]) < window
+    if q_seg is not None and kv_seg is not None:
+        qs, ks = as2(q_seg), as2(kv_seg)
+        mask &= ks[:, None, :] >= 0
+        same = qs[:, :, None] == ks[:, None, :]
+        if local_only:
+            mask &= same
+        elif contributed is not None:
+            mask &= same | as2(contributed)[:, None, :]
+    return mask
+
+
 def attention_ref(
     q: jnp.ndarray,  # (B, Lq, nq, dh)
     k: jnp.ndarray,  # (B, Lk, nkv, dh)
@@ -35,7 +80,10 @@ def attention_ref(
     soft_cap: Optional[float] = None,
     sm_scale: Optional[float] = None,
 ) -> jnp.ndarray:
-    """Masked multi-head attention oracle, returns (B, Lq, nq, dh)."""
+    """Masked multi-head attention oracle, returns (B, Lq, nq, dh).
+
+    Position/segment vectors may be shared (1-D) or per batch row (2-D) —
+    see :func:`visibility_mask`."""
     B, Lq, nq, dh = q.shape
     _, Lk, nkv, _ = k.shape
     assert nq % nkv == 0
@@ -52,25 +100,15 @@ def attention_ref(
     if soft_cap:
         logits = jnp.tanh(logits / soft_cap) * soft_cap
 
-    mask = jnp.ones((Lq, Lk), dtype=bool)
-    if causal:
-        mask &= q_pos[:, None] >= kv_pos[None, :]
-    if window is not None:
-        mask &= (q_pos[:, None] - kv_pos[None, :]) < window
-    if q_seg is not None and kv_seg is not None:
-        # negative kv segments are padding sentinels (shape-bucketed prefill
-        # pads with -1, chunked/flash kernels pad with -2) — never visible
-        mask &= kv_seg[None, :] >= 0
-        same = q_seg[:, None] == kv_seg[None, :]
-        if local_only:
-            mask &= same
-        elif contributed is not None:
-            mask &= same | contributed[None, :]
-    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    mask = visibility_mask(
+        q_pos, kv_pos, q_seg, kv_seg, causal=causal, local_only=local_only,
+        contributed=contributed, window=window,
+    )  # (Bm, Lq, Lk), Bm ∈ {1, B}
+    logits = jnp.where(mask[:, None], logits, NEG_INF)
     # Guard fully-masked rows (softmax of all -inf → zeros, not NaN).
     probs = jax.nn.softmax(logits, axis=-1)
-    any_vis = jnp.any(mask, axis=-1)  # (Lq,)
-    probs = jnp.where(any_vis[None, None, :, None], probs, 0.0)
+    any_vis = jnp.any(mask, axis=-1)  # (Bm, Lq)
+    probs = jnp.where(any_vis[:, None, :, None], probs, 0.0)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
     return out.astype(q.dtype)
 

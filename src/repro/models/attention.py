@@ -166,14 +166,28 @@ def attention_decode_block(
     """Decode-step attention against the cache; writes the new KV in-place
     (dynamic_update_slice) and returns (y, k_cache, v_cache).
 
+    ``cache_len`` may be a scalar (whole batch at one frontier — classic
+    generate) or a (B,) vector (continuous batching: every slot of the KV
+    pool sits at its own write frontier; rows are scattered independently,
+    and out-of-bounds rows — retired slots coasting past their capacity —
+    are dropped by scatter semantics). With a vector ``cache_len``, the
+    context's position/segment vectors are per-row too ((B, S_new) /
+    (B, capacity)).
+
     ``contributed`` is the (capacity,)-shaped sparse-KV-exchange mask for
     this layer's communication round — only set during bulk prefill-via-
     decode at sync layers (single-token decode attends the full cache)."""
     theta = _rope_theta_for(spec, config)
     q, k_new, v_new = _project_qkv(p, x, config, ctx.positions, theta)
     S_new = x.shape[1]
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), cache_len, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), cache_len, axis=1)
+    if jnp.ndim(cache_len) == 1:
+        rows = jnp.arange(x.shape[0])[:, None]
+        cols = cache_len[:, None] + jnp.arange(S_new)[None, :]
+        k_cache = k_cache.at[rows, cols].set(k_new.astype(k_cache.dtype))
+        v_cache = v_cache.at[rows, cols].set(v_new.astype(v_cache.dtype))
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), cache_len, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), cache_len, axis=1)
     if sync is None:
         sync = ctx.schedule.is_sync(layer_idx)
 

@@ -516,6 +516,13 @@ class TransformerLM:
         ``ctx.decode_template(capacity)`` — to avoid rebuilding the context
         from the prefill-shaped ``ctx`` at every unrolled trace.
 
+        Continuous batching: ``cache_len`` may also be a traced (B,) vector
+        — each batch row (KV-pool slot) writes at its own frontier — in
+        which case ``dctx`` must carry per-row (B, S_new) positions/segments
+        and (B, capacity) kv_segments (see serving/scheduler.py). Works in
+        both ``loop`` and ``scan`` modes; the vector just rides through
+        apply_layer_decode into the per-row cache scatter.
+
         mode='scan' scans over the layer pattern instead of tracing every
         layer: requires a :class:`ScanPlan` (periodic sync schedule), params
         in scan form (``stack_params``) and the cache from

@@ -1,5 +1,12 @@
-"""Serving: FedAttn collaborative-inference engine (prefill + decode)."""
+"""Serving: FedAttn collaborative-inference engine (prefill + decode) and
+the continuous-batching scheduler (slot-pool request interleaving)."""
 
 from repro.serving.engine import FedAttnEngine, GenerationResult
+from repro.serving.scheduler import ContinuousBatchingScheduler, Request
 
-__all__ = ["FedAttnEngine", "GenerationResult"]
+__all__ = [
+    "FedAttnEngine",
+    "GenerationResult",
+    "ContinuousBatchingScheduler",
+    "Request",
+]

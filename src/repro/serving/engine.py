@@ -78,6 +78,24 @@ from repro.types import FedAttnConfig, ModelConfig
 
 @dataclass
 class GenerationResult:
+    """Output of one generation request (``generate`` / the scheduler).
+
+    ``logprobs[b, t]`` is the **untempered** model log-probability of the
+    emitted token — ``log_softmax(logits)[token]`` at temperature 1 — even
+    when the token was *sampled* at ``temperature != 1``. It scores the
+    emitted text under the model's own distribution (comparable across
+    temperature sweeps); it is NOT the probability the sampler actually
+    drew the token with. Divide logits by the temperature yourself if you
+    need sampler-calibrated scores (ROADMAP: sampled-decode logprob
+    semantics).
+
+    Sampling is only active when BOTH ``temperature > 0`` AND an ``rng``
+    key are passed: ``temperature > 0`` with ``rng=None`` silently decodes
+    greedily (argmax), by design — a missing key must not invent
+    nondeterminism. Greedy logprobs are therefore always each row's
+    maximum.
+    """
+
     tokens: np.ndarray  # (B, n_new)
     logprobs: Optional[np.ndarray] = None  # (B, n_new) — model logprob of each emitted token
     prefill_comm_bytes: float = 0.0  # per-participant KV upload (paper §VII-A3)
@@ -280,6 +298,11 @@ class FedAttnEngine:
         tok0 = self._sample(last, temperature, rng, 0)
         lp0 = _token_logprob(last, tok0)
         if n_new == 1:
+            # Single-token requests end at the prefill: no decode driver is
+            # built AND no decode-template arrays are constructed — the
+            # guard is the same for compiled and eager paths, and the token/
+            # logprob must equal the first step of any longer run (pinned in
+            # tests/test_engine_decode.py::test_n_new_1_matches_longer_run).
             toks, lps = tok0[:, None], lp0[:, None]
         else:
             dctx0 = ctx.decode_template(capacity)
@@ -309,6 +332,37 @@ class FedAttnEngine:
             logprobs=np.asarray(lps),
             prefill_comm_bytes=comm,
         )
+
+    def generate_many(
+        self,
+        requests,  # Sequence[repro.serving.scheduler.Request]
+        *,
+        max_slots: int = 8,
+        capacity: Optional[int] = None,
+        steps_per_admit: int = 1,
+        arrival_times=None,
+    ) -> list:
+        """Serve many single-sequence requests through the continuous-
+        batching scheduler (serving/scheduler.py): admissions fill a fixed
+        ``(max_slots, capacity)`` KV slot pool and ONE resident decode
+        executable steps every in-flight request together, retiring and
+        re-admitting mid-flight. Per-request outputs match the equivalent
+        standalone ``generate`` calls (same seed/partition).
+
+        ``capacity=None`` sizes the pool exactly for the largest request —
+        ``max(bucketed prefill length, L + n_new)`` over the batch
+        (ContinuousBatchingScheduler.capacity_for). ``arrival_times`` are
+        perf_counter offsets from call time (Poisson traces etc.); None
+        admits everything as slots free up."""
+        from repro.serving.scheduler import ContinuousBatchingScheduler
+
+        if capacity is None:
+            capacity = ContinuousBatchingScheduler.capacity_for(self, requests)
+        sched = ContinuousBatchingScheduler(
+            self, max_slots=max_slots, capacity=capacity,
+            steps_per_admit=steps_per_admit,
+        )
+        return sched.run(requests, arrival_times=arrival_times)
 
     # -- prefill ------------------------------------------------------------------
 

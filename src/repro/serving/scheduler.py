@@ -1,0 +1,469 @@
+"""Continuous batching over a slotted KV pool — one resident decode
+executable serving many interleaved requests.
+
+``FedAttnEngine.generate`` runs one request (batch) to completion: a short
+request queued behind a long one waits the whole decode. This module adds
+the layer that took centralized engines from batch-at-a-time to production
+throughput — request interleaving over a shared KV pool:
+
+* **Slot pool** — one fixed cache of ``(max_slots, capacity)`` KV pages
+  (``model.init_cache(max_slots, capacity)``, loop or scan layout). Each
+  slot row holds one in-flight request; a retired slot's pages are reused
+  immediately by the next admission (the prefill-into-slot write replaces
+  the whole row, so stale KV never leaks between occupants).
+* **One resident decode executable** — every scheduler tick runs ONE cached
+  jitted step over ALL slots. Everything that distinguishes slots — write
+  frontier, query position, segment vectors, temperature, rng key, fold
+  step — enters as traced ``(S,)``/``(S, capacity)`` arguments, so the
+  executable never recompiles as requests come and go (the
+  ``compile_counts`` contract, pinned in tests/test_scheduler.py). Inactive
+  slots ride along fully masked (segment ``-1`` — the repo-wide padding
+  sentinel — hides their pages from every query, including their own).
+* **Prefill-into-slot** — admission runs the engine's jitted shape-bucketed
+  prefill at B=1 with the POOL capacity, then scatters the resulting cache
+  row into the slot (one jitted donating write, slot index traced). Mixed
+  prompt lengths share prefill executables per pow2 bucket exactly as in
+  single-request serving.
+
+Per-request parity: a request scheduled through the pool produces the same
+tokens/logprobs as a standalone ``engine.generate`` call with the same
+seed/partition — decode-step math is row-independent (attention, FFN, norm
+and the LM head never mix batch rows) and sampling reproduces generate's
+key schedule exactly: token ``m`` uses ``fold_in(request_rng, m)``; greedy
+rows take the raw-logit argmax. Pinned in tests/test_scheduler.py for
+greedy and sampled requests.
+
+Throughput: each batched step streams the weights once for up to
+``max_slots`` tokens, where sequential ``generate`` calls stream them per
+request — benchmarks/serving_throughput.py pins the >=2x aggregate tok/s
+win on a mixed-length Poisson trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import Partition
+from repro.serving.engine import GenerationResult, _token_logprob
+
+
+@dataclass
+class Request:
+    """One decode request: a prompt plus generation knobs — the unit the
+    scheduler interleaves. Semantics identical to the matching
+    ``engine.generate(tokens[None], n_new, partition=..., temperature=...,
+    rng=...)`` call (``rng`` seeds sparse-KV contribution masks AND
+    sampling, exactly as in generate; ``temperature > 0`` with ``rng=None``
+    is silently greedy — see GenerationResult)."""
+
+    tokens: jnp.ndarray  # (L,) or (1, L) prompt token ids
+    n_new: int
+    partition: Optional[Partition] = None
+    temperature: float = 0.0
+    rng: Optional[jax.Array] = None
+
+
+@dataclass
+class _Slot:
+    """Host-side bookkeeping for one occupied pool slot."""
+
+    req_id: int
+    real_len: int
+    n_new: int
+    n_emitted: int  # tokens produced so far (tok0 counts)
+    tokens: list = field(default_factory=list)
+    logprobs: list = field(default_factory=list)
+    comm_bytes: float = 0.0
+
+
+class ContinuousBatchingScheduler:
+    """Admit → step → retire loop over a fixed slot pool.
+
+    Args:
+      engine: a FedAttnEngine (its compiled prefill, bucket policy and
+        layers_mode are reused as-is).
+      max_slots: pool rows = maximum concurrently-decoding requests.
+      capacity: KV pages per slot. Every admitted request needs
+        ``bucketed_prefill_len <= capacity`` and ``L + n_new <= capacity``.
+      steps_per_admit: decode sub-steps fused into one executable call
+        (lax.scan inside the jit). Higher amortizes per-step dispatch;
+        admission latency grows by the same factor. Finished slots coast
+        (their surplus tokens are discarded, surplus KV writes land in
+        their own row which the next occupant's prefill overwrites).
+    """
+
+    def __init__(
+        self,
+        engine,
+        *,
+        max_slots: int = 8,
+        capacity: int = 256,
+        steps_per_admit: int = 1,
+    ):
+        if max_slots < 1 or capacity < 2 or steps_per_admit < 1:
+            raise ValueError("max_slots >= 1, capacity >= 2, steps_per_admit >= 1")
+        self.engine = engine
+        self.max_slots = max_slots
+        self.capacity = capacity
+        self.steps_per_admit = steps_per_admit
+        self._plan = engine._plan if engine.layers_mode == "scan" else None
+        self.cache = engine.model.init_cache(max_slots, capacity, plan=self._plan)
+
+        S, C = max_slots, capacity
+        self._slots: list[Optional[_Slot]] = [None] * S
+        self._queue: deque = deque()  # (req_id, Request, arrival_time|None)
+        self._results: dict[int, GenerationResult] = {}
+        self._next_id = 0
+
+        # per-slot traced step inputs (host mirrors, pushed every tick)
+        self._tok = np.zeros(S, np.int32)  # last emitted token
+        self._write_pos = np.zeros(S, np.int32)  # its KV slot = its position
+        self._fold = np.zeros(S, np.int32)  # rng fold step of the NEXT token
+        self._qseg = np.full(S, -1, np.int32)
+        self._kvseg = np.full((S, C), -1, np.int32)  # -1 ⇒ page invisible
+        self._temps = np.full(S, 1.0, np.float32)
+        self._sampled = np.zeros(S, bool)
+        kd = jax.random.key_data(jax.random.key(0))
+        self._key_data = np.zeros((S,) + kd.shape, kd.dtype)
+
+        self._step_fns: dict = {}
+        self._write_fn = None
+        self._admit_fn = None
+        # admission-rate state, rebuilt only when the slot set changes (the
+        # per-tick arrays tok/write_pos/fold are tiny; these are the wide
+        # ones + the ones that cost dispatches to rebuild)
+        self._slot_args = None
+        # on CPU the B=1 prefill cache can be allocated once and reused for
+        # every admission (nothing donates or mutates it); accelerators
+        # donate prefill buffers, so there it is rebuilt per admit
+        self._one_cache = (
+            engine.model.init_cache(1, capacity, plan=self._plan)
+            if jax.default_backend() == "cpu" else None
+        )
+
+    # -- introspection ----------------------------------------------------------
+
+    @property
+    def compile_counts(self) -> dict:
+        """Executable counts — the recompile metric. ``decode_step`` must
+        stay at 1 across any trace (per (pool shape, steps_per_admit))."""
+        return {
+            "prefill": self.engine.compile_counts["prefill"],
+            "decode_step": len(self._step_fns),
+            "slot_write": int(self._write_fn is not None),
+        }
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    def done(self) -> bool:
+        return not self._queue and self.n_active == 0
+
+    # -- submission -------------------------------------------------------------
+
+    def submit(self, request: Request, *, arrival_time: Optional[float] = None) -> int:
+        """Queue a request; returns its id (key into ``results``).
+        ``arrival_time`` (time.perf_counter clock) defers admission —
+        ``run`` uses it to replay recorded arrival traces."""
+        toks = jnp.asarray(request.tokens)
+        if toks.ndim == 2:
+            if toks.shape[0] != 1:
+                raise ValueError("scheduler requests are single-sequence (B=1)")
+            toks = toks[0]
+        L = int(toks.shape[0])
+        Lp = self.engine._bucket_len(L)
+        if max(Lp, L + request.n_new) > self.capacity:
+            raise ValueError(
+                f"request needs {max(Lp, L + request.n_new)} KV pages "
+                f"(L={L}, bucketed {Lp}, n_new={request.n_new}) but slots "
+                f"hold {self.capacity}"
+            )
+        req = dataclasses.replace(request, tokens=toks)
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append((rid, req, arrival_time))
+        return rid
+
+    @property
+    def results(self) -> dict[int, GenerationResult]:
+        """Completed results by request id. A resident submit/step loop
+        should claim them with :meth:`pop_result` — results left here are
+        retained forever (``run`` pops its own)."""
+        return self._results
+
+    def pop_result(self, rid: int) -> Optional[GenerationResult]:
+        """Claim (and free) a completed request's result, or None if the
+        request is still queued/in flight."""
+        return self._results.pop(rid, None)
+
+    @staticmethod
+    def capacity_for(engine, requests) -> int:
+        """Smallest slot capacity serving every request: the bucketed
+        prefill length and the prompt+generation span must both fit. Kept
+        exact (no pow2 rounding) — every page of width costs attention
+        FLOPs in every slot at every step, and pool executables are keyed
+        on the capacity anyway."""
+        need = 2
+        for r in requests:
+            L = int(jnp.asarray(r.tokens).reshape(-1).shape[0])
+            need = max(need, engine._bucket_len(L), L + r.n_new)
+        return need
+
+    # -- admission --------------------------------------------------------------
+
+    def _free_slot(self) -> Optional[int]:
+        for s, occ in enumerate(self._slots):
+            if occ is None:
+                return s
+        return None
+
+    def _admit(self, slot: int, rid: int, req: Request) -> None:
+        eng = self.engine
+        L = int(req.tokens.shape[0])
+        Lp = eng._bucket_len(L)
+        ctx = eng.build_context(L, partition=req.partition, rng=req.rng)
+        one = self._one_cache
+        if one is None:
+            one = eng.model.init_cache(1, self.capacity, plan=self._plan)
+        last, one = eng._prefill_compiled(
+            req.tokens[None], ctx, one, None, L, Lp, self.capacity
+        )
+        sampled = req.temperature > 0.0 and req.rng is not None
+        key = req.rng if req.rng is not None else jax.random.key(0)
+        tok0, lp0 = self._admit_finish_fn()(
+            last, jnp.float32(max(req.temperature, 1e-6)), key,
+            jnp.asarray(sampled),
+        )
+        self.cache = self._slot_write_fn()(self.cache, one, jnp.int32(slot))
+
+        self._tok[slot] = int(tok0[0])
+        self._write_pos[slot] = L  # tok0's KV goes to page L next tick
+        self._fold[slot] = 1  # token m samples with fold_in(rng, m)
+        self._qseg[slot] = ctx.partition.publisher(ctx.config.publisher_index)
+        self._kvseg[slot] = np.asarray(ctx.decode_kv_segments(self.capacity))
+        self._temps[slot] = max(req.temperature, 1e-6)
+        self._sampled[slot] = sampled
+        self._key_data[slot] = np.asarray(jax.random.key_data(key))
+        self._slot_args = None  # slot set changed; re-upload wide arrays
+        self._slots[slot] = _Slot(
+            req_id=rid,
+            real_len=L,
+            n_new=req.n_new,
+            n_emitted=1,
+            tokens=[int(tok0[0])],
+            logprobs=[float(lp0[0])],
+            comm_bytes=ctx.comm_bytes_per_participant(
+                eng.config.n_kv_heads, eng.config.head_dim
+            ),
+        )
+        if req.n_new == 1:
+            self._retire(slot)
+
+    def _retire(self, slot: int) -> None:
+        occ = self._slots[slot]
+        self._results[occ.req_id] = GenerationResult(
+            tokens=np.asarray(occ.tokens, np.int64)[None, : occ.n_new],
+            logprobs=np.asarray(occ.logprobs, np.float64)[None, : occ.n_new],
+            prefill_comm_bytes=occ.comm_bytes,
+        )
+        self._slots[slot] = None
+        # hide the freed pages from every query until the next occupant's
+        # prefill rewrites the row
+        self._kvseg[slot] = -1
+        self._qseg[slot] = -1
+        self._sampled[slot] = False
+        self._slot_args = None
+
+    def _admit_finish_fn(self):
+        """Jitted fused first-token sampler: one dispatch instead of the
+        eager argmax/fold_in/categorical/log-softmax chain per admission —
+        semantics exactly engine._sample(last, temp, rng, step=0) plus
+        _token_logprob."""
+        if self._admit_fn is not None:
+            return self._admit_fn
+
+        def finish(last, temp, key, sampled):
+            greedy = jnp.argmax(last, axis=-1)
+            r = jax.random.fold_in(key, 0)
+            cat = jax.random.categorical(r, last.astype(jnp.float32) / temp)
+            tok0 = jnp.where(sampled, cat, greedy)
+            return tok0, _token_logprob(last, tok0)
+
+        self._admit_fn = jax.jit(finish)
+        return self._admit_fn
+
+    # -- the resident decode step -----------------------------------------------
+
+    def _slot_write_fn(self):
+        """Jitted whole-row scatter of a B=1 cache into the pool (slot index
+        traced — one executable regardless of which slot admits)."""
+        if self._write_fn is not None:
+            return self._write_fn
+
+        scan_form = isinstance(self.cache, dict)
+
+        def write(pool, one, slot):
+            if scan_form:
+                # stacked leaves: (n_periods, B, ...) — batch axis 1
+                stacked = jax.tree.map(
+                    lambda pl, ol: pl.at[:, slot].set(ol[:, 0]),
+                    pool["stacked"], one["stacked"],
+                )
+                remainder = jax.tree.map(
+                    lambda pl, ol: pl.at[slot].set(ol[0]),
+                    pool["remainder"], one["remainder"],
+                )
+                return {"stacked": stacked, "remainder": remainder}
+            return jax.tree.map(
+                lambda pl, ol: pl.at[slot].set(ol[0]), pool, one
+            )
+
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._write_fn = jax.jit(write, donate_argnums=donate)
+        return self._write_fn
+
+    def _step_fn(self, n_steps: int):
+        """Build (or fetch) THE decode executable: ``n_steps`` fused
+        sub-steps over all slots. Static key = (pool shape, n_steps) only;
+        per-slot frontiers/segments/sampling state are traced, so admission
+        and retirement never trigger a recompile."""
+        key = n_steps
+        fn = self._step_fns.get(key)
+        if fn is not None:
+            return fn
+
+        eng = self.engine
+        model, backend = eng.model, eng.backend
+        mode, plan = eng.layers_mode, eng._plan
+        proto = eng._proto_ctx(self.capacity)
+        kv_pos = jnp.arange(self.capacity, dtype=jnp.int32)
+
+        def run(params, cache, tok, write_pos, fold, q_seg, kv_seg,
+                temps, sampled, key_data):
+            keys = jax.random.wrap_key_data(key_data)
+
+            def body(carry, _):
+                cache, tok, wp, fold = carry
+                dctx = dataclasses.replace(
+                    proto,
+                    positions=wp[:, None], segments=q_seg[:, None],
+                    kv_positions=kv_pos, kv_segments=kv_seg,
+                    contributed=None,
+                )
+                logits, cache = model.decode_step(
+                    params, cache, tok[:, None], wp, proto,
+                    backend=backend, dctx=dctx, mode=mode, plan=plan,
+                )
+                last = logits[:, -1]
+                greedy = jnp.argmax(last, axis=-1)
+                folded = jax.vmap(jax.random.fold_in)(keys, fold)
+                cat = jax.vmap(
+                    lambda k, l, t: jax.random.categorical(
+                        k, l.astype(jnp.float32) / t
+                    )
+                )(folded, last, temps)
+                nxt = jnp.where(sampled, cat, greedy)
+                lp = _token_logprob(last, nxt)
+                return (cache, nxt, wp + 1, fold + 1), (nxt, lp)
+
+            (cache, _, _, _), (toks, lps) = jax.lax.scan(
+                body, (cache, tok, write_pos, fold), None, length=n_steps
+            )
+            return toks, lps, cache  # (n_steps, S) each
+
+        donate = (1,) if jax.default_backend() != "cpu" else ()
+        fn = jax.jit(run, donate_argnums=donate)
+        self._step_fns[key] = fn
+        return fn
+
+    # -- the scheduler tick -----------------------------------------------------
+
+    def step(self, *, now: Optional[float] = None) -> bool:
+        """One tick: admit arrived requests into free slots, run one fused
+        decode call over the pool, retire finished slots. Returns True if
+        any decode work ran (False ⇒ idle: nothing active and nothing
+        admissible yet)."""
+        while self._queue:
+            rid, req, at = self._queue[0]
+            if at is not None and at > (now if now is not None else time.perf_counter()):
+                break
+            slot = self._free_slot()
+            if slot is None:
+                break
+            self._queue.popleft()
+            self._admit(slot, rid, req)
+
+        if self.n_active == 0:
+            return False
+
+        fn = self._step_fn(self.steps_per_admit)
+        if self._slot_args is None:
+            # wide / admission-rate inputs: re-uploaded only when the slot
+            # set changed, not every tick
+            self._slot_args = (
+                jnp.asarray(self._qseg), jnp.asarray(self._kvseg),
+                jnp.asarray(self._temps), jnp.asarray(self._sampled),
+                jnp.asarray(self._key_data),
+            )
+        q_seg, kv_seg, temps, sampled, key_data = self._slot_args
+        toks, lps, self.cache = fn(
+            self.engine._run_params(), self.cache,
+            jnp.asarray(self._tok), jnp.asarray(self._write_pos),
+            jnp.asarray(self._fold), q_seg, kv_seg, temps, sampled, key_data,
+        )
+        toks = np.asarray(toks)
+        lps = np.asarray(lps)
+        k = self.steps_per_admit
+        for s, occ in enumerate(self._slots):
+            if occ is None:
+                continue
+            take = min(k, occ.n_new - occ.n_emitted)
+            occ.tokens.extend(int(t) for t in toks[:take, s])
+            occ.logprobs.extend(float(l) for l in lps[:take, s])
+            occ.n_emitted += take
+            self._tok[s] = int(toks[-1, s])
+            self._write_pos[s] += k
+            self._fold[s] += k
+            if occ.n_emitted >= occ.n_new:
+                self._retire(s)
+        return True
+
+    # -- drive to completion ----------------------------------------------------
+
+    def run(self, requests: Sequence[Request],
+            arrival_times: Optional[Sequence[float]] = None
+            ) -> list[GenerationResult]:
+        """Submit ``requests`` (optionally with perf_counter arrival
+        offsets measured from now) and drive the loop until all complete.
+        Returns results in request order."""
+        t0 = time.perf_counter()
+        ids = [
+            self.submit(
+                r,
+                arrival_time=None if arrival_times is None else t0 + arrival_times[i],
+            )
+            for i, r in enumerate(requests)
+        ]
+        while not self.done():
+            if not self.step():
+                # idle: nothing active — wait for the next arrival
+                nxt = min(
+                    (at for _, _, at in self._queue if at is not None),
+                    default=None,
+                )
+                if nxt is not None:
+                    time.sleep(max(0.0, nxt - time.perf_counter()))
+        # claim our results (don't grow the dict across repeated runs)
+        return [self._results.pop(i) for i in ids]

@@ -1,0 +1,137 @@
+"""Shape-bucket policy edges: properties of _next_pow2 / _bucket_len /
+_bucket_new at boundaries (1, exact powers of two, power+1), and the
+segment ``-1`` padding sentinel surviving a full generate round-trip at
+those boundaries (bucketed-prefill padding must never leak into real
+tokens — jit output equals the unpadded eager reference).
+
+Property tests run under real hypothesis in CI and degrade to the
+deterministic offline stub elsewhere (see tests/conftest.py)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import tiny_config
+from repro.serving import FedAttnEngine, Request
+from repro.serving.engine import _next_pow2
+from repro.types import LayerSpec
+
+_ENGINES: dict = {}
+
+
+def _eng(kind: str = "default") -> FedAttnEngine:
+    """Lazily-built shared engines so property examples and parametrize
+    cases reuse compiled executables instead of recompiling per example."""
+    if kind not in _ENGINES:
+        from repro.models import build_model
+
+        if kind == "default":
+            cfg, kw = tiny_config(), {}
+        elif kind == "none":
+            cfg, kw = tiny_config(), {"bucket": "none"}
+        else:  # ssm: recurrences must not bucket L
+            cfg, kw = tiny_config(
+                arch_type="hybrid",
+                pattern=(LayerSpec(kind="mamba"), LayerSpec(sync=True)),
+                n_layers=4,
+            ), {}
+        params = build_model(cfg).init(jax.random.key(0))
+        _ENGINES[kind] = FedAttnEngine(cfg, params, **kw)
+    return _ENGINES[kind]
+
+
+# -- _next_pow2 ---------------------------------------------------------------
+
+
+@given(n=st.integers(min_value=1, max_value=1 << 20))
+@settings(max_examples=60)
+def test_next_pow2_is_tight_upper_power(n):
+    p = _next_pow2(n)
+    assert p >= n
+    assert p & (p - 1) == 0, f"{p} not a power of two"
+    assert p == 1 or p // 2 < n, f"{p} not the TIGHT bucket for {n}"
+
+
+@given(k=st.integers(min_value=0, max_value=19))
+@settings(max_examples=40)
+def test_next_pow2_boundaries(k):
+    """Exact powers map to themselves; power+1 jumps to the next bucket —
+    the two edges where an off-by-one would silently double padded work or
+    recompile per length."""
+    p = 1 << k
+    assert _next_pow2(p) == p
+    assert _next_pow2(p + 1) == 2 * p
+
+
+# -- engine bucket policy -----------------------------------------------------
+
+
+@given(n=st.integers(min_value=1, max_value=4096))
+@settings(max_examples=40)
+def test_bucket_len_and_new_policy(n):
+    """pow2 policy on a pure-attention causal stack: both dims bucket to
+    _next_pow2 (so 1 stays 1, powers stay put, power+1 doubles)."""
+    eng = _eng()
+    assert eng._bucket_len(n) == _next_pow2(n)
+    assert eng._bucket_new(n) == _next_pow2(n)
+
+
+@given(n=st.integers(min_value=1, max_value=4096))
+@settings(max_examples=20)
+def test_bucket_none_and_ssm_are_identity(n):
+    """bucket='none' never pads; SSM/hybrid stacks must not bucket L (a
+    recurrence would scan the padded suffix into its state) while still
+    bucketing n_new (extra decode steps are discarded — always safe)."""
+    assert _eng("none")._bucket_len(n) == n
+    assert _eng("none")._bucket_new(n) == n
+    assert not _eng("ssm")._bucket_L_ok
+    assert _eng("ssm")._bucket_len(n) == n
+    assert _eng("ssm")._bucket_new(n) == _next_pow2(n)
+
+
+# -- segment -1 sentinel round-trip at bucket boundaries ----------------------
+
+_BOUNDARY_CASES = [
+    (8, 2),   # exact power: zero L padding
+    (9, 3),   # power+1: maximal L padding (9 -> 16), n_new 3 -> 4
+    (7, 1),   # below power; n_new=1 single-token path
+    (16, 4),  # exact power both dims
+    (17, 5),  # power+1 again, different bucket pair
+]
+
+
+@pytest.mark.parametrize("L,n_new", _BOUNDARY_CASES)
+def test_sentinel_survives_generate_round_trip(L, n_new):
+    """The padded prefill tokens carry segment -1; if any kernel path let
+    them become visible, the jitted tokens/logprobs would diverge from the
+    unpadded eager reference at exactly these boundary lengths."""
+    eng = _eng()
+    cfg = eng.config
+    toks = jax.random.randint(jax.random.key(L * 100 + n_new), (2, L), 0,
+                              cfg.vocab_size)
+    r_jit = eng.generate(toks, n_new)
+    r_eager = eng.generate(toks, n_new, compile=False)
+    np.testing.assert_array_equal(r_jit.tokens, r_eager.tokens)
+    np.testing.assert_allclose(
+        r_jit.logprobs, r_eager.logprobs, atol=1e-4, rtol=1e-4
+    )
+
+
+def test_sentinel_survives_pooled_round_trip():
+    """Same sentinel contract through the continuous-batching pool: every
+    boundary case prefills into a shared slot pool (one scheduler, so one
+    resident decode executable) and must match the eager reference."""
+    from repro.serving.scheduler import ContinuousBatchingScheduler
+
+    eng = _eng()
+    cfg = eng.config
+    sched = ContinuousBatchingScheduler(eng, max_slots=2, capacity=32)
+    reqs, refs = [], []
+    for L, n_new in _BOUNDARY_CASES:
+        toks = jax.random.randint(jax.random.key(L * 100 + n_new), (2, L), 0,
+                                  cfg.vocab_size)
+        reqs.append(Request(tokens=toks[0], n_new=n_new))
+        refs.append(eng.generate(toks[:1], n_new, compile=False))
+    for res, ref in zip(sched.run(reqs), refs):
+        np.testing.assert_array_equal(res.tokens, ref.tokens)
+    assert sched.compile_counts["decode_step"] == 1

@@ -107,6 +107,22 @@ def test_n_new_1_shapes(default_engine):
     assert res.logprobs.shape == (B, 1)
 
 
+def test_n_new_1_matches_longer_run(default_engine):
+    """The single-token compiled path (which builds no decode driver and no
+    decode-template arrays) must emit exactly the first token — and its
+    logprob — of an n_new=4 run with the same seed, greedy AND sampled."""
+    cfg = tiny_config()
+    eng = default_engine
+    toks = _tokens(cfg)
+    for kw in ({}, dict(temperature=0.7, rng=jax.random.key(3))):
+        r1 = eng.generate(toks, 1, **kw)
+        r4 = eng.generate(toks, 4, **kw)
+        np.testing.assert_array_equal(r1.tokens[:, 0], r4.tokens[:, 0])
+        np.testing.assert_allclose(
+            r1.logprobs[:, 0], r4.logprobs[:, 0], atol=1e-5, rtol=1e-5
+        )
+
+
 def _schedule_cfgs():
     """The three schedule regimes the compiled prefill must match eager on."""
     return {
@@ -239,6 +255,35 @@ def test_scan_decode_trace_size_is_O_period():
     l16 = eng_for(16, "loop").decode_trace_size(B, L, N_NEW)
     assert s16 < 1.2 * s8, f"scan trace grew with depth: {s8} -> {s16}"
     assert l16 > 2.0 * s16, f"scan trace not smaller than loop: {s16} vs {l16}"
+
+
+def test_uniform_H_equal_to_depth_has_no_scan_plan():
+    """Pins why BENCH_serving's decode_N4_H4 point runs layers_mode='loop'
+    while every H=2 point scans: on the 4-layer homogeneous bench stack
+    with sync every 4th layer, the smallest schedule-periodic unit IS the
+    whole body — ScanPlan.from_schedule requires >= 2 repetitions (a
+    1-iteration scan has no O(period) trace advantage, only scan overhead)
+    and correctly returns None. Doubling the depth restores scan with the
+    same H=4 schedule (see ROADMAP.md, scan-plan coverage note)."""
+    from repro.models import build_model
+    from repro.models.transformer import ScanPlan
+
+    def eng_for(n_layers):
+        cfg = tiny_config(
+            n_layers=n_layers, pattern=(LayerSpec(),),
+            fedattn=FedAttnConfig(n_participants=4, sync_interval=4),
+        )
+        params = build_model(cfg).init(jax.random.key(0))
+        return FedAttnEngine(cfg, params)
+
+    e4 = eng_for(4)
+    assert e4._plan is None
+    assert e4.layers_mode == "loop"
+    assert ScanPlan.from_schedule(e4.config, e4._schedule) is None
+
+    e8 = eng_for(8)  # same H=4 schedule, twice the depth -> 2 repetitions
+    assert e8.layers_mode == "scan"
+    assert e8._plan.period == 4 and e8._plan.n_periods == 2
 
 
 def test_compiled_driver_cached_and_partition_safe():

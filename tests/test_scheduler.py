@@ -1,0 +1,178 @@
+"""Continuous-batching scheduler (serving/scheduler.py): per-request
+token/logprob parity with standalone generate (greedy AND sampled, loop
+AND scan layer lowering, sparse KV exchange, heterogeneous partitions),
+the zero-recompile contract (ONE resident decode executable across a
+trace whose active-slot set changes every step), slot reuse, result
+ordering, and capacity validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_config
+from repro.serving import FedAttnEngine, Request
+from repro.serving.scheduler import ContinuousBatchingScheduler
+from repro.types import FedAttnConfig, LayerSpec
+
+
+def _engine(cfg):
+    from repro.models import build_model
+
+    params = build_model(cfg).init(jax.random.key(0))
+    return FedAttnEngine(cfg, params)
+
+
+@pytest.fixture(scope="module")
+def eng():
+    """One engine for every default-config test — solo-generate and pool
+    executables accumulate in its caches across tests (realistic reuse)."""
+    return _engine(tiny_config())
+
+
+def _req(i, L, n_new, temp=0.0, cfg=None):
+    cfg = cfg or tiny_config()
+    toks = jax.random.randint(jax.random.key(10 + i), (L,), 0, cfg.vocab_size)
+    rng = jax.random.key(100 + i) if temp > 0 else None
+    return Request(tokens=toks, n_new=n_new, temperature=temp, rng=rng)
+
+
+def _assert_matches_solo(eng, results, reqs):
+    for r, req in zip(results, reqs):
+        solo = eng.generate(
+            req.tokens[None], req.n_new,
+            temperature=req.temperature, rng=req.rng,
+            partition=req.partition,
+        )
+        np.testing.assert_array_equal(r.tokens, solo.tokens)
+        np.testing.assert_allclose(
+            r.logprobs, solo.logprobs, atol=1e-5, rtol=1e-5
+        )
+        assert r.prefill_comm_bytes == solo.prefill_comm_bytes
+
+
+def test_parity_mixed_greedy_and_sampled(eng):
+    """4 mixed-length requests through a 2-slot pool (forcing mid-flight
+    retire + re-admit) must each match a standalone generate exactly —
+    greedy and sampled, including the first (prefill) token."""
+    reqs = [
+        _req(0, 24, 8),
+        _req(1, 17, 5, temp=0.7),
+        _req(2, 30, 3),
+        _req(3, 9, 12, temp=0.9),
+    ]
+    res = eng.generate_many(reqs, max_slots=2, capacity=64)
+    assert [r.tokens.shape for r in res] == [(1, 8), (1, 5), (1, 3), (1, 12)]
+    _assert_matches_solo(eng, res, reqs)
+
+
+def test_parity_scan_mode_fused_steps():
+    """Scan-over-layers pool + steps_per_admit>1: finished slots coast a
+    few surplus steps before retiring; outputs still match standalone."""
+    cfg = tiny_config(
+        n_layers=8,
+        pattern=(LayerSpec(), LayerSpec(sync=True)),
+        fedattn=FedAttnConfig(n_participants=4, sync_interval=2),
+    )
+    e = _engine(cfg)
+    assert e.layers_mode == "scan"
+    reqs = [_req(0, 24, 8, cfg=cfg), _req(1, 12, 5, temp=0.7, cfg=cfg),
+            _req(2, 20, 3, cfg=cfg)]
+    sched = ContinuousBatchingScheduler(
+        e, max_slots=2, capacity=64, steps_per_admit=3
+    )
+    res = sched.run(reqs)
+    assert sched.compile_counts["decode_step"] == 1
+    _assert_matches_solo(e, res, reqs)
+
+
+def test_parity_sparse_kv_and_partition(eng):
+    """Request rng seeds the sparse-KV contribution masks and per-request
+    partitions change the per-slot kv segment rows — both must flow through
+    the pool's traced arguments, not recompile or go stale."""
+    from repro.core.partition import Partition
+
+    cfg = tiny_config(
+        fedattn=FedAttnConfig(
+            n_participants=4, sync_interval=2,
+            kv_exchange_ratio=0.5, kv_selection="strided",
+        ),
+    )
+    e = _engine(cfg)
+    reqs = [
+        Request(
+            tokens=jax.random.randint(jax.random.key(5), (24,), 0, cfg.vocab_size),
+            n_new=6, rng=jax.random.key(7),
+        ),
+        Request(
+            tokens=jax.random.randint(jax.random.key(6), (24,), 0, cfg.vocab_size),
+            n_new=6, rng=jax.random.key(8),
+            partition=Partition.from_sizes([12, 4, 4, 4]),
+        ),
+    ]
+    sched = ContinuousBatchingScheduler(e, max_slots=2, capacity=64)
+    res = sched.run(reqs)
+    assert sched.compile_counts["decode_step"] == 1
+    _assert_matches_solo(e, res, reqs)
+
+
+def test_zero_decode_recompiles_across_churning_trace(eng):
+    """Acceptance: staggered n_new makes the active-slot set change every
+    step (retire + admit mid-flight); the pool must end the trace with
+    exactly ONE decode executable and ONE slot-write executable."""
+    reqs = [_req(i, 10 + 3 * i, 2 + i, temp=0.4 * (i % 2)) for i in range(6)]
+    sched = ContinuousBatchingScheduler(eng, max_slots=3, capacity=64)
+    res = sched.run(reqs)
+    cc = sched.compile_counts
+    assert cc["decode_step"] == 1, cc
+    assert cc["slot_write"] == 1, cc
+    assert len(res) == 6 and all(
+        r.tokens.shape == (1, reqs[i].n_new) for i, r in enumerate(res)
+    )
+    # the same pool serves a fresh trace with zero new executables
+    n_prefill = cc["prefill"]
+    reqs2 = [_req(10 + i, 11 + 5 * i, 3 + i) for i in range(4)]
+    sched.run(reqs2)
+    cc2 = sched.compile_counts
+    assert cc2["decode_step"] == 1 and cc2["prefill"] == n_prefill, cc2
+
+
+def test_slot_reuse_does_not_leak_between_occupants(eng):
+    """A slot freed by a short request and re-used by a later one must not
+    leak stale KV: run the same request first and last in a trace — both
+    copies must produce identical outputs."""
+    probe = _req(0, 24, 6)
+    filler = [_req(i, 14 + i, 8) for i in range(1, 4)]
+    res = eng.generate_many([probe] + filler + [probe], max_slots=2,
+                            capacity=64)
+    np.testing.assert_array_equal(res[0].tokens, res[-1].tokens)
+    np.testing.assert_allclose(res[0].logprobs, res[-1].logprobs,
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_n_new_1_request_retires_at_admit(eng):
+    """A single-token request completes from its prefill logits alone —
+    mirroring generate's n_new==1 path — and frees its slot immediately."""
+    reqs = [_req(0, 24, 1), _req(1, 18, 4)]
+    res = eng.generate_many(reqs, max_slots=1, capacity=64)
+    assert res[0].tokens.shape == (1, 1)
+    _assert_matches_solo(eng, res, reqs)
+
+
+def test_capacity_validation(eng):
+    sched = ContinuousBatchingScheduler(eng, max_slots=2, capacity=32)
+    with pytest.raises(ValueError, match="KV pages"):
+        sched.submit(_req(0, 30, 8))  # 30 + 8 > 32
+    with pytest.raises(ValueError, match="KV pages"):
+        sched.submit(_req(0, 40, 1))  # bucketed prefill 64 > 32
+    with pytest.raises(ValueError, match="single-sequence"):
+        sched.submit(Request(tokens=jnp.zeros((2, 8), jnp.int32), n_new=2))
+
+
+def test_arrival_times_respected(eng):
+    """Requests with future arrival offsets are not admitted early; the
+    trace still completes with correct outputs."""
+    reqs = [_req(0, 16, 3), _req(1, 16, 3)]
+    sched = ContinuousBatchingScheduler(eng, max_slots=2, capacity=32)
+    res = sched.run(reqs, arrival_times=[0.0, 0.2])
+    _assert_matches_solo(eng, res, reqs)
+    assert sched.done()
