@@ -94,7 +94,9 @@ def main() -> None:
         default=pathlib.Path(__file__).resolve().parents[1] / "BENCH_serving.json",
         help="where to write the serving-perf records (BENCH_serving.json)",
     )
-    args = ap.parse_args()
+    # parse_known_args: module-specific flags (e.g. serving_throughput's
+    # --mesh) pass through to the modules' own parse_known_args
+    args, _ = ap.parse_known_args()
 
     failures = []
     serving: dict = {}

@@ -15,11 +15,25 @@ scheduler results are also checked token-exact against the sequential
 ones — the throughput claim is only meaningful if interleaving preserves
 per-request outputs.
 
+``--mesh N`` additionally measures the SPMD pooled path: the same trace
+through a pool whose KV capacity is sharded over an N-way 'model' mesh
+(flash-decoding partial-softmax per shard + one psum,
+repro/distributed/spmd_attention.py), paired adjacently against the
+single-device pool. Needs N devices — on CPU set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before launching
+(the CI slow job does; without enough devices the mesh record is skipped
+with a note). On a shared-CPU box the mesh ratio measures collective
+overhead, not a speedup — the record exists to pin executable counts and
+parity under the mesh, and to become a real trend once CI runs on
+multi-device hardware.
+
 Prints ``name,us_per_call,derived`` CSV lines (us per generated token) and
 returns records for BENCH_serving.json (benchmarks/run.py).
 
 Usage:
   PYTHONPATH=src python -m benchmarks.serving_throughput [--requests 12]
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+      PYTHONPATH=src python -m benchmarks.serving_throughput --mesh 2
 """
 from __future__ import annotations
 
@@ -78,6 +92,10 @@ def main():
                          "rates the sequential path can keep up with, "
                          "aggregate tok/s measures the arrival process, "
                          "not the serving architecture")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="also measure the SPMD pooled path over an N-way "
+                         "'model' mesh (capacity-sharded KV pool); skipped "
+                         "with a note when fewer than N devices exist")
     args, _ = ap.parse_known_args()  # tolerate benchmarks/run.py flags
 
     cfg = bench_config(n_layers=4)
@@ -152,7 +170,7 @@ def main():
               "(expected 1 — admission/retirement must not recompile)")
     if mismatches:
         print(f"# WARNING: {mismatches} requests diverged from sequential")
-    return [{
+    records = [{
         "name": name,
         # speedup is a PAIRED within-run ratio (adjacent passes, median
         # round) — machine drift cancels, so compare_bench.py gates on it
@@ -168,6 +186,85 @@ def main():
         "tok_s_stream": tok_s_stream,
         "speedup": speedup,
         "decode_step_executables": n_decode_execs,
+        "parity_mismatches": mismatches,
+    }]
+
+    if args.mesh:
+        if len(jax.devices()) < args.mesh:
+            print(f"# --mesh {args.mesh} skipped: only {len(jax.devices())} "
+                  "device(s) (set XLA_FLAGS=--xla_force_host_platform_"
+                  f"device_count={args.mesh} before launching)")
+        else:
+            records += _mesh_pass(
+                cfg, fed, params, reqs, args, total_new, stream_res
+            )
+    return records
+
+
+def _mesh_pass(cfg, fed, params, reqs, args, total_new, single_res):
+    """SPMD pooled pass: same trace, KV pool capacity-sharded over an
+    N-way mesh, paired adjacently against a fresh single-device pool at
+    the SAME (shard-divisible) capacity. Gating metrics are the executable
+    count and parity; tok/s and the mesh ratio are trend/warn-only (on one
+    shared CPU the 'mesh' is collective overhead with no extra FLOP/s)."""
+    from repro.launch.mesh import make_serving_mesh
+
+    n = args.mesh
+    eng_mesh = FedAttnEngine(cfg, params, fedattn=fed, mesh=make_serving_mesh(n))
+    eng_one = FedAttnEngine(cfg, params, fedattn=fed)
+    capacity = ContinuousBatchingScheduler.capacity_for(eng_mesh, reqs)
+    sched_mesh = ContinuousBatchingScheduler(
+        eng_mesh, max_slots=args.max_slots, capacity=capacity,
+        steps_per_admit=args.steps_per_admit,
+    )
+    sched_one = ContinuousBatchingScheduler(
+        eng_one, max_slots=args.max_slots, capacity=capacity,
+        steps_per_admit=args.steps_per_admit,
+    )
+    sched_one.run(reqs)  # warmups
+    mesh_res = sched_mesh.run(reqs)
+    rounds = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        sched_one.run(reqs)
+        w_one = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        sched_mesh.run(reqs)
+        w_mesh = time.perf_counter() - t0
+        rounds.append((w_mesh / w_one, w_one, w_mesh))
+    rounds.sort()
+    _, wall_one, wall_mesh = rounds[len(rounds) // 2]
+    tok_s_one = total_new / wall_one
+    tok_s_mesh = total_new / wall_mesh
+    n_exec = sched_mesh.compile_counts["decode_step"]
+    mismatches = sum(
+        not np.array_equal(a.tokens, b.tokens)
+        for a, b in zip(mesh_res, single_res)
+    )
+    ratio = tok_s_mesh / tok_s_one
+    name = f"serving_stream_mesh{n}_N{fed.n_participants}_H{fed.sync_interval}"
+    print(csv_line(name, 1e6 / tok_s_mesh,
+                   f"tok_s={tok_s_mesh:.1f},vs_single_pool={ratio:.2f}x,"
+                   f"shards={n},decode_execs={n_exec},"
+                   f"mismatches={mismatches}"))
+    print(f"# SPMD pool ({n} shards): {ratio:.2f}x the single-device pool "
+          f"tok/s at capacity {capacity} (CPU collective overhead expected)")
+    if n_exec != 1:
+        print(f"# WARNING: mesh decode_step executables = {n_exec}")
+    if mismatches:
+        print(f"# WARNING: {mismatches} mesh requests diverged")
+    return [{
+        "name": name,
+        "n_shards": n,
+        "n_requests": len(reqs),
+        "total_new_tokens": total_new,
+        "max_slots": args.max_slots,
+        "steps_per_admit": args.steps_per_admit,
+        "capacity": capacity,
+        "tok_s_mesh": tok_s_mesh,
+        "tok_s_single_pool": tok_s_one,
+        "mesh_vs_single_ratio": ratio,
+        "decode_step_executables": n_exec,
         "parity_mismatches": mismatches,
     }]
 

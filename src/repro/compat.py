@@ -14,6 +14,18 @@ over here:
   * ``jax.shard_map`` was promoted from ``jax.experimental.shard_map``
     after 0.4.x.
 
+Probed but currently identical across both supported generations (no shim
+needed):
+
+  * Pallas interpret mode: the surface the flash kernel uses — new-style
+    ``pl.BlockSpec(block_shape, index_map)``, ``pltpu.VMEM`` scratch
+    shapes, ``pl.pallas_call(..., interpret=True)``, ``pl.when`` /
+    ``pl.program_id`` — exists with the same semantics on 0.4.37 and
+    current JAX; tests/test_kernels.py exercises it on both CI legs
+    (including the batched per-row vector BlockSpecs). If a future JAX
+    moves these (e.g. InterpretParams becoming mandatory), add the shim
+    HERE, not in kernels/flash_attention.py.
+
 Keep ALL version probing in this module — callers (launch/mesh.py, tests)
 must never touch ``jax.sharding.AxisType`` directly.
 """

@@ -103,10 +103,18 @@ def exchange_visibility(
     """(L, L) bool — sync-layer visibility under (possibly sparse) exchange.
 
     query i sees key j iff same participant (full local view preserved) or
-    j was contributed to the global KV this round.
+    j was contributed to the global KV this round. Delegates to the shared
+    mask constructor (repro.kernels.core.visibility) with the causal term
+    disabled — this helper reports pure exchange visibility (Obs. 1
+    analysis), not the decode-time composite mask.
     """
-    local = partition.local_mask()
-    return local | contributed[None, :]
+    from repro.kernels.core import visibility
+
+    seg = partition.segment_ids
+    zeros = jnp.zeros((partition.seq_len,), jnp.int32)
+    return visibility(
+        zeros, zeros, seg, seg, causal=False, contributed=contributed
+    )[0]
 
 
 def participant_weights(

@@ -40,9 +40,9 @@ import jax.numpy as jnp
 from repro.core.aggregation import contribution_mask
 from repro.core.partition import Partition
 from repro.core.schedule import SyncSchedule
+from repro.kernels.core import NEG_INF
+from repro.kernels.core import visibility as _core_visibility
 from repro.types import FedAttnConfig
-
-NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
 def visibility(
@@ -58,6 +58,13 @@ def visibility(
 ) -> jnp.ndarray:
     """Canonical FedAttn visibility mask, shape (Lq, Lk) bool.
 
+    Thin protocol-vocabulary wrapper over the repo's single mask
+    constructor, :func:`repro.kernels.core.visibility` — ``sync`` maps onto
+    its ``local_only`` flag (Phase I local == not sync), and a *traced*
+    ``sync`` (scan-over-layers mode) blends the two phase masks with
+    ``jnp.where``. Sentinel conventions (kv_seg < 0 bucketing padding etc.)
+    are the shared core's.
+
     Args:
       q_pos / kv_pos: global position ids of queries / keys.
       q_seg / kv_seg: participant (segment) ids of queries / keys.
@@ -70,24 +77,19 @@ def visibility(
       contributed: (Lk,) bool — sparse-KV-exchange contribution mask for
         this round (None = full exchange).
     """
-    base = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), dtype=bool)
-    if causal:
-        base &= q_pos[:, None] >= kv_pos[None, :]
-    if window is not None:
-        base &= (q_pos[:, None] - kv_pos[None, :]) < window
-    # negative kv segments are shape-bucketing padding sentinels (the engine
-    # pads prefill tokens with segment -1; kernels pad with -2) — a padded
-    # KV slot is never visible, in either phase
-    base &= kv_seg[None, :] >= 0
-    same = q_seg[:, None] == kv_seg[None, :]
-    if contributed is None:
-        global_vis = base
-    else:
-        global_vis = base & (same | contributed[None, :])
-    local_vis = base & same
+    def phase(local_only: bool) -> jnp.ndarray:
+        return _core_visibility(
+            q_pos, kv_pos, q_seg, kv_seg, causal=causal, window=window,
+            local_only=local_only,
+            contributed=None if local_only else contributed,
+        )[0]
+
+    # non-causal protocol masks keep fully-bidirectional visibility (the
+    # core's non-causal base only drops kernel position sentinels, which
+    # never appear in these (L, L) protocol masks)
     if isinstance(sync, bool):
-        return global_vis if sync else local_vis
-    return jnp.where(sync, global_vis, local_vis)
+        return phase(local_only=not sync)
+    return jnp.where(sync, phase(False), phase(True))
 
 
 def mask_to_bias(mask: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:

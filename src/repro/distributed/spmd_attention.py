@@ -14,17 +14,25 @@ This is the TPU-native realization of the paper's protocol (DESIGN.md §2):
     bytes by the ratio; local queries keep their full local KV view
     (gathered own-shard rows are invalidated by a position sentinel to
     avoid double counting).
-  * **Decode** — flash-decoding-style:each shard computes partial softmax
-    statistics over its cache slice; a psum over the cache axes combines
-    them. At local layers non-publisher shards contribute -inf/0 so the
-    result equals publisher-local attention.
+  * **Decode** — flash-decoding-style: each shard computes partial softmax
+    statistics over its cache slice (the shared core's
+    ``masked_attention(..., return_stats=True)``); a pmax/psum over the
+    cache axes combines them exactly. Masking comes from the same
+    ``kernels.core.visibility`` every other path uses — either the
+    per-row segment vectors (continuous-batching slot pools: q/kv vectors
+    may be 2-D ``(B, ·)``), or the ``publisher_lo`` position rule when no
+    segments are available.
+
+All masks and softmax bodies here are the shared attention core's
+(:mod:`repro.kernels.core`) — this module contains only the collectives
+and the shard bookkeeping around them.
 
 Partitions must be contiguous-equal (participant n == shard n); segment ids
 are derived arithmetically from positions.
 """
 from __future__ import annotations
 
-from functools import partial
+import warnings
 from typing import Optional
 
 import jax
@@ -33,47 +41,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.distributed import runtime
+from repro.kernels import core as K
 
 INT_MAX = jnp.iinfo(jnp.int32).max
-NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
-
-
-def _flash(q, k, v, mask, *, soft_cap, sm_scale, return_stats=False):
-    """Plain masked attention on shard-local operands, f32 accumulation.
-    Shapes: q (B,Lq,nq,dh), k/v (B,Lk,nkv,dh), mask (Lq,Lk) bool."""
-    B, Lq, nq, dh = q.shape
-    nkv = k.shape[2]
-    g = nq // nkv
-    scale = sm_scale if sm_scale is not None else dh**-0.5
-    qf = q.astype(jnp.float32) * scale
-    kf = jnp.repeat(k.astype(jnp.float32), g, axis=2)
-    vf = jnp.repeat(v.astype(jnp.float32), g, axis=2)
-    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
-    if soft_cap:
-        s = jnp.tanh(s / soft_cap) * soft_cap
-    s = jnp.where(mask[None, None], s, NEG_INF)
-    m = jnp.max(s, axis=-1)  # (B,nq,Lq)
-    p = jnp.exp(s - m[..., None])
-    p = jnp.where(mask[None, None], p, 0.0)
-    l = jnp.sum(p, axis=-1)
-    acc = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
-    if return_stats:
-        return m, l, acc
-    out = acc / jnp.maximum(l, 1e-20).transpose(0, 2, 1)[..., None]
-    return out.astype(q.dtype)
-
-
-def _vis(q_pos, kv_pos, *, causal, window, extra=None):
-    mask = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
-    if causal:
-        mask &= q_pos[:, None] >= kv_pos[None, :]
-    else:
-        mask &= kv_pos[None, :] < INT_MAX  # drop sentinel/padded rows
-    if window is not None:
-        mask &= (q_pos[:, None] - kv_pos[None, :]) < window
-    if extra is not None:
-        mask &= extra
-    return mask
+NEG_INF = K.NEG_INF
 
 
 # ---------------------------------------------------------------------------
@@ -122,7 +93,7 @@ def prefill_attention(
     def sync_sparse_fn(q, k, v, pos):
         Ls = k.shape[1]
         n_keep = max(1, int(round(exchange_ratio * Ls)))
-        idx = _select_rows(pos, Ls, n_keep, kv_selection)
+        idx = _select_rows(pos, Ls, n_keep, kv_selection, keys=k)
         ks = jnp.take(k, idx, axis=1)
         vs = jnp.take(v, idx, axis=1)
         ps = jnp.take(pos, idx, axis=0)
@@ -156,8 +127,17 @@ def prefill_attention(
     )(q, k, v, q_pos)
 
 
-def _select_rows(pos, Ls, n_keep, selection):
-    """Static-count per-shard KV row selection for sparse exchange."""
+def _select_rows(pos, Ls, n_keep, selection, keys=None):
+    """Static-count per-shard KV row selection for sparse exchange.
+
+    ``keys`` are the shard-local K rows ((B, Ls, nkv, dh)) — consumed by
+    ``'keynorm'`` (top-k rows by batch-and-head-summed ||K||_2, the
+    adaptive-importance heuristic of core/aggregation.contribution_mask,
+    Observation 4). ``'random'`` is NOT implementable as a static-count
+    SPMD gather without threading per-round rng through every sync layer;
+    it warns once and aliases ``'strided'`` (the deterministic stand-in
+    with the same per-shard row count).
+    """
     if selection == "recency":
         return jnp.arange(Ls - n_keep, Ls)
     if selection == "sink_recency":
@@ -165,8 +145,25 @@ def _select_rows(pos, Ls, n_keep, selection):
         return jnp.concatenate(
             [jnp.arange(n_sink), jnp.arange(Ls - (n_keep - n_sink), Ls)]
         )
-    if selection in ("strided", "random", "keynorm"):
-        # strided is the deterministic SPMD stand-in for random sampling
+    if selection == "keynorm":
+        if keys is None:
+            raise ValueError("kv_selection='keynorm' requires the K rows")
+        norms = jnp.sqrt(
+            jnp.sum(
+                jnp.square(keys.astype(jnp.float32)),
+                axis=tuple(i for i in range(keys.ndim) if i != 1),
+            )
+        )  # (Ls,)
+        _, idx = jax.lax.top_k(norms, n_keep)
+        return jnp.sort(idx)  # keep positional order for the gather
+    if selection in ("strided", "random"):
+        if selection == "random":
+            warnings.warn(
+                "SPMD sparse KV exchange has no static-count 'random' "
+                "selection; using the deterministic 'strided' stand-in "
+                "(same per-shard row count)",
+                stacklevel=2,
+            )
         stride = max(1, Ls // n_keep)
         idx = jnp.arange(n_keep) * stride
         return jnp.minimum(idx, Ls - 1)
@@ -238,23 +235,53 @@ def cross_attention_spmd(
 # ---------------------------------------------------------------------------
 
 
+def _shard_offset(axes, width: int):
+    """Global start of this shard's cache slice: linearized index over the
+    (possibly multiple) cache axes times the per-shard width."""
+    idx = jnp.int32(0)
+    mesh = runtime.current().mesh
+    for ax in (axes if isinstance(axes, tuple) else (axes,)):
+        idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+    return idx * width
+
+
+def _kv_spec(vec, bfirst, axes):
+    """PartitionSpec of a KV-side vector: the cache dim (last) rides the
+    cache axes; a per-row (B, C) vector additionally follows the batch."""
+    return P(axes) if vec.ndim == 1 else P(bfirst, axes)
+
+
+def _q_spec(vec, bfirst):
+    return P(None) if vec.ndim == 1 else P(bfirst, None)
+
+
 def decode_attention(
     q: jnp.ndarray,  # (B, S, nq, dh) — replicated over cache axes
     k_cache: jnp.ndarray,  # (B, C, nkv, dh) — C sharded over cache axes
     v_cache: jnp.ndarray,
     *,
-    q_pos: jnp.ndarray,  # (S,) global positions of the new tokens
-    kv_pos: jnp.ndarray,  # (C,) global cache positions, sharded like cache
-    publisher_lo: int,  # first global position owned by the publisher
+    q_pos: jnp.ndarray,  # (S,) or (B, S) global positions of the new tokens
+    kv_pos: jnp.ndarray,  # (C,) or (B, C) cache positions, sharded like cache
     sync: bool,
+    q_seg: Optional[jnp.ndarray] = None,  # (S,) or (B, S) participant ids
+    kv_seg: Optional[jnp.ndarray] = None,  # (C,) or (B, C), sharded like cache
+    publisher_lo: int = 0,  # fallback local rule when no segments are given
     causal: bool = True,
     window: Optional[int] = None,
     soft_cap: Optional[float] = None,
     sm_scale: Optional[float] = None,
 ) -> jnp.ndarray:
-    """Flash-decoding with FedAttn masking. At local (non-sync) layers only
-    cache rows with position >= publisher_lo (the publisher's segment and
-    all generated tokens) are visible."""
+    """Flash-decoding with FedAttn masking over a sequence-sharded cache.
+
+    Each shard builds the shared core's visibility over its cache slice and
+    computes partial softmax statistics; pmax/psum over the cache axes
+    combine them into the exact full-cache softmax. At local (non-sync)
+    layers the mask restricts to the publisher's visible rows — via
+    ``local_only`` segment masking when (q_seg, kv_seg) are given (the
+    per-row continuous-batching pool passes 2-D vectors: inactive slots
+    carry segment -1 and vanish), else via the ``publisher_lo`` position
+    rule (rows at positions >= publisher_lo: the publisher's segment and
+    all generated tokens)."""
     ctx = runtime.current()
     assert ctx is not None
     mesh = ctx.mesh
@@ -262,13 +289,27 @@ def decode_attention(
     cache_spec = P(ctx.bfirst, axes, None, None)
     q_spec = P(ctx.bfirst, None, None, None)
 
-    def fn(q, kc, vc, kpos, qpos):
-        extra = None
-        if not sync:
-            extra = (kpos[None, :] >= publisher_lo)
-        mask = _vis(qpos, kpos, causal=causal, window=window, extra=extra)
-        m, l, acc = _flash(
-            q, kc, vc, mask, soft_cap=soft_cap, sm_scale=sm_scale, return_stats=True
+    use_seg = q_seg is not None and kv_seg is not None
+    args = [q, k_cache, v_cache, kv_pos, q_pos]
+    specs = [
+        q_spec, cache_spec, cache_spec,
+        _kv_spec(kv_pos, ctx.bfirst, axes), _q_spec(q_pos, ctx.bfirst),
+    ]
+    if use_seg:
+        args += [q_seg, kv_seg]
+        specs += [_q_spec(q_seg, ctx.bfirst), _kv_spec(kv_seg, ctx.bfirst, axes)]
+
+    def fn(q, kc, vc, kpos, qpos, qseg=None, kseg=None):
+        mask = K.visibility(
+            qpos, kpos, qseg, kseg,
+            causal=causal,
+            local_only=(not sync) and use_seg,
+            window=window,
+            publisher_lo=None if (sync or use_seg) else publisher_lo,
+        )
+        m, l, acc = K.masked_attention(
+            q, kc, vc, mask, soft_cap=soft_cap, sm_scale=sm_scale,
+            return_stats=True,
         )
         # combine partial stats across cache shards
         m_g = jax.lax.pmax(m, axes)
@@ -281,7 +322,46 @@ def decode_attention(
     return shard_map(
         fn,
         mesh=mesh,
-        in_specs=(q_spec, cache_spec, cache_spec, P(axes), P(None)),
+        in_specs=tuple(specs),
         out_specs=q_spec,
         check_vma=False,
-    )(q, k_cache, v_cache, kv_pos, q_pos)
+    )(*args)
+
+
+def decode_kv_write(
+    k_cache: jnp.ndarray,  # (B, C, nkv, dh) — C sharded over cache axes
+    v_cache: jnp.ndarray,
+    k_new: jnp.ndarray,  # (B, S_new, nkv, dh) — replicated
+    v_new: jnp.ndarray,
+    cache_len: jnp.ndarray,  # (B,) per-row write frontiers
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row KV write into a sequence-sharded cache: each shard scatters
+    only the rows whose frontier lands inside its slice (flash-decoding
+    write locality — no gather of the cache, no collective at all); rows
+    out of the shard's range (and rows coasting past capacity) drop via
+    scatter OOB semantics. Mirrors the single-device per-row scatter in
+    models/attention.attention_decode_block."""
+    ctx = runtime.current()
+    assert ctx is not None
+    axes = ctx.cache_axes
+    cache_spec = P(ctx.bfirst, axes, None, None)
+    new_spec = P(ctx.bfirst, None, None, None)
+
+    def fn(kc, vc, kn, vn, cl):
+        width = kc.shape[1]
+        lo = _shard_offset(axes, width)
+        B, S_new = kn.shape[:2]
+        cols = cl[:, None] + jnp.arange(S_new)[None, :] - lo  # (B, S_new)
+        cols = jnp.where((cols >= 0) & (cols < width), cols, width)  # OOB→drop
+        rows = jnp.arange(B)[:, None]
+        kc = kc.at[rows, cols].set(kn.astype(kc.dtype))
+        vc = vc.at[rows, cols].set(vn.astype(vc.dtype))
+        return kc, vc
+
+    return shard_map(
+        fn,
+        mesh=runtime.current().mesh,
+        in_specs=(cache_spec, cache_spec, new_spec, new_spec, P(ctx.bfirst)),
+        out_specs=(cache_spec, cache_spec),
+        check_vma=False,
+    )(k_cache, v_cache, k_new, v_new, cache_len)

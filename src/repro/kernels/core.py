@@ -1,0 +1,212 @@
+"""The shared attention core: ONE visibility/masking spec for every path.
+
+The paper's protocol is a single masking rule (Phase-I local attention,
+eq. 18; Phase-II global attention over the exchanged KV, eqs. 20-21; sparse
+contribution masks, eq. 37; optional sliding windows), but a serving stack
+grows many attention *implementations* — the pure-jnp oracle
+(:mod:`repro.kernels.ref`), the chunked online-softmax XLA path
+(:mod:`repro.kernels.ops`), the Pallas flash kernel
+(:mod:`repro.kernels.flash_attention`), and the shard_map SPMD realization
+(:mod:`repro.distributed.spmd_attention`). This module is the one place the
+masking rule and the softmax accumulation live; every implementation above
+composes these primitives instead of re-deriving them.
+
+Vector contract (THE reference for the whole repo)
+--------------------------------------------------
+``visibility``/:class:`AttnSpec` accept every position/segment/contribution
+vector either
+
+* **1-D** ``(L,)`` — shared across the batch (classic prefill/decode: all
+  rows sit at the same offsets under the same partition), or
+* **2-D** ``(B, L)`` — per batch row (continuous-batching decode over a KV
+  slot pool, coalesced multi-request admission prefill: every row has its
+  own write frontier, partition and padding). Mixing is fine; the mask's
+  leading dim broadcasts to ``Bm = max`` of the leading dims (1 when
+  everything is shared).
+
+Sentinels: ``kv_pos == int32 max`` (kernel chunk/block padding) and
+``kv_seg < 0`` (shape-bucketing pads with ``-1``, kernels pad with ``-2``,
+inactive pool slots carry ``-1``) are never visible to any query.
+
+``publisher_lo`` is the decode-time alternative to segment masking used by
+the sequence-sharded SPMD cache (flash-decoding): at a local (non-sync)
+layer only cache rows with ``kv_pos >= publisher_lo`` — the publisher's own
+segment plus every generated token — are visible. It is equivalent to
+``local_only`` segment masking whenever the publisher owns the trailing
+contiguous segment (the repo-wide convention); pass segments instead when
+per-row partitions make that assumption unsafe.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+POS_PAD = jnp.iinfo(jnp.int32).max  # padded KV slot position sentinel
+SEG_PAD_BUCKET = -1  # shape-bucketing / inactive-pool-slot segment sentinel
+SEG_PAD_KERNEL = -2  # kernel-internal chunk/block padding sentinel
+
+
+def _as2(a: jnp.ndarray) -> jnp.ndarray:
+    return a if a.ndim == 2 else a[None]
+
+
+def visibility(
+    q_pos: jnp.ndarray,  # (Lq,) or (B, Lq)
+    kv_pos: jnp.ndarray,  # (Lk,) or (B, Lk)
+    q_seg: Optional[jnp.ndarray] = None,  # (Lq,) or (B, Lq)
+    kv_seg: Optional[jnp.ndarray] = None,  # (Lk,) or (B, Lk)
+    *,
+    causal: bool = True,
+    local_only: bool = False,
+    contributed: Optional[jnp.ndarray] = None,  # (Lk,) or (B, Lk)
+    window: Optional[int] = None,
+    publisher_lo=None,  # int / scalar / (B,) — decode rule, see module doc
+) -> jnp.ndarray:
+    """FedAttn visibility as a ``(Bm, Lq, Lk)`` bool mask.
+
+    The ONE mask constructor of the repo (module docstring has the 1-D/2-D
+    vector contract and the sentinel conventions). Rules, in order:
+
+    * ``causal``: ``q_pos >= kv_pos``; bidirectional drops only the
+      position-sentinel padded rows.
+    * ``window``: relative-position sliding window on top.
+    * ``publisher_lo``: decode-time publisher rule (SPMD sharded cache).
+    * segments (when both given): padded rows (``kv_seg < 0``) are never
+      visible; ``local_only`` restricts to the segment diagonal (Phase I,
+      eq. 18); otherwise ``contributed`` thins the off-diagonal to the
+      exchanged rows (Phase II, eqs. 20-21 / 37).
+    """
+    qp, kp = _as2(q_pos), _as2(kv_pos)
+    if causal:
+        mask = qp[:, :, None] >= kp[:, None, :]
+    else:
+        mask = jnp.broadcast_to(
+            kp[:, None, :] < POS_PAD,
+            (max(qp.shape[0], kp.shape[0]), qp.shape[1], kp.shape[1]),
+        )
+    if window is not None:
+        mask &= (qp[:, :, None] - kp[:, None, :]) < window
+    if publisher_lo is not None:
+        lo = jnp.asarray(publisher_lo).reshape((-1, 1, 1))  # scalar or (B,)
+        mask &= kp[:, None, :] >= lo
+    if q_seg is not None and kv_seg is not None:
+        qs, ks = _as2(q_seg), _as2(kv_seg)
+        mask &= ks[:, None, :] >= 0
+        same = qs[:, :, None] == ks[:, None, :]
+        if local_only:
+            mask &= same
+        elif contributed is not None:
+            mask &= same | _as2(contributed)[:, None, :]
+    return mask
+
+
+@dataclass(frozen=True)
+class AttnSpec:
+    """Everything that determines attention visibility + logit shaping, in
+    one carrier: the static flags (``causal``/``local_only``/``window``/
+    ``soft_cap``/``sm_scale``/``publisher_lo``) plus the position/segment/
+    contribution operands (each 1-D shared or 2-D per-row — module doc).
+
+    ``pad_kv``/``chunk_kv`` produce derived specs whose KV-side operands are
+    padded with the repo sentinels / sliced to one KV chunk — the chunked
+    and blocked implementations iterate these instead of re-implementing
+    sentinel bookkeeping.
+    """
+
+    q_pos: jnp.ndarray
+    kv_pos: jnp.ndarray
+    q_seg: Optional[jnp.ndarray] = None
+    kv_seg: Optional[jnp.ndarray] = None
+    contributed: Optional[jnp.ndarray] = None
+    causal: bool = True
+    local_only: bool = False
+    window: Optional[int] = None
+    soft_cap: Optional[float] = None
+    sm_scale: Optional[float] = None
+    publisher_lo: Optional[int | jnp.ndarray] = None
+
+    def scale(self, head_dim: int) -> float:
+        return self.sm_scale if self.sm_scale is not None else head_dim**-0.5
+
+    def mask(self) -> jnp.ndarray:
+        """(Bm, Lq, Lk) visibility of this spec (see :func:`visibility`)."""
+        return visibility(
+            self.q_pos, self.kv_pos, self.q_seg, self.kv_seg,
+            causal=self.causal, local_only=self.local_only,
+            contributed=self.contributed, window=self.window,
+            publisher_lo=self.publisher_lo,
+        )
+
+    def pad_kv(self, pad: int) -> "AttnSpec":
+        """Spec with KV-side operands padded by ``pad`` sentinel slots."""
+        if pad == 0:
+            return self
+        last = lambda a, val: jnp.pad(
+            a, [(0, 0)] * (a.ndim - 1) + [(0, pad)], constant_values=val
+        )
+        return replace(
+            self,
+            kv_pos=last(self.kv_pos, POS_PAD),
+            kv_seg=None if self.kv_seg is None else last(self.kv_seg, SEG_PAD_KERNEL),
+            contributed=(
+                None if self.contributed is None else last(self.contributed, False)
+            ),
+        )
+
+    def chunk_kv(self, start, size: int) -> "AttnSpec":
+        """Spec restricted to KV slots ``[start, start + size)`` (``start``
+        may be traced — chunked/blocked inner loops)."""
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, start, size, axis=a.ndim - 1)
+        return replace(
+            self,
+            kv_pos=sl(self.kv_pos),
+            kv_seg=None if self.kv_seg is None else sl(self.kv_seg),
+            contributed=None if self.contributed is None else sl(self.contributed),
+        )
+
+
+def masked_attention(
+    q: jnp.ndarray,  # (B, Lq, nq, dh)
+    k: jnp.ndarray,  # (B, Lk, nkv, dh)
+    v: jnp.ndarray,
+    mask: jnp.ndarray,  # (Lq, Lk) or (Bm, Lq, Lk), Bm ∈ {1, B}
+    *,
+    soft_cap: Optional[float] = None,
+    sm_scale: Optional[float] = None,
+    return_stats: bool = False,
+) -> jnp.ndarray | tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The ONE masked-softmax attention body (GQA-aware, f32 accumulation).
+
+    With ``return_stats`` it returns the partial-softmax statistics
+    ``(m, l, acc)`` — ``m`` (B, nq, Lq) running max, ``l`` row mass, ``acc``
+    (B, Lq, nq, dh) unnormalized value sum — the flash-decoding combinable
+    form: shards compute stats over their KV slice and a pmax/psum merge
+    reproduces the full softmax exactly (distributed/spmd_attention.py).
+    Fully-masked rows yield zero output (l = 0 guarded), never NaN.
+    """
+    B, Lq, nq, dh = q.shape
+    nkv = k.shape[2]
+    g = nq // nkv
+    scale = sm_scale if sm_scale is not None else dh**-0.5
+    if mask.ndim == 2:
+        mask = mask[None]
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    if soft_cap:
+        s = jnp.tanh(s / soft_cap) * soft_cap
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)  # (B, nq, Lq)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask[:, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    if return_stats:
+        return m, l, acc
+    out = acc / jnp.maximum(l, 1e-20).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)

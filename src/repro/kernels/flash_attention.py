@@ -17,8 +17,19 @@ fetched once per group, not per query head. The m/l/acc running statistics
 live in VMEM scratch across the KV-block grid dimension (TPU grids iterate
 sequentially over the last axis, which makes the accumulation legal).
 
+Vector contract: every position/segment/contribution vector may be shared
+(1-D ``(L,)``) or per batch row (2-D ``(B, L)`` — continuous-batching
+decode over a KV slot pool, coalesced admission prefill). Vectors are
+normalized to ``(Bv, L)`` with ``Bv ∈ {1, B}`` and blocked as ``(1,
+block)`` tiles whose index map selects row ``b`` when the vector is
+batched and row 0 when it is shared — so batched calls cost no extra VMEM
+for shared vectors and the kernel body is identical either way. The block
+mask itself is built by :func:`repro.kernels.core.visibility`, the repo's
+single mask constructor (sentinel conventions documented there).
+
 Validated against kernels/ref.py with interpret=True on CPU
-(tests/test_kernels.py sweeps shapes, dtypes, and mask modes).
+(tests/test_kernels.py sweeps shapes, dtypes, mask modes, and batched
+per-row vectors).
 """
 from __future__ import annotations
 
@@ -30,22 +41,23 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+from repro.kernels import core as _core
+
+NEG_INF = _core.NEG_INF
 
 BLOCK_Q = 128
 BLOCK_K = 128
 
 
 def _kernel(
-    # prefetch-style scalar blocks come first as refs (we pass arrays)
     q_ref,  # (1, BLOCK_Q, 1, dh)
     k_ref,  # (1, BLOCK_K, 1, dh)
     v_ref,
-    qpos_ref,  # (BLOCK_Q,)
-    kpos_ref,  # (BLOCK_K,)
-    qseg_ref,  # (BLOCK_Q,)
-    kseg_ref,  # (BLOCK_K,)
-    contrib_ref,  # (BLOCK_K,) int8
+    qpos_ref,  # (1, BLOCK_Q)
+    kpos_ref,  # (1, BLOCK_K)
+    qseg_ref,  # (1, BLOCK_Q)
+    kseg_ref,  # (1, BLOCK_K)
+    contrib_ref,  # (1, BLOCK_K) int8
     o_ref,  # (1, BLOCK_Q, 1, dh)
     m_scr,  # scratch (BLOCK_Q,) f32
     l_scr,
@@ -77,24 +89,19 @@ def _kernel(
     if soft_cap:
         s = jnp.tanh(s / soft_cap) * soft_cap
 
-    qpos = qpos_ref[...]
-    kpos = kpos_ref[...]
-    mask = jnp.ones(s.shape, dtype=jnp.bool_)
-    if causal:
-        mask &= qpos[:, None] >= kpos[None, :]
-    else:
-        mask &= kpos[None, :] < jnp.iinfo(jnp.int32).max
-    if window is not None:
-        mask &= (qpos[:, None] - kpos[None, :]) < window
-    if use_seg:
-        # negative kv segments are padding sentinels (bucketed prefill pads
-        # with -1, this kernel's own block padding uses -2) — never visible
-        mask &= kseg_ref[...][None, :] >= 0
-    if local_only:
-        mask &= qseg_ref[...][:, None] == kseg_ref[...][None, :]
-    elif use_contrib:
-        same = qseg_ref[...][:, None] == kseg_ref[...][None, :]
-        mask &= same | (contrib_ref[...][None, :] > 0)
+    # the block mask is the shared core's visibility on this tile's rows
+    # (negative kv segments are padding sentinels: bucketed prefill pads
+    # with -1, this kernel's own block padding uses -2 — never visible)
+    mask = _core.visibility(
+        qpos_ref[0],
+        kpos_ref[0],
+        qseg_ref[0] if use_seg else None,
+        kseg_ref[0] if use_seg else None,
+        causal=causal,
+        local_only=local_only,
+        contributed=(contrib_ref[0] > 0) if use_contrib else None,
+        window=window,
+    )[0]  # (BQ, BK)
 
     s = jnp.where(mask, s, NEG_INF)
     m_prev = m_scr[...]
@@ -116,18 +123,32 @@ def _kernel(
         o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _vec_block(vec: jnp.ndarray, block: int, axis: str) -> pl.BlockSpec:
+    """BlockSpec of a normalized (Bv, L) vector: ``(1, block)`` tiles whose
+    row index follows the batch grid axis when the vector is per-row
+    (Bv > 1) and pins row 0 when it is shared (Bv == 1)."""
+    batched = vec.shape[0] > 1
+    if axis == "q":
+        return pl.BlockSpec(
+            (1, block), lambda b, h, qi, ki, _bt=batched: (b if _bt else 0, qi)
+        )
+    return pl.BlockSpec(
+        (1, block), lambda b, h, qi, ki, _bt=batched: (b if _bt else 0, ki)
+    )
+
+
 def flash_attention(
     q: jnp.ndarray,  # (B, Lq, nq, dh)
     k: jnp.ndarray,  # (B, Lk, nkv, dh)
     v: jnp.ndarray,
     *,
-    q_pos: jnp.ndarray,
-    kv_pos: jnp.ndarray,
-    q_seg: Optional[jnp.ndarray] = None,
-    kv_seg: Optional[jnp.ndarray] = None,
+    q_pos: jnp.ndarray,  # (Lq,) or (B, Lq)
+    kv_pos: jnp.ndarray,  # (Lk,) or (B, Lk)
+    q_seg: Optional[jnp.ndarray] = None,  # (Lq,) or (B, Lq)
+    kv_seg: Optional[jnp.ndarray] = None,  # (Lk,) or (B, Lk)
     causal: bool = True,
     local_only: bool = False,
-    contributed: Optional[jnp.ndarray] = None,
+    contributed: Optional[jnp.ndarray] = None,  # (Lk,) or (B, Lk)
     window: Optional[int] = None,
     soft_cap: Optional[float] = None,
     sm_scale: Optional[float] = None,
@@ -141,6 +162,18 @@ def flash_attention(
     g = nq // nkv
     scale = sm_scale if sm_scale is not None else dh**-0.5
 
+    # normalize every vector to (Bv, L), Bv ∈ {1, B} (shared vs per-row)
+    as2 = lambda a: None if a is None else (a if a.ndim == 2 else a[None])
+    q_pos, kv_pos = as2(q_pos), as2(kv_pos)
+    q_seg, kv_seg, contributed = as2(q_seg), as2(kv_seg), as2(contributed)
+    for name, vec, L in (
+        ("q_pos", q_pos, Lq), ("kv_pos", kv_pos, Lk), ("q_seg", q_seg, Lq),
+        ("kv_seg", kv_seg, Lk), ("contributed", contributed, Lk),
+    ):
+        assert vec is None or (vec.shape[0] in (1, B) and vec.shape[1] == L), (
+            f"{name}: expected ({{1,{B}}}, {L}), got {vec.shape}"
+        )
+
     block_q = min(block_q, Lq)
     block_k = min(block_k, Lk)
     # pad sequences to block multiples; padded kv rows carry sentinel pos
@@ -148,30 +181,37 @@ def flash_attention(
     pad_k = (-Lk) % block_k
     if pad_q:
         q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
-        q_pos = jnp.pad(q_pos, (0, pad_q))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)))
         if q_seg is not None:
-            q_seg = jnp.pad(q_seg, (0, pad_q), constant_values=-1)
+            q_seg = jnp.pad(q_seg, ((0, 0), (0, pad_q)), constant_values=-1)
     if pad_k:
         k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
-        kv_pos = jnp.pad(kv_pos, (0, pad_k), constant_values=jnp.iinfo(jnp.int32).max)
+        kv_pos = jnp.pad(
+            kv_pos, ((0, 0), (0, pad_k)), constant_values=_core.POS_PAD
+        )
         if kv_seg is not None:
-            kv_seg = jnp.pad(kv_seg, (0, pad_k), constant_values=-2)
+            kv_seg = jnp.pad(
+                kv_seg, ((0, 0), (0, pad_k)),
+                constant_values=_core.SEG_PAD_KERNEL,
+            )
         if contributed is not None:
-            contributed = jnp.pad(contributed, (0, pad_k), constant_values=False)
+            contributed = jnp.pad(
+                contributed, ((0, 0), (0, pad_k)), constant_values=False
+            )
     Lq_p, Lk_p = Lq + pad_q, Lk + pad_k
     n_q_blocks = Lq_p // block_q
     n_k_blocks = Lk_p // block_k
 
     use_seg = q_seg is not None and kv_seg is not None
     if not use_seg:
-        q_seg = jnp.zeros((Lq_p,), jnp.int32)
-        kv_seg = jnp.zeros((Lk_p,), jnp.int32)
+        q_seg = jnp.zeros((1, Lq_p), jnp.int32)
+        kv_seg = jnp.zeros((1, Lk_p), jnp.int32)
     use_contrib = contributed is not None and not local_only and use_seg
     contrib = (
         contributed.astype(jnp.int8)
         if use_contrib
-        else jnp.ones((Lk_p,), jnp.int8)
+        else jnp.ones((1, Lk_p), jnp.int8)
     )
 
     kernel = functools.partial(
@@ -194,11 +234,11 @@ def flash_attention(
             pl.BlockSpec((1, block_q, 1, dh), lambda b, h, qi, ki: (b, qi, h, 0)),
             pl.BlockSpec((1, block_k, 1, dh), lambda b, h, qi, ki: (b, ki, h // g, 0)),
             pl.BlockSpec((1, block_k, 1, dh), lambda b, h, qi, ki: (b, ki, h // g, 0)),
-            pl.BlockSpec((block_q,), lambda b, h, qi, ki: (qi,)),
-            pl.BlockSpec((block_k,), lambda b, h, qi, ki: (ki,)),
-            pl.BlockSpec((block_q,), lambda b, h, qi, ki: (qi,)),
-            pl.BlockSpec((block_k,), lambda b, h, qi, ki: (ki,)),
-            pl.BlockSpec((block_k,), lambda b, h, qi, ki: (ki,)),
+            _vec_block(q_pos, block_q, "q"),
+            _vec_block(kv_pos, block_k, "k"),
+            _vec_block(q_seg, block_q, "q"),
+            _vec_block(kv_seg, block_k, "k"),
+            _vec_block(contrib, block_k, "k"),
         ],
         out_specs=pl.BlockSpec((1, block_q, 1, dh), lambda b, h, qi, ki: (b, qi, h, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Lq_p, nq, dh), q.dtype),

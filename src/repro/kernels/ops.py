@@ -23,9 +23,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import core as _core
 from repro.kernels import ref as _ref
 
-NEG_INF = _ref.NEG_INF
+NEG_INF = _core.NEG_INF
 
 _DEFAULT_BACKEND = "xla"
 
@@ -65,15 +66,11 @@ def attention(
 ) -> jnp.ndarray:
     """FedAttn-aware multi-head attention. Shapes as attention_ref; the
     position/segment vectors may be per batch row (2-D) — continuous-batching
-    decode against a slot pool — which the ref and xla backends support
-    natively (the Pallas kernel does not yet; batched calls fall back to the
-    chunked xla path)."""
+    decode against a slot pool, coalesced multi-request admission prefill —
+    which ALL backends support through the shared attention core
+    (repro.kernels.core): ref/xla broadcast the (Bm, Lq, Lk) mask, the
+    Pallas kernel prefetches per-row vector blocks via its index maps."""
     backend = backend or _DEFAULT_BACKEND
-    batched_vecs = any(
-        a is not None and a.ndim == 2 for a in (q_pos, kv_pos, q_seg, kv_seg)
-    )
-    if backend == "pallas" and batched_vecs:
-        backend = "xla"
     if backend == "ref" or (backend == "xla" and q.shape[1] * k.shape[1] <= 256 * 256):
         return _ref.attention_ref(
             q, k, v, q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg, kv_seg=kv_seg,
@@ -108,27 +105,26 @@ def _chunked_attention(
     a full chunk, wasting 16x the attention FLOPs/memory on masked slots.
 
     Position/segment vectors may be per batch row (2-D); padding and chunk
-    slicing then run along the last axis and the per-chunk mask carries a
-    batch dim (see kernels.ref.visibility_mask).
+    slicing then run along the last axis via the shared
+    :class:`repro.kernels.core.AttnSpec` (``pad_kv``/``chunk_kv``) and the
+    per-chunk mask carries a batch dim (kernels.core.visibility).
     """
     B, Lq, nq, dh = q.shape
     _, Lk, nkv, _ = k.shape
     g = nq // nkv
     scale = sm_scale if sm_scale is not None else dh**-0.5
 
+    spec = _core.AttnSpec(
+        q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg, kv_seg=kv_seg,
+        contributed=contributed, causal=causal, local_only=local_only,
+        window=window, soft_cap=soft_cap, sm_scale=sm_scale,
+    )
     chunk = max(1, min(chunk, Lk))
     pad = (-Lk) % chunk
     if pad:
-        padv = lambda a, val: jnp.pad(
-            a, [(0, 0)] * (a.ndim - 1) + [(0, pad)], constant_values=val
-        )
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        kv_pos = padv(kv_pos, jnp.iinfo(jnp.int32).max)
-        if kv_seg is not None:
-            kv_seg = padv(kv_seg, -2)
-        if contributed is not None:
-            contributed = padv(contributed, False)
+        spec = spec.pad_kv(pad)
     assert k.shape[1] == Lk + pad and pad < chunk, (
         f"over-padded KV: Lk={Lk} chunk={chunk} padded={k.shape[1]}"
     )
@@ -136,30 +132,16 @@ def _chunked_attention(
 
     qf = q.astype(jnp.float32) * scale
 
-    def kv_chunk(i):
-        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * chunk, chunk, axis=1)
-        # pos/seg vectors: chunk along the (last) KV axis, shared or per-row
-        sv = lambda a: jax.lax.dynamic_slice_in_dim(
-            a, i * chunk, chunk, axis=a.ndim - 1
-        )
-        kc, vc = sl(k), sl(v)
-        posc = sv(kv_pos)
-        segc = sv(kv_seg) if kv_seg is not None else None
-        contc = sv(contributed) if contributed is not None else None
-        return kc, vc, posc, segc, contc
-
     def body(carry, i):
         m, l, acc = carry  # (B,nq,Lq), (B,nq,Lq), (B,Lq,nq,dh)
-        kc, vc, posc, segc, contc = kv_chunk(i)
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * chunk, chunk, axis=1)
+        kc, vc = sl(k), sl(v)
         kcf = jnp.repeat(kc.astype(jnp.float32), g, axis=2)
         vcf = jnp.repeat(vc.astype(jnp.float32), g, axis=2)
         s = jnp.einsum("bqhd,bkhd->bhqk", qf, kcf)  # (B,nq,Lq,chunk)
         if soft_cap:
             s = jnp.tanh(s / soft_cap) * soft_cap
-        mask = _ref.visibility_mask(
-            q_pos, posc, q_seg, segc, causal=causal, local_only=local_only,
-            contributed=contc, window=window,
-        )  # (Bm, Lq, chunk), Bm ∈ {1, B}
+        mask = spec.chunk_kv(i * chunk, chunk).mask()  # (Bm, Lq, chunk)
         s = jnp.where(mask[:, None], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
@@ -195,22 +177,11 @@ def attention_masked(
 ) -> jnp.ndarray:
     """Attention with a caller-supplied (Lq, Lk) visibility mask — used for
     per-participant sync schedules (Fig. 8) where the mask is not expressible
-    through the standard flag vocabulary. Small-scale (O(L^2)) path."""
-    B, Lq, nq, dh = q.shape
-    nkv = k.shape[2]
-    g = nq // nkv
-    scale = sm_scale if sm_scale is not None else dh**-0.5
-    qf = q.astype(jnp.float32) * scale
-    kf = jnp.repeat(k.astype(jnp.float32), g, axis=2)
-    vf = jnp.repeat(v.astype(jnp.float32), g, axis=2)
-    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
-    if soft_cap:
-        s = jnp.tanh(s / soft_cap) * soft_cap
-    s = jnp.where(mask[None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    p = jnp.where(jnp.any(mask, -1)[None, None, :, None], p, 0.0)
-    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
-    return out.astype(q.dtype)
+    through the standard flag vocabulary. Small-scale (O(L^2)) path; the
+    softmax body is the shared core's."""
+    return _core.masked_attention(
+        q, k, v, mask, soft_cap=soft_cap, sm_scale=sm_scale
+    )
 
 
 def decode_attention(

@@ -11,57 +11,17 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+from repro.kernels.core import NEG_INF, AttnSpec, masked_attention
 
 
 # ---------------------------------------------------------------------------
 # Attention oracle (GQA + FedAttn segment masking + window + soft-cap)
 # ---------------------------------------------------------------------------
-
-
-def visibility_mask(
-    q_pos: jnp.ndarray,  # (Lq,) or (B, Lq)
-    kv_pos: jnp.ndarray,  # (Lk,) or (B, Lk)
-    q_seg: Optional[jnp.ndarray] = None,  # (Lq,) or (B, Lq)
-    kv_seg: Optional[jnp.ndarray] = None,  # (Lk,) or (B, Lk)
-    *,
-    causal: bool = True,
-    local_only: bool = False,
-    contributed: Optional[jnp.ndarray] = None,  # (Lk,) or (B, Lk)
-    window: Optional[int] = None,
-) -> jnp.ndarray:
-    """FedAttn visibility as a (Bm, Lq, Lk) bool mask.
-
-    Every position/segment vector may be shared across the batch (1-D) or
-    per batch row (2-D — continuous-batching decode, where each KV-pool slot
-    sits at its own offset with its own partition); ``Bm`` is the broadcast
-    of the leading dims (1 when everything is shared, so the mask collapses
-    to the classic (1, Lq, Lk) form).
-
-    Padding sentinels: kv_pos == int32 max (kernel chunk padding) and
-    kv_seg < 0 (bucketed-prefill -1 / kernel -2 / inactive pool slots) are
-    never visible.
-    """
-    as2 = lambda a: a if a.ndim == 2 else a[None]
-    qp, kp = as2(q_pos), as2(kv_pos)
-    if causal:
-        mask = qp[:, :, None] >= kp[:, None, :]
-    else:
-        mask = jnp.broadcast_to(
-            kp[:, None, :] < jnp.iinfo(jnp.int32).max,
-            (max(qp.shape[0], kp.shape[0]), qp.shape[1], kp.shape[1]),
-        )
-    if window is not None:
-        mask &= (qp[:, :, None] - kp[:, None, :]) < window
-    if q_seg is not None and kv_seg is not None:
-        qs, ks = as2(q_seg), as2(kv_seg)
-        mask &= ks[:, None, :] >= 0
-        same = qs[:, :, None] == ks[:, None, :]
-        if local_only:
-            mask &= same
-        elif contributed is not None:
-            mask &= same | as2(contributed)[:, None, :]
-    return mask
+#
+# Masking lives in repro.kernels.core.visibility — the one mask constructor
+# of the repo (1-D shared or 2-D per-row vectors, sentinel conventions). The
+# oracle here is the smallest composition of that mask with the shared
+# masked-softmax body; the Pallas/chunked/SPMD paths must match it.
 
 
 def attention_ref(
@@ -83,34 +43,16 @@ def attention_ref(
     """Masked multi-head attention oracle, returns (B, Lq, nq, dh).
 
     Position/segment vectors may be shared (1-D) or per batch row (2-D) —
-    see :func:`visibility_mask`."""
-    B, Lq, nq, dh = q.shape
-    _, Lk, nkv, _ = k.shape
-    assert nq % nkv == 0
-    g = nq // nkv
-    scale = sm_scale if sm_scale is not None else dh**-0.5
-
-    qf = q.astype(jnp.float32) * scale
-    kf = k.astype(jnp.float32)
-    vf = v.astype(jnp.float32)
-    # expand kv heads for GQA
-    kf = jnp.repeat(kf, g, axis=2)
-    vf = jnp.repeat(vf, g, axis=2)
-    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
-    if soft_cap:
-        logits = jnp.tanh(logits / soft_cap) * soft_cap
-
-    mask = visibility_mask(
-        q_pos, kv_pos, q_seg, kv_seg, causal=causal, local_only=local_only,
-        contributed=contributed, window=window,
-    )  # (Bm, Lq, Lk), Bm ∈ {1, B}
-    logits = jnp.where(mask[:, None], logits, NEG_INF)
-    # Guard fully-masked rows (softmax of all -inf → zeros, not NaN).
-    probs = jax.nn.softmax(logits, axis=-1)
-    any_vis = jnp.any(mask, axis=-1)  # (Bm, Lq)
-    probs = jnp.where(any_vis[:, None, :, None], probs, 0.0)
-    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
-    return out.astype(q.dtype)
+    see :func:`repro.kernels.core.visibility`."""
+    assert q.shape[2] % k.shape[2] == 0
+    spec = AttnSpec(
+        q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg, kv_seg=kv_seg,
+        contributed=contributed, causal=causal, local_only=local_only,
+        window=window, soft_cap=soft_cap, sm_scale=sm_scale,
+    )
+    return masked_attention(
+        q, k, v, spec.mask(), soft_cap=soft_cap, sm_scale=sm_scale
+    )
 
 
 def decode_attention_ref(

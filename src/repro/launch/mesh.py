@@ -23,6 +23,17 @@ def make_host_mesh():
     return make_mesh((1, 1), ("data", "model"))
 
 
+def make_serving_mesh(n_shards: int):
+    """1-axis 'model' mesh for SPMD pooled serving: the continuous-batching
+    scheduler shards the KV pool's *capacity* dim over it and runs the
+    resident decode step as flash-decoding (partial softmax per shard, one
+    psum). On CPU boxes, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=<n>`` BEFORE any jax
+    import to fake the devices (launch/serve.py --mesh documents this)."""
+    require_devices(n_shards)
+    return make_mesh((n_shards,), ("model",))
+
+
 def require_devices(n: int) -> None:
     have = len(jax.devices())
     if have < n:

@@ -174,26 +174,44 @@ def attention_decode_block(
     context's position/segment vectors are per-row too ((B, S_new) /
     (B, capacity)).
 
-    ``contributed`` is the (capacity,)-shaped sparse-KV-exchange mask for
-    this layer's communication round — only set during bulk prefill-via-
-    decode at sync layers (single-token decode attends the full cache)."""
+    ``contributed`` is the sparse-KV-exchange mask for this layer's
+    communication round — (capacity,) shared, or (B, capacity) per-row in
+    a coalesced admission batch; only set during bulk prefill-via-decode
+    at sync layers (single-token decode attends the full cache).
+
+    Under an active SPMD runtime the cache is sequence-sharded over the
+    cache axes: vector-``cache_len`` writes route through the shard-local
+    scatter and the attention itself through the flash-decoding partial-
+    softmax combine (distributed/spmd_attention.py), with the segment
+    vectors carrying the same per-row masking as the single-device path."""
     theta = _rope_theta_for(spec, config)
     q, k_new, v_new = _project_qkv(p, x, config, ctx.positions, theta)
     S_new = x.shape[1]
+
+    from repro.distributed import runtime
+
+    spmd = runtime.active()
     if jnp.ndim(cache_len) == 1:
-        rows = jnp.arange(x.shape[0])[:, None]
-        cols = cache_len[:, None] + jnp.arange(S_new)[None, :]
-        k_cache = k_cache.at[rows, cols].set(k_new.astype(k_cache.dtype))
-        v_cache = v_cache.at[rows, cols].set(v_new.astype(v_cache.dtype))
+        if spmd:
+            # sequence-sharded cache (pooled SPMD decode): each shard
+            # scatters only the rows landing in its slice — no collective
+            from repro.distributed import spmd_attention
+
+            k_cache, v_cache = spmd_attention.decode_kv_write(
+                k_cache, v_cache, k_new, v_new, cache_len
+            )
+        else:
+            rows = jnp.arange(x.shape[0])[:, None]
+            cols = cache_len[:, None] + jnp.arange(S_new)[None, :]
+            k_cache = k_cache.at[rows, cols].set(k_new.astype(k_cache.dtype))
+            v_cache = v_cache.at[rows, cols].set(v_new.astype(v_cache.dtype))
     else:
         k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), cache_len, axis=1)
         v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), cache_len, axis=1)
     if sync is None:
         sync = ctx.schedule.is_sync(layer_idx)
 
-    from repro.distributed import runtime
-
-    if runtime.active():
+    if spmd:
         from repro.distributed import spmd_attention
 
         publisher_lo = (
@@ -204,6 +222,8 @@ def attention_decode_block(
             q, k_cache, v_cache,
             q_pos=ctx.positions,
             kv_pos=ctx.kv_positions,
+            q_seg=ctx.segments if ctx.enabled else None,
+            kv_seg=ctx.kv_segments if ctx.enabled else None,
             publisher_lo=publisher_lo,
             sync=sync or not ctx.enabled,
             window=spec.window,

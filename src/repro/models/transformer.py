@@ -277,6 +277,31 @@ def init_cache_scan(
     return {"stacked": stacked, "remainder": remainder}
 
 
+def cache_pspecs(cache, cache_axes):
+    """PartitionSpec tree for a decode cache (loop or scan form) with the
+    KV length dim sharded over ``cache_axes`` — the sequence-sharded pool
+    layout of the SPMD continuous-batching scheduler. Attention leaves
+    ``k``/``v`` are ``(..., B, capacity, nkv, dh)`` (a leading
+    ``(n_periods,)`` dim in scan form): capacity is always axis ``ndim-3``.
+    SSM/RWKV state leaves have no sequence dim and stay replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    def leaf(path_key, x):
+        if path_key in ("k", "v"):
+            return P(*([None] * (x.ndim - 3)), cache_axes, None, None)
+        return P(*([None] * x.ndim))
+
+    def layer(c):
+        return {key: leaf(key, val) for key, val in c.items()}
+
+    if isinstance(cache, dict):  # scan form
+        return {
+            "stacked": [layer(c) for c in cache["stacked"]],
+            "remainder": [layer(c) for c in cache["remainder"]],
+        }
+    return [layer(c) for c in cache]
+
+
 def apply_layers_decode_scan(
     params: Params,
     cache: Params,
@@ -288,7 +313,7 @@ def apply_layers_decode_scan(
     *,
     backend: Optional[str] = None,
     moe_impl: str = "dense",
-    contributed: Optional[jnp.ndarray] = None,  # (rounds, capacity) prefill rows
+    contributed: Optional[jnp.ndarray] = None,  # rounds-first prefill rows
 ):
     """All decoder layers as one ``lax.scan`` over the plan's scan units.
 
@@ -296,14 +321,17 @@ def apply_layers_decode_scan(
     [, contributed-rows]) stacks are the scanned inputs and the updated
     caches come back as the stacked outputs — so the trace contains each
     unit's layers exactly once. Per-round sparse-exchange rows are sliced
-    per scan step ((n_periods, syncs_per_period, capacity) reshape), keeping
-    round ordering identical to the python-loop path.
+    per scan step ((n_periods, syncs_per_period, ...) reshape), keeping
+    round ordering identical to the python-loop path. ``contributed`` is
+    rounds-first: ``(rounds, capacity)`` shared rows or ``(rounds, B,
+    capacity)`` per-row rows (coalesced multi-request admission — each
+    batch row carries its own request's exchange mask).
     Returns (x, new_cache) with the cache still in scan form."""
     spp = plan.syncs_per_period
     contrib_body = None
     if contributed is not None and spp > 0:
         contrib_body = contributed[: plan.n_periods * spp].reshape(
-            plan.n_periods, spp, contributed.shape[-1]
+            (plan.n_periods, spp) + contributed.shape[1:]
         )
 
     def unit(h, per_params, per_cache, contrib_rows):
@@ -521,7 +549,10 @@ class TransformerLM:
         which case ``dctx`` must carry per-row (B, S_new) positions/segments
         and (B, capacity) kv_segments (see serving/scheduler.py). Works in
         both ``loop`` and ``scan`` modes; the vector just rides through
-        apply_layer_decode into the per-row cache scatter.
+        apply_layer_decode into the per-row cache scatter. Under an SPMD
+        runtime the same step runs against a capacity-sharded cache
+        (:func:`cache_pspecs` gives the layout) — attention layers switch
+        to the flash-decoding shard_map path, everything else is unchanged.
 
         mode='scan' scans over the layer pattern instead of tracing every
         layer: requires a :class:`ScanPlan` (periodic sync schedule), params

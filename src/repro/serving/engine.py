@@ -120,10 +120,20 @@ class FedAttnEngine:
         backend: Optional[str] = None,
         bucket: str = "pow2",
         layers_mode: Optional[str] = None,
+        mesh=None,
     ):
         """bucket: 'pow2' pads L/n_new to power-of-two buckets so mixed
         request lengths share compiled executables; 'none' compiles per
-        exact shape. layers_mode: None (auto), 'loop', or 'scan'."""
+        exact shape. layers_mode: None (auto), 'loop', or 'scan'.
+
+        mesh: a jax Mesh with a 'model' axis enables the SPMD serving mode
+        of the continuous-batching scheduler (``generate_many``/
+        ``ContinuousBatchingScheduler``): the KV slot pool is sharded over
+        the 'model' axis along capacity and the resident decode step runs
+        flash-decoding against it (distributed/spmd_attention). Standalone
+        ``generate`` calls and admission prefills stay single-device — the
+        mesh only changes where the pooled decode math runs, never its
+        numbers (parity pinned in tests/test_spmd.py)."""
         if config.is_encoder_decoder:
             raise NotImplementedError("engine currently drives decoder-only models")
         if bucket not in ("pow2", "none"):
@@ -134,6 +144,20 @@ class FedAttnEngine:
         self.model = build_model(config)
         self.backend = backend
         self.bucket = bucket
+        self.spmd = None
+        if mesh is not None:
+            from repro.distributed.runtime import SpmdContext
+
+            if "model" not in mesh.axis_names:
+                raise ValueError(
+                    f"serving mesh needs a 'model' axis, got {mesh.axis_names}"
+                )
+            # pool slots stay replicated (batch_axes=()); only the KV
+            # capacity dim is sharded — the flash-decoding split
+            self.spmd = SpmdContext(
+                mesh=mesh, batch_axes=(), seq_axis="model",
+                cache_axes=("model",),
+            )
         self._schedule = self._build_schedule()
         self._plan = T.ScanPlan.from_schedule(config, self._schedule)
         if layers_mode not in (None, "loop", "scan"):
@@ -429,14 +453,22 @@ class FedAttnEngine:
             contrib, extra_embeds,
         )
 
-    def _prefill_fn(self, B, Lp, capacity, n_rounds, has_extra):
+    def _prefill_fn(self, B, Lp, capacity, n_rounds, has_extra,
+                    per_row: bool = False):
         """Build (or fetch) the jitted bucketed prefill.
 
         The closure bakes in engine-invariant state only (config, schedule,
         layers mode); tokens, the real length, position/segment vectors and
         contribution masks are traced arguments — any request in the same
-        (B, Lp, capacity) bucket reuses the executable."""
-        key = (B, Lp, capacity, n_rounds, has_extra)
+        (B, Lp, capacity) bucket reuses the executable.
+
+        ``per_row`` is the coalesced-admission variant (scheduler): every
+        row is an independent request, so ``real_len`` is a (B,) vector,
+        ``q_seg``/``kv_seg`` are per-row ((B, Lp) / (B, capacity)) and
+        ``contributed`` is (B, rounds, capacity) — the batched-vector
+        contract of repro.kernels.core carries them through every backend.
+        The LM head then gathers each row's own last real position."""
+        key = (B, Lp, capacity, n_rounds, has_extra, per_row)
         fn = self._prefill_fns.get(key)
         if fn is not None:
             return fn
@@ -449,6 +481,9 @@ class FedAttnEngine:
 
         def run(params, cache, tokens, real_len, q_pos, q_seg, kv_pos, kv_seg,
                 contributed, extra):
+            if contributed is not None and contributed.ndim == 3:
+                # (B, rounds, capacity) → rounds-first, (rounds, B, capacity)
+                contributed = jnp.swapaxes(contributed, 0, 1)
             dctx = dataclasses.replace(
                 proto, positions=q_pos, segments=q_seg,
                 kv_positions=kv_pos, kv_segments=kv_seg, contributed=None,
@@ -469,7 +504,10 @@ class FedAttnEngine:
                         backend=backend, contributed=row,
                     )
             # LM head on the last real position only (L may be < Lp)
-            x = jax.lax.dynamic_slice_in_dim(x, real_len - 1, 1, axis=1)
+            if per_row:
+                x = jnp.take_along_axis(x, (real_len - 1)[:, None, None], axis=1)
+            else:
+                x = jax.lax.dynamic_slice_in_dim(x, real_len - 1, 1, axis=1)
             x = LY.apply_norm(params["final_norm"], x, cfg)
             logits = LY.apply_lm_head(params["head"], params["embed"], x, cfg)
             return logits[:, 0], cache

@@ -19,11 +19,24 @@ throughput — request interleaving over a shared KV pool:
   ``compile_counts`` contract, pinned in tests/test_scheduler.py). Inactive
   slots ride along fully masked (segment ``-1`` — the repo-wide padding
   sentinel — hides their pages from every query, including their own).
-* **Prefill-into-slot** — admission runs the engine's jitted shape-bucketed
-  prefill at B=1 with the POOL capacity, then scatters the resulting cache
-  row into the slot (one jitted donating write, slot index traced). Mixed
-  prompt lengths share prefill executables per pow2 bucket exactly as in
-  single-request serving.
+* **Coalesced admission** — each tick collects every admissible request,
+  groups them by prefill shape bucket, and runs ONE B>1 bucketed prefill
+  per group instead of per-request B=1 calls (the batch size itself is
+  pow2-padded so group sizes share executables; padding rows replicate a
+  real request and are dropped at the slot scatter). Per-row request state
+  — real length, partition segments, sparse-exchange masks, sampling —
+  rides the batched-vector contract of :mod:`repro.kernels.core`, so one
+  executable per (B-bucket, L-bucket) serves any mix of requests.
+* **SPMD pooled decode** — when the engine carries a mesh
+  (``FedAttnEngine(mesh=...)``), the pool's KV pages are sharded over the
+  mesh's 'model' axis along *capacity* and the resident decode step runs
+  the flash-decoding split of :mod:`repro.distributed.spmd_attention`:
+  each shard computes partial softmax stats over its slice of every slot,
+  one psum combines them, and per-row KV writes land only on the owning
+  shard. Admission prefills stay single-device; the slot scatter writes
+  into the sharded pool. Per-slot frontiers/positions/segments remain
+  traced arguments, so slot churn never recompiles under the mesh either
+  (parity + compile counts pinned in tests/test_spmd.py).
 
 Per-request parity: a request scheduled through the pool produces the same
 tokens/logprobs as a standalone ``engine.generate`` call with the same
@@ -40,6 +53,7 @@ win on a mixed-length Poisson trace.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -51,7 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.partition import Partition
-from repro.serving.engine import GenerationResult, _token_logprob
+from repro.serving.engine import GenerationResult, _next_pow2, _token_logprob
 
 
 @dataclass
@@ -87,11 +101,13 @@ class ContinuousBatchingScheduler:
     """Admit → step → retire loop over a fixed slot pool.
 
     Args:
-      engine: a FedAttnEngine (its compiled prefill, bucket policy and
-        layers_mode are reused as-is).
+      engine: a FedAttnEngine (its compiled prefill, bucket policy,
+        layers_mode and — when present — serving mesh are reused as-is).
       max_slots: pool rows = maximum concurrently-decoding requests.
       capacity: KV pages per slot. Every admitted request needs
         ``bucketed_prefill_len <= capacity`` and ``L + n_new <= capacity``.
+        Under a mesh, capacity must divide by the 'model'-axis size (it is
+        the sharded dim).
       steps_per_admit: decode sub-steps fused into one executable call
         (lax.scan inside the jit). Higher amortizes per-step dispatch;
         admission latency grows by the same factor. Finished slots coast
@@ -116,6 +132,31 @@ class ContinuousBatchingScheduler:
         self._plan = engine._plan if engine.layers_mode == "scan" else None
         self.cache = engine.model.init_cache(max_slots, capacity, plan=self._plan)
 
+        self._spmd = getattr(engine, "spmd", None)
+        self._cache_shardings = None
+        if self._spmd is not None:
+            from repro.models import transformer as T
+
+            n_shards = self._spmd.mesh.shape[self._spmd.cache_axes[0]]
+            if capacity % n_shards:
+                raise ValueError(
+                    f"capacity {capacity} must divide over the {n_shards} "
+                    "cache shards of the serving mesh"
+                )
+            if not all(s.kind == "attn" for s in engine.config.layer_specs()):
+                raise NotImplementedError(
+                    "SPMD pooled decode shards the KV capacity dim; "
+                    "SSM/hybrid stacks carry unsharded recurrent state "
+                    "(run them without a serving mesh)"
+                )
+            pspecs = T.cache_pspecs(self.cache, self._spmd.cache_axes)
+            self._cache_shardings = jax.tree.map(
+                lambda sp: jax.sharding.NamedSharding(self._spmd.mesh, sp),
+                pspecs,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+            )
+            self.cache = jax.device_put(self.cache, self._cache_shardings)
+
         S, C = max_slots, capacity
         self._slots: list[Optional[_Slot]] = [None] * S
         self._queue: deque = deque()  # (req_id, Request, arrival_time|None)
@@ -131,6 +172,7 @@ class ContinuousBatchingScheduler:
         self._temps = np.full(S, 1.0, np.float32)
         self._sampled = np.zeros(S, bool)
         kd = jax.random.key_data(jax.random.key(0))
+        self._key_shape, self._key_dtype = kd.shape, kd.dtype
         self._key_data = np.zeros((S,) + kd.shape, kd.dtype)
 
         self._step_fns: dict = {}
@@ -140,12 +182,41 @@ class ContinuousBatchingScheduler:
         # per-tick arrays tok/write_pos/fold are tiny; these are the wide
         # ones + the ones that cost dispatches to rebuild)
         self._slot_args = None
-        # on CPU the B=1 prefill cache can be allocated once and reused for
-        # every admission (nothing donates or mutates it); accelerators
-        # donate prefill buffers, so there it is rebuilt per admit
-        self._one_cache = (
-            engine.model.init_cache(1, capacity, plan=self._plan)
-            if jax.default_backend() == "cpu" else None
+        # on CPU the admission prefill caches can be allocated once per
+        # admission-batch bucket and reused (nothing donates or mutates
+        # them); accelerators donate prefill buffers, so there they are
+        # rebuilt per admit
+        self._prefill_caches: dict = {} if jax.default_backend() == "cpu" else None
+        # coalesced (B>1) admission rides per-row 2-D segment vectors — the
+        # batched contract attention kernels honor but recurrences do not
+        # (SSM shift/reset masks are 1-D); SSM/hybrid stacks admit one
+        # request at a time through the legacy shared-vector prefill
+        self._coalesce = all(
+            s.kind == "attn" for s in engine.config.layer_specs()
+        )
+
+    def _spmd_scope(self):
+        """runtime.spmd context for tracing/running pooled executables —
+        the attention layers route through distributed/spmd_attention
+        exactly while this is active."""
+        if self._spmd is None:
+            return contextlib.nullcontext()
+        from repro.distributed import runtime
+
+        s = self._spmd
+        return runtime.spmd(
+            s.mesh, batch_axes=s.batch_axes, seq_axis=s.seq_axis,
+            cache_axes=s.cache_axes,
+        )
+
+    def _constrain_cache(self, cache):
+        """Pin the pool's sharding inside jitted closures so executions
+        under the mesh always hand back an identically-sharded pool (no
+        sharding drift → no silent re-specialization across ticks)."""
+        if self._cache_shardings is None:
+            return cache
+        return jax.tree.map(
+            jax.lax.with_sharding_constraint, cache, self._cache_shardings
         )
 
     # -- introspection ----------------------------------------------------------
@@ -214,62 +285,165 @@ class ContinuousBatchingScheduler:
         prefill length and the prompt+generation span must both fit. Kept
         exact (no pow2 rounding) — every page of width costs attention
         FLOPs in every slot at every step, and pool executables are keyed
-        on the capacity anyway."""
+        on the capacity anyway. Under a serving mesh the result is rounded
+        up to a multiple of the shard count (capacity is the sharded dim)."""
         need = 2
         for r in requests:
             L = int(jnp.asarray(r.tokens).reshape(-1).shape[0])
             need = max(need, engine._bucket_len(L), L + r.n_new)
+        spmd = getattr(engine, "spmd", None)
+        if spmd is not None:
+            n = spmd.mesh.shape[spmd.cache_axes[0]]
+            need += (-need) % n
         return need
 
     # -- admission --------------------------------------------------------------
 
-    def _free_slot(self) -> Optional[int]:
-        for s, occ in enumerate(self._slots):
-            if occ is None:
-                return s
-        return None
+    def _admit_batch_size(self, B: int, Lp: int, n_rounds) -> int:
+        """pow2-pad the admission batch, preferring the smallest ALREADY
+        COMPILED (B', Lp) prefill with Bp <= B' <= 2·Bp: re-using a
+        slightly larger executable costs at most one doubling of padded
+        rows, while a fresh compile costs seconds — so a pool that once
+        admitted a 4-wide group keeps serving later 2- or 3-wide groups
+        with zero new executables (the coalescing contract pinned in
+        test_scheduler.py). The 2x cap matters: without it a lone
+        re-admission would ride the widest executable ever compiled and
+        burn B_max/1 padded prefill FLOPs per admit (observed as a ~30%
+        pooled-throughput hit on the 2-vCPU box)."""
+        Bp = _next_pow2(B)
+        compiled = sorted(
+            k[0] for k in self.engine._prefill_fns
+            if k[1:] == (Lp, self.capacity, n_rounds, False, True)
+            and Bp <= k[0] <= 2 * Bp
+        )
+        return compiled[0] if compiled else Bp
 
-    def _admit(self, slot: int, rid: int, req: Request) -> None:
+    def _admit_group(self, slots: list[int], items: list, Lp: int) -> None:
+        """Admit same-bucket requests with ONE B>1 bucketed prefill.
+
+        The admission batch is pow2-padded (padding rows replicate request
+        0 — their compute is discarded and their slot index is out of range,
+        so the slot scatter drops them), keeping the executable set bounded:
+        one per (B-bucket, L-bucket), with upward reuse of already-compiled
+        wider batches (:meth:`_admit_batch_size`). Per-request state flows
+        as per-row vectors (real_len, segments, kv segments, contribution
+        masks, sampling knobs) — the batched-vector contract of
+        kernels.core."""
         eng = self.engine
-        L = int(req.tokens.shape[0])
-        Lp = eng._bucket_len(L)
-        ctx = eng.build_context(L, partition=req.partition, rng=req.rng)
-        one = self._one_cache
-        if one is None:
-            one = eng.model.init_cache(1, self.capacity, plan=self._plan)
-        last, one = eng._prefill_compiled(
-            req.tokens[None], ctx, one, None, L, Lp, self.capacity
-        )
-        sampled = req.temperature > 0.0 and req.rng is not None
-        key = req.rng if req.rng is not None else jax.random.key(0)
-        tok0, lp0 = self._admit_finish_fn()(
-            last, jnp.float32(max(req.temperature, 1e-6)), key,
-            jnp.asarray(sampled),
-        )
-        self.cache = self._slot_write_fn()(self.cache, one, jnp.int32(slot))
+        B = len(items)
+        C = self.capacity
 
-        self._tok[slot] = int(tok0[0])
-        self._write_pos[slot] = L  # tok0's KV goes to page L next tick
-        self._fold[slot] = 1  # token m samples with fold_in(rng, m)
-        self._qseg[slot] = ctx.partition.publisher(ctx.config.publisher_index)
-        self._kvseg[slot] = np.asarray(ctx.decode_kv_segments(self.capacity))
-        self._temps[slot] = max(req.temperature, 1e-6)
-        self._sampled[slot] = sampled
-        self._key_data[slot] = np.asarray(jax.random.key_data(key))
+        tokens = np.zeros((B, Lp), np.int32)
+        real_len = np.ones(B, np.int32)
+        q_seg = np.full((B, Lp), -1, np.int32)
+        kv_seg = np.zeros((B, C), np.int32)
+        temps = np.ones(B, np.float32)
+        sampled = np.zeros(B, bool)
+        key_data = np.zeros((B,) + self._key_shape, self._key_dtype)
+        ctxs, contrib_rows = [], []
+        for i, (rid, req) in enumerate(items):
+            L = int(req.tokens.shape[0])
+            ctx = eng.build_context(L, partition=req.partition, rng=req.rng)
+            ctxs.append(ctx)
+            tokens[i, :L] = np.asarray(req.tokens)
+            real_len[i] = L
+            q_seg[i, :L] = np.asarray(ctx.segments)
+            kv_seg[i] = np.asarray(ctx.decode_kv_segments(C))
+            temps[i] = max(req.temperature, 1e-6)
+            sampled[i] = req.temperature > 0.0 and req.rng is not None
+            key = req.rng if req.rng is not None else jax.random.key(0)
+            key_data[i] = np.asarray(jax.random.key_data(key))
+            if ctx.contributed is not None:
+                rounds = ctx.contributed.shape[0]
+                row = np.zeros((rounds, C), bool)
+                row[:, : ctx.contributed.shape[1]] = np.asarray(ctx.contributed)
+                contrib_rows.append(row)
+        n_rounds = contrib_rows[0].shape[0] if contrib_rows else None
+
+        if self._coalesce:
+            Bp = self._admit_batch_size(B, Lp, n_rounds)
+            pad = lambda a: np.concatenate(
+                [a, np.broadcast_to(a[:1], (Bp - B,) + a.shape[1:])]
+            ) if Bp > B else a  # padding rows replicate request 0
+            contributed = None
+            if contrib_rows:
+                contributed = jnp.asarray(pad(np.stack(contrib_rows)))
+            one = None
+            if self._prefill_caches is not None:
+                one = self._prefill_caches.get(Bp)
+            if one is None:
+                one = eng.model.init_cache(Bp, C, plan=self._plan)
+                if self._prefill_caches is not None:
+                    self._prefill_caches[Bp] = one
+            fn = eng._prefill_fn(Bp, Lp, C, n_rounds, False, per_row=True)
+            last, one = fn(
+                eng._run_params(), one, jnp.asarray(pad(tokens)),
+                jnp.asarray(pad(real_len)), jnp.arange(Lp, dtype=jnp.int32),
+                jnp.asarray(pad(q_seg)), jnp.arange(C, dtype=jnp.int32),
+                jnp.asarray(pad(kv_seg)), contributed, None,
+            )
+            tok0, lp0 = self._admit_finish_fn()(
+                last, jnp.asarray(pad(temps)), jnp.asarray(pad(key_data)),
+                jnp.asarray(pad(sampled)),
+            )
+            # scatter the real rows into their slots (padding rows get an
+            # out-of-range index and drop via scatter OOB semantics)
+            slot_idx = np.full(Bp, self.max_slots, np.int32)
+            slot_idx[:B] = slots
+            self.cache = self._slot_write_fn()(
+                self.cache, one, jnp.asarray(slot_idx)
+            )
+        else:
+            # SSM/hybrid: legacy one-request-at-a-time admission with the
+            # shared-vector (1-D) prefill (recurrences cannot take per-row
+            # segment vectors); callers always pass len(items) == 1 here
+            assert B == 1
+            (rid, req), ctx, L = items[0], ctxs[0], int(real_len[0])
+            one = None
+            if self._prefill_caches is not None:
+                one = self._prefill_caches.get(1)
+            if one is None:
+                one = eng.model.init_cache(1, C, plan=self._plan)
+                if self._prefill_caches is not None:
+                    self._prefill_caches[1] = one
+            last, one = eng._prefill_compiled(
+                req.tokens[None], ctx, one, None, L, Lp, C
+            )
+            tok0, lp0 = self._admit_finish_fn()(
+                last, jnp.asarray(temps), jnp.asarray(key_data),
+                jnp.asarray(sampled),
+            )
+            self.cache = self._slot_write_fn()(
+                self.cache, one, jnp.asarray(np.asarray(slots, np.int32))
+            )
+
+        tok0 = np.asarray(tok0)
+        lp0 = np.asarray(lp0)
+        for i, (rid, req) in enumerate(items):
+            slot, ctx = slots[i], ctxs[i]
+            L = int(real_len[i])
+            self._tok[slot] = int(tok0[i])
+            self._write_pos[slot] = L  # tok0's KV goes to page L next tick
+            self._fold[slot] = 1  # token m samples with fold_in(rng, m)
+            self._qseg[slot] = ctx.partition.publisher(ctx.config.publisher_index)
+            self._kvseg[slot] = kv_seg[i]
+            self._temps[slot] = temps[i]
+            self._sampled[slot] = sampled[i]
+            self._key_data[slot] = key_data[i]
+            self._slots[slot] = _Slot(
+                req_id=rid,
+                real_len=L,
+                n_new=req.n_new,
+                n_emitted=1,
+                tokens=[int(tok0[i])],
+                logprobs=[float(lp0[i])],
+                comm_bytes=ctx.comm_bytes_per_participant(
+                    eng.config.n_kv_heads, eng.config.head_dim
+                ),
+            )
+            if req.n_new == 1:
+                self._retire(slot)
         self._slot_args = None  # slot set changed; re-upload wide arrays
-        self._slots[slot] = _Slot(
-            req_id=rid,
-            real_len=L,
-            n_new=req.n_new,
-            n_emitted=1,
-            tokens=[int(tok0[0])],
-            logprobs=[float(lp0[0])],
-            comm_bytes=ctx.comm_bytes_per_participant(
-                eng.config.n_kv_heads, eng.config.head_dim
-            ),
-        )
-        if req.n_new == 1:
-            self._retire(slot)
 
     def _retire(self, slot: int) -> None:
         occ = self._slots[slot]
@@ -287,17 +461,22 @@ class ContinuousBatchingScheduler:
         self._slot_args = None
 
     def _admit_finish_fn(self):
-        """Jitted fused first-token sampler: one dispatch instead of the
-        eager argmax/fold_in/categorical/log-softmax chain per admission —
-        semantics exactly engine._sample(last, temp, rng, step=0) plus
-        _token_logprob."""
+        """Jitted fused first-token sampler over a whole admission batch:
+        one dispatch instead of a per-request argmax/fold_in/categorical/
+        log-softmax chain — row ``i``'s semantics are exactly
+        engine._sample(last[i], temp, rng, step=0) plus _token_logprob."""
         if self._admit_fn is not None:
             return self._admit_fn
 
-        def finish(last, temp, key, sampled):
+        def finish(last, temps, key_data, sampled):
+            keys = jax.random.wrap_key_data(key_data)
             greedy = jnp.argmax(last, axis=-1)
-            r = jax.random.fold_in(key, 0)
-            cat = jax.random.categorical(r, last.astype(jnp.float32) / temp)
+            folded = jax.vmap(lambda k: jax.random.fold_in(k, 0))(keys)
+            cat = jax.vmap(
+                lambda k, l, t: jax.random.categorical(
+                    k, l.astype(jnp.float32) / t
+                )
+            )(folded, last, temps)
             tok0 = jnp.where(sampled, cat, greedy)
             return tok0, _token_logprob(last, tok0)
 
@@ -307,28 +486,33 @@ class ContinuousBatchingScheduler:
     # -- the resident decode step -----------------------------------------------
 
     def _slot_write_fn(self):
-        """Jitted whole-row scatter of a B=1 cache into the pool (slot index
-        traced — one executable regardless of which slot admits)."""
+        """Jitted whole-row scatter of an admission batch's caches into the
+        pool (slot indices traced — one executable regardless of which
+        slots admit; out-of-range indices, used by pow2 padding rows, drop).
+        Under a mesh the written pool keeps the capacity sharding."""
         if self._write_fn is not None:
             return self._write_fn
 
         scan_form = isinstance(self.cache, dict)
 
-        def write(pool, one, slot):
+        def write(pool, batch, slots):
             if scan_form:
                 # stacked leaves: (n_periods, B, ...) — batch axis 1
                 stacked = jax.tree.map(
-                    lambda pl, ol: pl.at[:, slot].set(ol[:, 0]),
-                    pool["stacked"], one["stacked"],
+                    lambda pl, ol: pl.at[:, slots].set(ol.astype(pl.dtype)),
+                    pool["stacked"], batch["stacked"],
                 )
                 remainder = jax.tree.map(
-                    lambda pl, ol: pl.at[slot].set(ol[0]),
-                    pool["remainder"], one["remainder"],
+                    lambda pl, ol: pl.at[slots].set(ol.astype(pl.dtype)),
+                    pool["remainder"], batch["remainder"],
                 )
-                return {"stacked": stacked, "remainder": remainder}
-            return jax.tree.map(
-                lambda pl, ol: pl.at[slot].set(ol[0]), pool, one
-            )
+                out = {"stacked": stacked, "remainder": remainder}
+            else:
+                out = jax.tree.map(
+                    lambda pl, ol: pl.at[slots].set(ol.astype(pl.dtype)),
+                    pool, batch,
+                )
+            return self._constrain_cache(out)
 
         donate = (0,) if jax.default_backend() != "cpu" else ()
         self._write_fn = jax.jit(write, donate_argnums=donate)
@@ -338,7 +522,10 @@ class ContinuousBatchingScheduler:
         """Build (or fetch) THE decode executable: ``n_steps`` fused
         sub-steps over all slots. Static key = (pool shape, n_steps) only;
         per-slot frontiers/segments/sampling state are traced, so admission
-        and retirement never trigger a recompile."""
+        and retirement never trigger a recompile — with or without a mesh
+        (the SPMD variant differs only in where the attention math runs:
+        the trace happens under the runtime.spmd scope, routing it through
+        the flash-decoding shard_map)."""
         key = n_steps
         fn = self._step_fns.get(key)
         if fn is not None:
@@ -381,7 +568,7 @@ class ContinuousBatchingScheduler:
             (cache, _, _, _), (toks, lps) = jax.lax.scan(
                 body, (cache, tok, write_pos, fold), None, length=n_steps
             )
-            return toks, lps, cache  # (n_steps, S) each
+            return toks, lps, self._constrain_cache(cache)  # (n_steps, S)
 
         donate = (1,) if jax.default_backend() != "cpu" else ()
         fn = jax.jit(run, donate_argnums=donate)
@@ -391,38 +578,50 @@ class ContinuousBatchingScheduler:
     # -- the scheduler tick -----------------------------------------------------
 
     def step(self, *, now: Optional[float] = None) -> bool:
-        """One tick: admit arrived requests into free slots, run one fused
-        decode call over the pool, retire finished slots. Returns True if
-        any decode work ran (False ⇒ idle: nothing active and nothing
+        """One tick: admit every arrived request into free slots (one
+        coalesced bucketed prefill per shape bucket), run one fused decode
+        call over the pool, retire finished slots. Returns True if any
+        decode work ran (False ⇒ idle: nothing active and nothing
         admissible yet)."""
-        while self._queue:
+        free = [s for s, occ in enumerate(self._slots) if occ is None]
+        batch: list = []
+        while self._queue and len(batch) < len(free):
             rid, req, at = self._queue[0]
             if at is not None and at > (now if now is not None else time.perf_counter()):
                 break
-            slot = self._free_slot()
-            if slot is None:
-                break
             self._queue.popleft()
-            self._admit(slot, rid, req)
+            batch.append((rid, req))
+        if batch:
+            groups: dict = {}
+            for n, (rid, req) in enumerate(batch):
+                Lp = self.engine._bucket_len(int(req.tokens.shape[0]))
+                # coalesce same-bucket admissions into one B>1 prefill;
+                # SSM/hybrid stacks admit singly (1-D segment vectors only)
+                key = Lp if self._coalesce else (Lp, n)
+                groups.setdefault(key, (Lp, []))[1].append((rid, req))
+            for Lp, items in groups.values():
+                self._admit_group([free.pop(0) for _ in items], items, Lp)
 
         if self.n_active == 0:
             return False
 
-        fn = self._step_fn(self.steps_per_admit)
-        if self._slot_args is None:
-            # wide / admission-rate inputs: re-uploaded only when the slot
-            # set changed, not every tick
-            self._slot_args = (
-                jnp.asarray(self._qseg), jnp.asarray(self._kvseg),
-                jnp.asarray(self._temps), jnp.asarray(self._sampled),
-                jnp.asarray(self._key_data),
+        with self._spmd_scope():
+            fn = self._step_fn(self.steps_per_admit)
+            if self._slot_args is None:
+                # wide / admission-rate inputs: re-uploaded only when the
+                # slot set changed, not every tick
+                self._slot_args = (
+                    jnp.asarray(self._qseg), jnp.asarray(self._kvseg),
+                    jnp.asarray(self._temps), jnp.asarray(self._sampled),
+                    jnp.asarray(self._key_data),
+                )
+            q_seg, kv_seg, temps, sampled, key_data = self._slot_args
+            toks, lps, self.cache = fn(
+                self.engine._run_params(), self.cache,
+                jnp.asarray(self._tok), jnp.asarray(self._write_pos),
+                jnp.asarray(self._fold), q_seg, kv_seg, temps, sampled,
+                key_data,
             )
-        q_seg, kv_seg, temps, sampled, key_data = self._slot_args
-        toks, lps, self.cache = fn(
-            self.engine._run_params(), self.cache,
-            jnp.asarray(self._tok), jnp.asarray(self._write_pos),
-            jnp.asarray(self._fold), q_seg, kv_seg, temps, sampled, key_data,
-        )
         toks = np.asarray(toks)
         lps = np.asarray(lps)
         k = self.steps_per_admit

@@ -92,6 +92,93 @@ def test_flash_property_random_shapes(Lq, nkv, g, bq):
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=5e-5)
 
 
+def test_flash_batched_row_vectors_decode():
+    """Pooled-decode shape: (B, 1) per-row query positions/segments against
+    a (B, C) per-row kv-segment pool — mixed frontiers, one inactive row
+    fully padded with segment -1 — must match the oracle (which the shared
+    core makes natively batched)."""
+    B, C, nq, nkv, dh = 3, 64, 4, 2, 32
+    ks = jax.random.split(jax.random.key(7), 3)
+    q = jax.random.normal(ks[0], (B, 1, nq, dh))
+    k = jax.random.normal(ks[1], (B, C, nkv, dh))
+    v = jax.random.normal(ks[2], (B, C, nkv, dh))
+    kv_pos = jnp.arange(C)  # shared cache positions
+    q_pos = jnp.array([[40], [17], [0]])  # per-row frontiers
+    q_seg = jnp.array([[3], [1], [-1]])  # row 2: inactive slot
+    kv_seg = jnp.stack([
+        jnp.repeat(jnp.arange(4), 16),  # row 0: 4-participant partition
+        jnp.where(jnp.arange(C) < 20, 1, -1),  # row 1: short occupant
+        jnp.full((C,), -1),  # row 2: freed slot — fully masked
+    ])
+    for local in (False, True):
+        out = flash_attention(
+            q, k, v, q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg, kv_seg=kv_seg,
+            local_only=local, block_q=32, block_k=32,
+        )
+        want = ref.attention_ref(
+            q, k, v, q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg, kv_seg=kv_seg,
+            local_only=local,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(want), atol=3e-5
+        )
+    assert np.all(np.asarray(out[2]) == 0.0)  # fully-masked row: zeros
+
+
+def test_flash_batched_row_vectors_prefill():
+    """Coalesced-admission shape: (B, L) per-row segments with -1 padding
+    tails (different real lengths per row) + per-row contribution masks."""
+    B, L, nq, nkv, dh = 2, 48, 4, 2, 32
+    ks = jax.random.split(jax.random.key(8), 4)
+    q = jax.random.normal(ks[0], (B, L, nq, dh))
+    k = jax.random.normal(ks[1], (B, L, nkv, dh))
+    v = jax.random.normal(ks[2], (B, L, nkv, dh))
+    pos = jnp.arange(L)
+    seg = jnp.stack([
+        jnp.where(jnp.arange(L) < 40, jnp.arange(L) // 10, -1),
+        jnp.where(jnp.arange(L) < 24, jnp.arange(L) // 6, -1),
+    ])
+    contrib = jax.random.bernoulli(ks[3], 0.25, (B, L))
+    out = flash_attention(
+        q, k, v, q_pos=pos, kv_pos=pos, q_seg=seg, kv_seg=seg,
+        contributed=contrib, block_q=32, block_k=32,
+    )
+    want = ref.attention_ref(
+        q, k, v, q_pos=pos, kv_pos=pos, q_seg=seg, kv_seg=seg,
+        contributed=contrib,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
+def test_pallas_backend_no_longer_falls_back_for_batched_vectors(monkeypatch):
+    """ops.attention(backend='pallas') with 2-D pos/seg vectors must run the
+    Pallas kernel, not silently fall back to the chunked xla path (the
+    pre-refactor behavior this repo's SPMD pooled decode was blocked on)."""
+    from repro.kernels import ops
+
+    def boom(*a, **k):
+        raise AssertionError("pallas call fell back to the chunked xla path")
+
+    monkeypatch.setattr(ops, "_chunked_attention", boom)
+    B, C, nq, nkv, dh = 2, 32, 2, 2, 16
+    ks = jax.random.split(jax.random.key(9), 3)
+    q = jax.random.normal(ks[0], (B, 1, nq, dh))
+    k = jax.random.normal(ks[1], (B, C, nkv, dh))
+    v = jax.random.normal(ks[2], (B, C, nkv, dh))
+    q_pos = jnp.array([[20], [9]])
+    q_seg = jnp.array([[0], [0]])
+    kv_seg = jnp.zeros((B, C), jnp.int32)
+    out = ops.attention(
+        q, k, v, q_pos=q_pos, kv_pos=jnp.arange(C), q_seg=q_seg,
+        kv_seg=kv_seg, backend="pallas",
+    )
+    want = ref.attention_ref(
+        q, k, v, q_pos=q_pos, kv_pos=jnp.arange(C), q_seg=q_seg,
+        kv_seg=kv_seg,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
 # ---------------------------------------------------------------------------
 # rwkv6
 # ---------------------------------------------------------------------------

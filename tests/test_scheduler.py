@@ -158,6 +158,66 @@ def test_n_new_1_request_retires_at_admit(eng):
     _assert_matches_solo(eng, res, reqs)
 
 
+def test_admission_coalescing_one_prefill_executable():
+    """Same-bucket admissions arriving together must run as ONE B>1
+    bucketed prefill: a fresh engine serving 4 same-bucket requests through
+    a 4-slot pool ends the trace with exactly one prefill executable (the
+    coalesced per-row one), and a second identical trace adds zero."""
+    e = _engine(tiny_config())
+    reqs = [_req(i, 20 + i, 4, temp=0.5 * (i % 2)) for i in range(4)]  # all Lp=32
+    sched = ContinuousBatchingScheduler(e, max_slots=4, capacity=64)
+    res = sched.run(reqs)
+    cc = sched.compile_counts
+    assert cc["prefill"] == 1, cc  # ONE coalesced (B=4, Lp=32) executable
+    assert cc["decode_step"] == 1 and cc["slot_write"] == 1, cc
+    sched.run(reqs)
+    assert sched.compile_counts == cc
+    _assert_matches_solo(e, res, reqs)
+
+
+def test_admission_coalescing_reuses_wider_batches():
+    """A later, smaller same-bucket group must pad up into the
+    already-compiled wider admission executable instead of compiling a new
+    one (padding rows are dropped at the slot scatter)."""
+    e = _engine(tiny_config())
+    sched = ContinuousBatchingScheduler(e, max_slots=4, capacity=64)
+    res4 = sched.run([_req(i, 18 + i, 3) for i in range(4)])  # compiles B=4
+    n = sched.compile_counts["prefill"]
+    reqs2 = [_req(10, 21, 3), _req(11, 24, 3, temp=0.8)]  # group of 2
+    res2 = sched.run(reqs2)
+    assert sched.compile_counts["prefill"] == n  # padded into the B=4 exec
+    _assert_matches_solo(e, res4 + res2, [_req(i, 18 + i, 3) for i in range(4)] + reqs2)
+
+
+def test_admission_coalescing_mixed_buckets_and_partitions():
+    """One tick admitting requests across two L-buckets with per-request
+    partitions and sparse-KV rng: each bucket coalesces separately; per-row
+    segment/contribution vectors must keep exact solo parity."""
+    from repro.core.partition import Partition
+
+    cfg = tiny_config(
+        fedattn=FedAttnConfig(
+            n_participants=4, sync_interval=2,
+            kv_exchange_ratio=0.5, kv_selection="strided",
+        ),
+    )
+    e = _engine(cfg)
+    reqs = [
+        Request(tokens=jax.random.randint(jax.random.key(20), (20,), 0, cfg.vocab_size),
+                n_new=4, rng=jax.random.key(30)),
+        Request(tokens=jax.random.randint(jax.random.key(21), (28,), 0, cfg.vocab_size),
+                n_new=4, rng=jax.random.key(31),
+                partition=Partition.from_sizes([16, 4, 4, 4])),
+        Request(tokens=jax.random.randint(jax.random.key(22), (40,), 0, cfg.vocab_size),
+                n_new=3, rng=jax.random.key(32), temperature=0.6),
+    ]
+    sched = ContinuousBatchingScheduler(e, max_slots=4, capacity=64)
+    res = sched.run(reqs)
+    # buckets {32: 2 reqs, 64: 1 req} -> exactly two prefill executables
+    assert sched.compile_counts["prefill"] == 2, sched.compile_counts
+    _assert_matches_solo(e, res, reqs)
+
+
 def test_capacity_validation(eng):
     sched = ContinuousBatchingScheduler(eng, max_slots=2, capacity=32)
     with pytest.raises(ValueError, match="KV pages"):

@@ -114,3 +114,52 @@ def test_adaptive_ratio_mean_preserved():
     r = agg.adaptive_ratio_per_participant(p, 0.25, imp)
     assert float(r[3]) > float(r[0])
     assert abs(float(jnp.mean(imp / jnp.mean(imp) * 0.25)) - 0.25) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# SPMD static-count row selection (distributed/spmd_attention._select_rows)
+# ---------------------------------------------------------------------------
+
+
+def test_spmd_select_rows_keynorm_picks_largest_key_norms():
+    """keynorm is a STATIC-count top-k by ||K||_2 over batch+heads — the
+    SPMD gather counterpart of aggregation.contribution_mask('keynorm')."""
+    from repro.distributed.spmd_attention import _select_rows
+
+    Ls, n_keep = 16, 4
+    rng = np.random.default_rng(0)
+    keys = rng.normal(size=(2, Ls, 2, 8)).astype(np.float32)
+    big = [3, 7, 11, 14]
+    keys[:, big] *= 10.0  # unambiguous top rows
+    idx = np.asarray(
+        _select_rows(jnp.arange(Ls), Ls, n_keep, "keynorm", keys=jnp.asarray(keys))
+    )
+    assert idx.shape == (n_keep,)  # static count — SPMD-gatherable
+    np.testing.assert_array_equal(np.sort(idx), big)
+
+
+def test_spmd_select_rows_keynorm_requires_keys():
+    from repro.distributed.spmd_attention import _select_rows
+
+    with pytest.raises(ValueError, match="keynorm"):
+        _select_rows(jnp.arange(8), 8, 2, "keynorm")
+
+
+def test_spmd_select_rows_random_warns_and_aliases_strided():
+    """'random' has no static-count SPMD realization: it must warn once and
+    produce exactly the deterministic strided stand-in, never silently
+    pretend to sample."""
+    from repro.distributed.spmd_attention import _select_rows
+
+    pos = jnp.arange(16)
+    with pytest.warns(UserWarning, match="strided"):
+        got = _select_rows(pos, 16, 4, "random")
+    want = _select_rows(pos, 16, 4, "strided")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_spmd_select_rows_unknown_selection_raises():
+    from repro.distributed.spmd_attention import _select_rows
+
+    with pytest.raises(ValueError, match="kv_selection"):
+        _select_rows(jnp.arange(8), 8, 2, "nope")
