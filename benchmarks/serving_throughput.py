@@ -15,6 +15,12 @@ scheduler results are also checked token-exact against the sequential
 ones — the throughput claim is only meaningful if interleaving preserves
 per-request outputs.
 
+The ``serving_hybrid_jamba_bucketing`` record replays a mixed-length trace
+through a jamba-style mamba+attention pool with L-bucketing on vs off: the
+recurrence validity contract (repro/kernels/core docstring) made pow2
+buckets legal for SSM/hybrid stacks, collapsing the per-exact-L admission
+prefill executables into per-bucket ones (both counts CI-gated).
+
 ``--mesh N`` additionally measures the SPMD pooled path: the same trace
 through a pool whose KV capacity is sharded over an N-way 'model' mesh
 (flash-decoding partial-softmax per shard + one psum,
@@ -53,7 +59,7 @@ from repro.launch.serve import poisson_trace  # noqa: E402
 from repro.models import build_model  # noqa: E402
 from repro.serving import FedAttnEngine  # noqa: E402
 from repro.serving.scheduler import ContinuousBatchingScheduler  # noqa: E402
-from repro.types import FedAttnConfig  # noqa: E402
+from repro.types import FedAttnConfig, LayerSpec  # noqa: E402
 
 
 def _sequential_pass(engine, reqs, arrivals, *, timed: bool):
@@ -189,6 +195,8 @@ def main():
         "parity_mismatches": mismatches,
     }]
 
+    records += _hybrid_pass(args)
+
     if args.mesh:
         if len(jax.devices()) < args.mesh:
             print(f"# --mesh {args.mesh} skipped: only {len(jax.devices())} "
@@ -199,6 +207,83 @@ def main():
                 cfg, fed, params, reqs, args, total_new, stream_res
             )
     return records
+
+
+def _hybrid_pass(args):
+    """Hybrid (jamba-style mamba+attention) stack through the pool with
+    L-bucketing ON vs OFF — the recurrence validity contract made pow2
+    buckets legal for SSM/hybrid stacks, and the HEADLINE metric is the
+    prefill-executable collapse: ``bucket='none'`` compiles one admission
+    prefill per exact (B, L) while ``bucket='pow2'`` compiles one per
+    (B-bucket, L-bucket). Both executable counts are deterministic (pure
+    python-side cache keys over a fixed trace) and CI-gated via
+    compare_bench's *_executables rule; tok/s are info/warn-only on this
+    shared box. Token parity between the two policies is asserted — the
+    collapse is only a win because padded tokens are identity state
+    updates (pinned at kernel level in tests/test_ssm_masking.py)."""
+    cfg = bench_config(n_layers=4).replace(
+        name="bench-jamba",
+        arch_type="hybrid",
+        pattern=(LayerSpec(kind="mamba"), LayerSpec(sync=True)),
+    )
+    fed = FedAttnConfig(n_participants=4, sync_interval=2)
+    params = build_model(cfg).init(jax.random.key(0))
+    rng = np.random.default_rng(7)
+    n_req = min(args.requests, 16)  # bounded: 4 pool traces below
+    reqs, _ = poisson_trace(
+        rng, n_req, vocab_size=cfg.vocab_size, max_len=64, max_new=16,
+        rate_per_s=args.arrival_rate,
+    )
+    total_new = sum(r.n_new for r in reqs)
+
+    walls, scheds, results = {}, {}, {}
+    for policy in ("pow2", "none"):
+        eng = FedAttnEngine(cfg, params, fedattn=fed, bucket=policy)
+        capacity = ContinuousBatchingScheduler.capacity_for(eng, reqs)
+        sched = ContinuousBatchingScheduler(
+            eng, max_slots=args.max_slots, capacity=capacity,
+            steps_per_admit=args.steps_per_admit,
+        )
+        sched.run(reqs)  # warmup: compiles every admission/decode executable
+        t0 = time.perf_counter()
+        results[policy] = sched.run(reqs)
+        walls[policy] = time.perf_counter() - t0
+        scheds[policy] = sched
+
+    mismatches = sum(
+        not np.array_equal(a.tokens, b.tokens)
+        for a, b in zip(results["pow2"], results["none"])
+    )
+    n_bucketed = scheds["pow2"].compile_counts["prefill"]
+    n_exact = scheds["none"].compile_counts["prefill"]
+    n_decode = scheds["pow2"].compile_counts["decode_step"]
+    tok_s = {p: total_new / walls[p] for p in walls}
+    name = "serving_hybrid_jamba_bucketing"
+    print(csv_line(name, 1e6 / tok_s["pow2"],
+                   f"tok_s={tok_s['pow2']:.1f},prefill_execs={n_bucketed}"
+                   f"(vs {n_exact} unbucketed),decode_execs={n_decode},"
+                   f"mismatches={mismatches}"))
+    print(f"# hybrid stack L-bucketing: {n_exact} per-exact-L prefill "
+          f"executables collapse to {n_bucketed} pow2-bucketed ones "
+          f"({len(reqs)} mixed-length requests; {mismatches} token "
+          "mismatches between policies)")
+    if mismatches:
+        print(f"# WARNING: {mismatches} requests diverged between bucket "
+              "policies (validity-contract violation)")
+    return [{
+        "name": name,
+        "n_requests": len(reqs),
+        "total_new_tokens": total_new,
+        "max_slots": args.max_slots,
+        "steps_per_admit": args.steps_per_admit,
+        # the collapse headline — both CI-gated against growth
+        "bucketed_prefill_executables": n_bucketed,
+        "unbucketed_prefill_executables": n_exact,
+        "decode_step_executables": n_decode,
+        "tok_s_bucketed": tok_s["pow2"],
+        "tok_s_unbucketed": tok_s["none"],
+        "parity_mismatches": mismatches,
+    }]
 
 
 def _mesh_pass(cfg, fed, params, reqs, args, total_new, single_res):

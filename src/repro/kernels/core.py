@@ -28,6 +28,32 @@ Sentinels: ``kv_pos == int32 max`` (kernel chunk/block padding) and
 ``kv_seg < 0`` (shape-bucketing pads with ``-1``, kernels pad with ``-2``,
 inactive pool slots carry ``-1``) are never visible to any query.
 
+Recurrence validity rules (the contract's second half)
+------------------------------------------------------
+The recurrent layers (mamba/rwkv — :mod:`repro.models.ssm`,
+:mod:`repro.kernels.mamba_scan`, :mod:`repro.kernels.rwkv6`) consume the
+SAME segment vectors, 1-D shared or 2-D per-row, but cannot "mask" a token
+out of a scan the way attention drops a column — instead a sentinel token
+(segment ``< 0``) becomes an **identity state update**:
+
+* **mamba** — Δ·mask gating: ``Δ ← where(valid, Δ, 0)`` gives decay
+  ``exp(0·A) = 1`` and zero input injection, so ``h_t = h_{t-1}`` exactly.
+* **rwkv6** — decay/k masking: ``w ← 0`` (decay ``e^0 = 1``) and ``k ← 0``
+  (zero kv outer product), so ``S_t = S_{t-1}`` exactly.
+* **token-shift / causal-conv windows** — positional carries come from the
+  last ``width`` *valid* tokens (``models.layers.carry_window``), never
+  the padded suffix; a fully-invalid row keeps its incoming carry.
+* **segment resets** (FedAttn-local scans) generalize 1-D → 2-D per-row
+  alongside, and are suppressed at invalid positions — a reset at the pad
+  boundary would zero the state the padding must preserve.
+
+The identities are exact in float32 (``x·1`` and ``x+0`` are bitwise), so
+a pow2-padded suffix — or a padded row of a ragged coalesced-admission
+batch — leaves recurrent state and valid-token outputs bit-identical to
+the unpadded scan (pinned in tests/test_ssm_masking.py). This is what lets
+the serving engine L-bucket SSM/hybrid stacks and the scheduler run ONE
+coalesced admission path for every stack kind.
+
 ``publisher_lo`` is the decode-time alternative to segment masking used by
 the sequence-sharded SPMD cache (flash-decoding): at a local (non-sync)
 layer only cache rows with ``kv_pos >= publisher_lo`` — the publisher's own
@@ -52,6 +78,28 @@ SEG_PAD_KERNEL = -2  # kernel-internal chunk/block padding sentinel
 
 def _as2(a: jnp.ndarray) -> jnp.ndarray:
     return a if a.ndim == 2 else a[None]
+
+
+def as_row_mask(m: Optional[jnp.ndarray], L: int) -> Optional[jnp.ndarray]:
+    """Normalize a per-token validity/reset mask to ``(B-or-1, L)`` — the
+    1-D shared / 2-D per-row vector contract (module docstring). The ONE
+    normalizer for the recurrence kernels (ref + Pallas wrappers)."""
+    if m is None:
+        return None
+    m2 = _as2(m)
+    assert m2.shape[-1] == L, f"mask length {m2.shape} != scan length {L}"
+    return m2
+
+
+def as_reset_rows(reset_mask: Optional[jnp.ndarray], B: int, L: int) -> jnp.ndarray:
+    """Reset mask as a dense ``(B, L)`` int32 tensor — the form the Pallas
+    recurrence kernels take as a block input (None → all zeros). Shared by
+    the mamba/rwkv chunked wrappers so the reset convention has one point
+    of change."""
+    m2 = as_row_mask(reset_mask, L)
+    if m2 is None:
+        return jnp.zeros((B, L), jnp.int32)
+    return jnp.broadcast_to(m2.astype(jnp.int32), (B, L))
 
 
 def visibility(

@@ -17,6 +17,17 @@ hardware-adaptation note).
 Grid = (B, n_d_blocks, n_chunks), chunk axis LAST (sequential on TPU) so
 the state scratch carries across chunks. Validated against
 kernels/ref.py::mamba_scan_ref (interpret=True).
+
+Validity/segment contract (kernels/core docstring, recurrence half):
+
+* ``valid`` — 1-D ``(L,)`` or per-row 2-D ``(B, L)``; invalid tokens are
+  gated on the host by the Δ·mask rule (``Δ ← where(valid, Δ, 0)``), which
+  makes their in-kernel state update exact identity (decay ``exp(0·A)=1``,
+  zero injection) with NO kernel change — the kernel scans a pow2-padded
+  suffix or a ragged per-row batch without corrupting state.
+* ``reset_mask`` — 1-D or per-row 2-D; runs IN the kernel (a reset input
+  block zeroes the VMEM state slab before the flagged step), so
+  FedAttn-local segment scans no longer fall back to the oracle.
 """
 from __future__ import annotations
 
@@ -39,6 +50,7 @@ def _kernel(
     B_ref,  # (1, CHUNK, ds)
     C_ref,  # (1, CHUNK, ds)
     D_ref,  # (BLOCK_D,)
+    reset_ref,  # (1, CHUNK) int32: 1 → zero the state before this step
     o_ref,  # (1, CHUNK, BLOCK_D)
     h_scr,  # (BLOCK_D, ds) f32
     *,
@@ -56,9 +68,11 @@ def _kernel(
     Bm = B_ref[0].astype(jnp.float32)  # (C, ds)
     Cm = C_ref[0].astype(jnp.float32)
     D = D_ref[...].astype(jnp.float32)  # (D,)
+    reset = reset_ref[0]  # (C,) int32
 
     def step(t, carry):
         h, ys = carry
+        h = jnp.where(reset[t] > 0, jnp.zeros_like(h), h)
         decay = jnp.exp(dt[t][:, None] * A)  # (D, ds)
         h = decay * h + (dt[t] * x[t])[:, None] * Bm[t][None, :]
         y_t = jnp.sum(h * Cm[t][None, :], axis=-1) + D * x[t]
@@ -80,21 +94,29 @@ def mamba_scan_chunked(
     D: jnp.ndarray,  # (d_in,)
     *,
     initial_state: Optional[jnp.ndarray] = None,
-    reset_mask: Optional[jnp.ndarray] = None,
+    reset_mask: Optional[jnp.ndarray] = None,  # (L,) or (B, L)
+    valid: Optional[jnp.ndarray] = None,  # (L,) or (B, L)
     chunk: int = CHUNK,
     block_d: int = BLOCK_D,
     interpret: bool = True,
 ):
-    """Returns (y, final_state=None). Carries/resets fall back to the oracle
-    (the kernel targets the bulk prefill path)."""
-    if initial_state is not None or reset_mask is not None:
+    """Returns (y, final_state=None). State carries (``initial_state`` —
+    the decode path) fall back to the oracle; ``valid`` and per-row
+    ``reset_mask`` run through the kernel (module docstring)."""
+    if initial_state is not None:
         from repro.kernels.ref import mamba_scan_ref
 
         return mamba_scan_ref(
             x, delta, A, Bm, C, D,
-            initial_state=initial_state, reset_mask=reset_mask,
+            initial_state=initial_state, reset_mask=reset_mask, valid=valid,
         )
+    from repro.kernels.core import as_reset_rows, as_row_mask
+
     B, L, d_in = x.shape
+    v2 = as_row_mask(valid, L)
+    if v2 is not None:
+        delta = jnp.where(v2[..., None], delta, 0.0).astype(delta.dtype)
+    reset = as_reset_rows(reset_mask, B, L)
     ds = A.shape[-1]
     block_d = min(block_d, d_in)
     pad_t = (-L) % chunk
@@ -106,6 +128,7 @@ def mamba_scan_chunked(
         C = jnp.pad(C, ((0, 0), (0, pad_t), (0, 0)))
         A = jnp.pad(A, ((0, pad_d), (0, 0)))
         D = jnp.pad(D, (0, pad_d))
+        reset = jnp.pad(reset, ((0, 0), (0, pad_t)))
     Lp, Dp = L + pad_t, d_in + pad_d
     n_chunks = Lp // chunk
     n_d_blocks = Dp // block_d
@@ -121,10 +144,11 @@ def mamba_scan_chunked(
             pl.BlockSpec((1, chunk, ds), lambda b, di, ci: (b, ci, 0)),
             pl.BlockSpec((1, chunk, ds), lambda b, di, ci: (b, ci, 0)),
             pl.BlockSpec((block_d,), lambda b, di, ci: (di,)),
+            pl.BlockSpec((1, chunk), lambda b, di, ci: (b, ci)),
         ],
         out_specs=pl.BlockSpec((1, chunk, block_d), lambda b, di, ci: (b, ci, di)),
         out_shape=jax.ShapeDtypeStruct((B, Lp, Dp), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_d, ds), jnp.float32)],
         interpret=interpret,
-    )(x, delta, A, Bm, C, D)
+    )(x, delta, A, Bm, C, D, reset)
     return out[:, :L, :d_in], None

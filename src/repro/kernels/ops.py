@@ -201,30 +201,41 @@ def decode_attention(
 
 
 def rwkv6(
-    r, k, v, w, u, *, initial_state=None, reset_mask=None, backend=None
+    r, k, v, w, u, *,
+    initial_state=None, reset_mask=None, valid=None, backend=None,
 ):
+    """WKV6 recurrence. ``reset_mask``/``valid`` may be shared 1-D ``(L,)``
+    or per-row 2-D ``(B, L)`` — the recurrence half of the repo-wide vector
+    contract (repro.kernels.core docstring): invalid tokens are identity
+    state updates, so pow2-padded / ragged-row batches scan safely."""
     backend = backend or _DEFAULT_BACKEND
     if backend == "pallas":
         from repro.kernels import rwkv6 as _rk
 
         return _rk.rwkv6_chunked(
-            r, k, v, w, u, initial_state=initial_state, reset_mask=reset_mask
+            r, k, v, w, u,
+            initial_state=initial_state, reset_mask=reset_mask, valid=valid,
         )
     return _ref.rwkv6_ref(
-        r, k, v, w, u, initial_state=initial_state, reset_mask=reset_mask
+        r, k, v, w, u,
+        initial_state=initial_state, reset_mask=reset_mask, valid=valid,
     )
 
 
 def mamba_scan(
-    x, delta, A, Bm, C, D, *, initial_state=None, reset_mask=None, backend=None
+    x, delta, A, Bm, C, D, *,
+    initial_state=None, reset_mask=None, valid=None, backend=None,
 ):
+    """Mamba1 selective scan; ``reset_mask``/``valid`` as in :func:`rwkv6`."""
     backend = backend or _DEFAULT_BACKEND
     if backend == "pallas":
         from repro.kernels import mamba_scan as _ms
 
         return _ms.mamba_scan_chunked(
-            x, delta, A, Bm, C, D, initial_state=initial_state, reset_mask=reset_mask
+            x, delta, A, Bm, C, D,
+            initial_state=initial_state, reset_mask=reset_mask, valid=valid,
         )
     return _ref.mamba_scan_ref(
-        x, delta, A, Bm, C, D, initial_state=initial_state, reset_mask=reset_mask
+        x, delta, A, Bm, C, D,
+        initial_state=initial_state, reset_mask=reset_mask, valid=valid,
     )

@@ -11,7 +11,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.core import NEG_INF, AttnSpec, masked_attention
+from repro.kernels.core import (
+    NEG_INF, AttnSpec, as_row_mask as _row_mask, masked_attention,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -77,7 +79,8 @@ def rwkv6_ref(
     u: jnp.ndarray,  # (H, dk)        bonus for the current token
     *,
     initial_state: Optional[jnp.ndarray] = None,  # (B, H, dk, dv)
-    reset_mask: Optional[jnp.ndarray] = None,  # (L,) True → reset state before t
+    reset_mask: Optional[jnp.ndarray] = None,  # (L,) or (B, L): reset before t
+    valid: Optional[jnp.ndarray] = None,  # (L,) or (B, L): False → identity
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Sequential WKV6 recurrence (Finch, arXiv:2404.05892):
 
@@ -86,6 +89,15 @@ def rwkv6_ref(
 
     ``reset_mask`` implements FedAttn-local semantics: the state is zeroed at
     participant-segment starts so each participant scans only its own tokens.
+    ``valid`` is the recurrence half of the repo's validity contract
+    (kernels/core docstring): invalid tokens (shape-bucketing pads, ragged
+    per-row admission rows — segment ``< 0`` upstream) become IDENTITY state
+    updates — their log-decay is masked to 0 (decay 1) and their k to 0 (no
+    kv outer-product injected) — so a padded suffix leaves both the carried
+    state and every valid token's output bit-identical to the unpadded scan.
+    Outputs at invalid positions are unspecified. Both masks may be shared
+    1-D ``(L,)`` or per-row 2-D ``(B, L)``; resets at invalid positions are
+    the CALLER's job to suppress (models/ssm masks them with ``valid``).
     Returns (y: (B, L, H, dv), final_state: (B, H, dk, dv)).
     """
     B, L, H, dk = r.shape
@@ -93,6 +105,10 @@ def rwkv6_ref(
     rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
     wf = w.astype(jnp.float32)
     uf = u.astype(jnp.float32)
+    vm = _row_mask(valid, L)
+    if vm is not None:
+        wf = jnp.where(vm[..., None, None], wf, 0.0)  # decay exp(0) = 1
+        kf = jnp.where(vm[..., None, None], kf, 0.0)  # no state injection
     S0 = (
         jnp.zeros((B, H, dk, dv), jnp.float32)
         if initial_state is None
@@ -100,16 +116,15 @@ def rwkv6_ref(
     )
 
     def step(S, inputs):
-        rt, kt, vt, wt, reset = inputs  # (B,H,dk),(B,H,dk),(B,H,dv),(B,H,dk),()
-        S = jnp.where(reset, jnp.zeros_like(S), S)
+        rt, kt, vt, wt, reset = inputs  # (B,H,dk),(B,H,dk),(B,H,dv),(B,H,dk),(B-or-1,)
+        S = jnp.where(reset[:, None, None, None], jnp.zeros_like(S), S)
         kv = kt[..., :, None] * vt[..., None, :]  # (B,H,dk,dv)
         y = jnp.einsum("bhk,bhkv->bhv", rt, S + uf[None, :, :, None] * kv)
         S = jnp.exp(wt)[..., :, None] * S + kv
         return S, y
 
-    resets = (
-        reset_mask if reset_mask is not None else jnp.zeros((L,), bool)
-    )
+    rm = _row_mask(reset_mask, L)
+    resets = (rm if rm is not None else jnp.zeros((1, L), bool)).T  # (L, B-or-1)
     xs = (
         rf.transpose(1, 0, 2, 3),
         kf.transpose(1, 0, 2, 3),
@@ -186,19 +201,30 @@ def mamba_scan_ref(
     D: jnp.ndarray,  # (d_in,)
     *,
     initial_state: Optional[jnp.ndarray] = None,  # (B, d_in, d_state)
-    reset_mask: Optional[jnp.ndarray] = None,  # (L,)
+    reset_mask: Optional[jnp.ndarray] = None,  # (L,) or (B, L)
+    valid: Optional[jnp.ndarray] = None,  # (L,) or (B, L): False → identity
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Selective scan (Mamba1):
 
         h_t = exp(Δ_t ⊙ A) h_{t-1} + (Δ_t x_t) B_t^T
         y_t = h_t C_t + D ⊙ x_t
 
+    ``valid`` follows the recurrence validity contract (kernels/core
+    docstring): invalid tokens gate Δ to 0 — decay ``exp(0·A) = 1`` and a
+    zero input injection — so their state update is EXACT identity and a
+    padded suffix / ragged per-row batch never corrupts the carried state.
+    Outputs at invalid positions are unspecified. ``reset_mask``/``valid``
+    may be shared 1-D ``(L,)`` or per-row 2-D ``(B, L)``; resets at invalid
+    positions are the caller's to suppress.
     Returns (y: (B, L, d_in), final_state: (B, d_in, d_state)).
     """
     B, L, d_in = x.shape
     d_state = A.shape[-1]
     xf, df = x.astype(jnp.float32), delta.astype(jnp.float32)
     Af, Bf, Cf = A.astype(jnp.float32), Bm.astype(jnp.float32), C.astype(jnp.float32)
+    vm = _row_mask(valid, L)
+    if vm is not None:
+        df = jnp.where(vm[..., None], df, 0.0)  # Δ·mask gating
     h0 = (
         jnp.zeros((B, d_in, d_state), jnp.float32)
         if initial_state is None
@@ -207,13 +233,14 @@ def mamba_scan_ref(
 
     def step(h, inputs):
         xt, dt, bt, ct, reset = inputs
-        h = jnp.where(reset, jnp.zeros_like(h), h)
+        h = jnp.where(reset[:, None, None], jnp.zeros_like(h), h)
         decay = jnp.exp(dt[..., :, None] * Af[None])  # (B, d_in, d_state)
         h = decay * h + (dt * xt)[..., :, None] * bt[..., None, :]
         y = jnp.einsum("bds,bs->bd", h, ct)
         return h, y
 
-    resets = reset_mask if reset_mask is not None else jnp.zeros((L,), bool)
+    rm = _row_mask(reset_mask, L)
+    resets = (rm if rm is not None else jnp.zeros((1, L), bool)).T  # (L, B-or-1)
     xs = (
         xf.transpose(1, 0, 2),
         df.transpose(1, 0, 2),

@@ -20,6 +20,24 @@ inside float32 range; the A product itself is always ≤ O(1).
 Grid = (B·H, n_chunks) with the chunk axis LAST (TPU grids iterate the last
 axis sequentially), so the (dk, dv) state lives in VMEM scratch across
 chunk steps. Validated against kernels/ref.py::rwkv6_ref (interpret=True).
+
+Validity/segment contract (kernels/core docstring, recurrence half):
+
+* ``valid`` — 1-D ``(L,)`` or per-row 2-D ``(B, L)``; invalid tokens are
+  gated on the host by the decay-masking rule (``w ← where(valid, w, 0)``,
+  ``k ← where(valid, k, 0)``): decay ``e^0 = 1`` and a zero kv
+  outer-product make the state update exact identity, so the chunked math
+  is untouched and a pow2-padded suffix / ragged per-row batch never
+  corrupts state.
+* ``reset_mask`` — 1-D or per-row 2-D; runs IN the kernel. A reset before
+  token t starts a new "epoch": the inclusive cumsum R of the reset flags
+  partitions the chunk, the intra-chunk matrix is masked to same-epoch
+  pairs (the decay weights e^{W_{t-1} - W_i} are already correct within an
+  epoch — they only span post-reset tokens), the carried state contributes
+  only to epoch-0 rows, and the state update keeps the S_prev term only
+  when the chunk saw no reset and accumulates kv terms from the FINAL
+  epoch only. Resets in earlier chunks are already baked into the carried
+  scratch state, so each chunk is self-contained.
 """
 from __future__ import annotations
 
@@ -41,6 +59,7 @@ def _kernel(
     v_ref,  # (1, CHUNK, 1, dv)
     w_ref,  # (1, CHUNK, 1, dk) log-decay
     u_ref,  # (1, dk)
+    reset_ref,  # (1, CHUNK) int32: 1 → zero the state before this step
     o_ref,  # (1, CHUNK, 1, dv)
     s_scr,  # (dk, dv) f32 state
     *,
@@ -57,6 +76,7 @@ def _kernel(
     v = v_ref[0, :, 0, :].astype(jnp.float32)  # (C, dv)
     w = jnp.maximum(w_ref[0, :, 0, :].astype(jnp.float32), W_MIN)
     u = u_ref[0, :].astype(jnp.float32)  # (dk,)
+    R = jnp.cumsum(reset_ref[0], axis=0)  # (C,) inclusive epoch ids
 
     W = jnp.cumsum(w, axis=0)  # inclusive: W[t] = Σ_{j<=t} w_j
     W_prev = W - w  # exclusive:  Σ_{j<t} w_j
@@ -65,30 +85,39 @@ def _kernel(
     r_dec = r * jnp.exp(W_prev)  # (C, dk)
     k_inv = k * jnp.exp(-W)  # bounded by CHUNK·|W_MIN| (see docstring)
 
-    # strict-lower intra-chunk attention + u-bonus diagonal
+    # strict-lower intra-chunk attention + u-bonus diagonal, restricted to
+    # same-epoch (no reset in (i, t]) pairs
     A = jax.lax.dot_general(
         r_dec, k_inv, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )  # (C, C): A[t, i]
     C = A.shape[0]
     t_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
     i_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
-    A = jnp.where(t_idx > i_idx, A, 0.0)
+    same_epoch = R[:, None] == R[None, :]
+    A = jnp.where((t_idx > i_idx) & same_epoch, A, 0.0)
     diag = jnp.sum(r * u[None, :] * k, axis=-1)  # (C,)
     A = A + jnp.where(t_idx == i_idx, diag[:, None], 0.0)
 
     y = jax.lax.dot_general(
         A, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
-    # inter-chunk contribution from the carried state
-    y = y + jax.lax.dot_general(
+    # inter-chunk contribution from the carried state — epoch-0 rows only
+    # (a reset anywhere before t cuts the carried state off)
+    y_state = jax.lax.dot_general(
         r_dec, s_scr[...], (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
+    y = y + jnp.where((R == 0)[:, None], y_state, 0.0)
     o_ref[0, :, 0, :] = y.astype(o_ref.dtype)
 
-    # state update: S ← diag(e^{W_total}) S + (k ⊙ e^{W_total - W})^T @ V
+    # state update: S ← diag(e^{W_total}) S + (k ⊙ e^{W_total - W})^T @ V,
+    # with the S term surviving only a reset-free chunk and kv terms taken
+    # from the final epoch only (e^{W_total - W_i} spans only post-reset
+    # tokens for i in the final epoch, so the weights stay correct)
     k_dec = k * jnp.exp(W_total[None, :] - W)
-    s_scr[...] = jnp.exp(W_total)[:, None] * s_scr[...] + jax.lax.dot_general(
+    k_dec = jnp.where((R == R[-1])[:, None], k_dec, 0.0)
+    s_prev = jnp.where(R[-1] == 0, jnp.exp(W_total)[:, None] * s_scr[...], 0.0)
+    s_scr[...] = s_prev + jax.lax.dot_general(
         k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
 
@@ -101,25 +130,36 @@ def rwkv6_chunked(
     u: jnp.ndarray,  # (H, dk)
     *,
     initial_state: Optional[jnp.ndarray] = None,
-    reset_mask: Optional[jnp.ndarray] = None,
+    reset_mask: Optional[jnp.ndarray] = None,  # (L,) or (B, L)
+    valid: Optional[jnp.ndarray] = None,  # (L,) or (B, L)
     chunk: int = CHUNK,
     interpret: bool = True,
 ):
-    """Returns (y, final_state=None). initial_state/reset_mask fall back to
-    the reference scan (the kernel targets the bulk prefill path; carries
-    and FedAttn-local resets use the oracle)."""
-    if initial_state is not None or reset_mask is not None:
+    """Returns (y, final_state=None). State carries (``initial_state`` —
+    the decode path) fall back to the reference scan; ``valid`` and per-row
+    ``reset_mask`` run through the chunked kernel (module docstring)."""
+    if initial_state is not None:
         from repro.kernels.ref import rwkv6_ref
 
         return rwkv6_ref(
-            r, k, v, w, u, initial_state=initial_state, reset_mask=reset_mask
+            r, k, v, w, u,
+            initial_state=initial_state, reset_mask=reset_mask, valid=valid,
         )
+    from repro.kernels.core import as_reset_rows, as_row_mask
+
     B, L, H, dk = r.shape
     dv = v.shape[-1]
+    v2 = as_row_mask(valid, L)
+    if v2 is not None:
+        v4 = v2[..., None, None]
+        w = jnp.where(v4, w, 0.0).astype(w.dtype)  # decay e^0 = 1
+        k = jnp.where(v4, k, 0.0).astype(k.dtype)  # no state injection
+    reset = as_reset_rows(reset_mask, B, L)
     pad = (-L) % chunk
     if pad:
         z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
         r, k, v, w = z(r), z(k), z(v), z(w)
+        reset = jnp.pad(reset, ((0, 0), (0, pad)))
     Lp = L + pad
     n_chunks = Lp // chunk
 
@@ -138,10 +178,11 @@ def rwkv6_chunked(
             pl.BlockSpec((1, chunk, 1, dv), im4),
             pl.BlockSpec((1, chunk, 1, dk), im4),
             pl.BlockSpec((1, dk), lambda bh, ci: (bh % H, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh // H, ci)),
         ],
         out_specs=pl.BlockSpec((1, chunk, 1, dv), im4),
         out_shape=jax.ShapeDtypeStruct((B, Lp, H, dv), r.dtype),
         scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
         interpret=interpret,
-    )(r, k, v, w, u)
+    )(r, k, v, w, u, reset)
     return out[:, :L], None

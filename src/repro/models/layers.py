@@ -169,21 +169,65 @@ def apply_lm_head(
 
 
 def shift_right(
-    x: jnp.ndarray, segment_ids: Optional[jnp.ndarray]
+    x: jnp.ndarray,
+    segment_ids: Optional[jnp.ndarray],
+    carry: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Shift sequence right by one (token-shift). If ``segment_ids`` given,
     the shift does not cross participant boundaries (FedAttn-local
     semantics): positions whose left neighbor belongs to another participant
-    receive zeros. x: (B, L, D); segment_ids: (L,)."""
-    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    receive zeros. x: (B, L, D); segment_ids: (L,) shared or (B, L) per row
+    (the batched-vector contract — coalesced admission prefill).
+
+    ``carry`` is the incoming token-shift state of a continued scan
+    ((B, 1, D), decode/prefill-via-decode): it enters position 0 instead of
+    zeros. Under segment masking the position before the first is treated
+    as segment ``-1`` (foreign), so a masked shift never admits the carry —
+    continuation across a carry is a sync-semantics operation and passes
+    ``segment_ids=None`` (exactly how single-token decode runs)."""
+    if carry is None:
+        shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        shifted = jnp.concatenate([carry.astype(x.dtype), x[:, :-1]], axis=1)
     if segment_ids is not None:
-        prev = jnp.pad(segment_ids, (1, 0), constant_values=-1)[:-1]
-        same = (prev == segment_ids)[None, :, None]
+        seg2 = segment_ids if segment_ids.ndim == 2 else segment_ids[None]
+        prev = jnp.pad(seg2, ((0, 0), (1, 0)), constant_values=-1)[:, :-1]
+        same = (prev == seg2)[..., None]  # (B-or-1, L, 1)
         shifted = jnp.where(same, shifted, jnp.zeros_like(shifted))
     return shifted
 
 
 def segment_start_mask(segment_ids: jnp.ndarray) -> jnp.ndarray:
-    """(L,) bool — True at the first token of each participant segment."""
-    prev = jnp.pad(segment_ids, (1, 0), constant_values=-1)[:-1]
+    """bool mask, same shape as the input — True at the first token of each
+    participant segment. ``segment_ids``: (L,) shared or (B, L) per row."""
+    pad = ((0, 0),) * (segment_ids.ndim - 1) + ((1, 0),)
+    prev = jnp.pad(segment_ids, pad, constant_values=-1)[..., :-1]
     return prev != segment_ids
+
+
+def carry_window(
+    x: jnp.ndarray,  # (B, S, D)
+    carry: Optional[jnp.ndarray],  # (B, width, D) incoming window, or None
+    valid: Optional[jnp.ndarray],  # (S,) or (B, S) prefix mask, or None
+    width: int,
+) -> jnp.ndarray:
+    """Last ``width`` VALID rows of ``x`` — the positional carries of the
+    recurrent layers (token-shift last-x, causal-conv tap window) under the
+    validity contract. With a pow2-padded suffix (or ragged per-row batch)
+    the last *positions* of ``x`` are padding; the carry a later decode
+    step continues from must be the last *real* tokens. ``valid`` must be a
+    per-row prefix mask (padding is always a suffix — the bucketing
+    convention); rows with fewer than ``width`` valid tokens fall back into
+    the incoming ``carry`` (so a fully-invalid row — an inactive pool slot
+    — keeps its carry untouched: identity). ``valid=None`` is the classic
+    unpadded path and returns exactly the trailing window."""
+    B, S, d = x.shape
+    if carry is None:
+        carry = jnp.zeros((B, width, d), x.dtype)
+    xc = jnp.concatenate([carry.astype(x.dtype), x], axis=1)  # (B, width+S, D)
+    if valid is None:
+        return xc[:, -width:]
+    v2 = valid if valid.ndim == 2 else valid[None]
+    lengths = jnp.broadcast_to(v2, (B, S)).astype(jnp.int32).sum(axis=1)
+    idx = lengths[:, None] + jnp.arange(width, dtype=jnp.int32)[None]
+    return jnp.take_along_axis(xc, idx[:, :, None], axis=1)

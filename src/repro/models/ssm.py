@@ -10,6 +10,18 @@ K/V matrices to exchange, but the *same* local/global dichotomy exists:
     in SPMD this is the inter-shard state hand-off).
 
 Both layers expose ``sync: bool`` and consume the FedAttnContext partition.
+
+Validity/segment contract (the recurrence half of the repo-wide vector
+contract — :mod:`repro.kernels.core` docstring): every per-token vector
+derived from the context (segments → validity, resets, shift masks) may be
+shared 1-D ``(S,)`` or per batch row 2-D ``(B, S)``. Tokens whose segment
+is a padding sentinel (``< 0``: shape-bucketing pads, ragged coalesced-
+admission rows, inactive pool slots) are IDENTITY state updates — Δ·mask
+gating for the mamba scan, decay/k masking for WKV6, carry-preserving
+token-shift/conv windows (:func:`repro.models.layers.carry_window`) — so a
+recurrence scans a pow2-padded suffix or a per-row ragged batch without
+corrupting its carried state, exactly as attention masks such tokens out
+of visibility.
 """
 from __future__ import annotations
 
@@ -27,15 +39,29 @@ Params = dict
 
 
 def _segment_resets(ctx: FedAttnContext, S: int, sync: bool) -> Optional[jnp.ndarray]:
+    """State-reset mask at participant-segment starts — (S,) or (B, S),
+    matching ctx.segments (local layers only; a sync layer's state flows
+    across boundaries). Padded tokens (segment < 0) never reset: they are
+    identity updates, and a reset at the pad boundary would zero the very
+    state the padding must preserve."""
     if not ctx.enabled or sync:
         return None
     resets = L.segment_start_mask(ctx.segments)
     # never reset at position 0 (zero init covers it) — harmless either way
-    return resets
+    return resets & (ctx.segments >= 0)
 
 
 def _shift_segments(ctx: FedAttnContext, sync: bool) -> Optional[jnp.ndarray]:
     return ctx.segments if (ctx.enabled and not sync) else None
+
+
+def _validity(ctx: FedAttnContext) -> jnp.ndarray:
+    """(S,) or (B, S) bool — True for real tokens. Segment sentinels (< 0:
+    ``-1`` bucket padding / inactive pool slots, ``-2`` kernel padding)
+    mark tokens whose recurrent-state updates must be identity (module
+    docstring). Applied at every layer, sync or local — validity is about
+    padding, not about the FedAttn phase."""
+    return ctx.segments >= 0
 
 
 # ---------------------------------------------------------------------------
@@ -83,14 +109,21 @@ def rwkv_time_mix(
     shifted: Optional[jnp.ndarray] = None,  # (B, 1, D) decode token-shift carry
     backend: Optional[str] = None,
 ):
-    """Returns (y, new_state, last_x) — carries support decode."""
+    """Returns (y, new_state, last_x) — carries support decode. ``last_x``
+    is the last VALID token's input (carry_window): under a padded suffix
+    the decode continuation must shift from the last real token, and a
+    fully-invalid row (inactive pool slot) keeps its carry untouched."""
     B, S, d = x.shape
     dh = config.rwkv_head_dim
     H = d // dh
+    valid = _validity(ctx)
+    segs = _shift_segments(ctx, sync)
     if shifted is None:
-        xs = L.shift_right(x, _shift_segments(ctx, sync))
+        xs = L.shift_right(x, segs)
+    elif S > 1:
+        xs = L.shift_right(x, segs, carry=shifted)
     else:
-        xs = jnp.concatenate([shifted, x[:, :-1]], axis=1) if S > 1 else shifted
+        xs = shifted
 
     def lerp(mu):
         return x + (xs - x) * mu
@@ -120,12 +153,13 @@ def rwkv_time_mix(
     else:
         y, new_state = ops.rwkv6(
             r, k, v, w.astype(x.dtype), p["u"],
-            initial_state=state, reset_mask=resets, backend=backend,
+            initial_state=state, reset_mask=resets, valid=valid,
+            backend=backend,
         )
     y = L.rms_head_norm(p["ln_out"], y, config.norm_eps).reshape(B, S, d)
     y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
     y = jnp.einsum("bsd,de->bse", y, p["w_o"])
-    return y, new_state, x[:, -1:]
+    return y, new_state, L.carry_window(x, shifted, valid, 1)
 
 
 def init_rwkv_cmix(rng: jax.Array, config: ModelConfig) -> Params:
@@ -145,19 +179,24 @@ def rwkv_channel_mix(
     p: Params, x: jnp.ndarray, ctx: FedAttnContext, config: ModelConfig,
     *, sync: bool, shifted: Optional[jnp.ndarray] = None,
 ):
-    """RWKV squared-ReLU channel mix with token shift. Returns (y, last_x)."""
+    """RWKV squared-ReLU channel mix with token shift. Returns (y, last_x);
+    ``last_x`` is the last VALID token's input (see rwkv_time_mix)."""
     S = x.shape[1]
+    valid = _validity(ctx)
+    segs = _shift_segments(ctx, sync)
     if shifted is None:
-        xs = L.shift_right(x, _shift_segments(ctx, sync))
+        xs = L.shift_right(x, segs)
+    elif S > 1:
+        xs = L.shift_right(x, segs, carry=shifted)
     else:
-        xs = jnp.concatenate([shifted, x[:, :-1]], axis=1) if S > 1 else shifted
+        xs = shifted
     zk = x + (xs - x) * p["mu_k"]
     zr = x + (xs - x) * p["mu_r"]
     k = jnp.einsum("bsd,df->bsf", zk, p["w_k"])
     k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
     r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", zr, p["w_r"]).astype(jnp.float32))
     y = r.astype(x.dtype) * jnp.einsum("bsf,fd->bsd", k, p["w_v"])
-    return y, x[:, -1:]
+    return y, L.carry_window(x, shifted, valid, 1)
 
 
 # ---------------------------------------------------------------------------
@@ -190,11 +229,15 @@ def _causal_conv(
     x: jnp.ndarray,  # (B, S, d_in)
     w: jnp.ndarray,  # (dc, d_in)
     b: jnp.ndarray,
-    segments: Optional[jnp.ndarray],
+    segments: Optional[jnp.ndarray],  # (S,) or (B, S)
     conv_state: Optional[jnp.ndarray] = None,  # (B, dc-1, d_in) decode carry
+    valid: Optional[jnp.ndarray] = None,  # (S,) or (B, S)
 ):
     """Depthwise causal conv1d as dc shifted adds; masked at segment
-    boundaries when ``segments`` is given (FedAttn local layers)."""
+    boundaries when ``segments`` is given (FedAttn local layers; 1-D shared
+    or 2-D per-row). The returned carry is the last ``dc-1`` VALID tokens'
+    window (carry_window), so a padded suffix never enters the taps of a
+    later decode step."""
     B, S, d_in = x.shape
     dc = w.shape[0]
     if conv_state is not None:
@@ -206,11 +249,12 @@ def _causal_conv(
         shift = dc - 1 - j  # how far back tap j reaches
         xj = jax.lax.dynamic_slice_in_dim(xext, j, S, axis=1)
         if segments is not None and shift > 0:
-            src = jnp.pad(segments, (shift, 0), constant_values=-1)[:-shift]
-            ok = (src == segments)[None, :, None]
+            seg2 = segments if segments.ndim == 2 else segments[None]
+            src = jnp.pad(seg2, ((0, 0), (shift, 0)), constant_values=-1)[:, :-shift]
+            ok = (src == seg2)[..., None]  # (B-or-1, S, 1)
             xj = jnp.where(ok, xj, jnp.zeros_like(xj))
         y = y + xj * w[j]
-    new_state = xext[:, -(dc - 1):] if dc > 1 else None
+    new_state = L.carry_window(x, conv_state, valid, dc - 1) if dc > 1 else None
     return y + b, new_state
 
 
@@ -232,8 +276,11 @@ def mamba_block(
     dt_rank = p["dt_proj"].shape[0]
     xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
     xm, z = jnp.split(xz, 2, axis=-1)
+    valid = _validity(ctx)
     segs = _shift_segments(ctx, sync)
-    xm, new_conv = _causal_conv(xm, p["conv_w"], p["conv_b"], segs, conv_state)
+    xm, new_conv = _causal_conv(
+        xm, p["conv_w"], p["conv_b"], segs, conv_state, valid=valid
+    )
     xm = jax.nn.silu(xm.astype(jnp.float32)).astype(x.dtype)
 
     proj = jnp.einsum("bse,ef->bsf", xm, p["x_proj"])
@@ -255,7 +302,8 @@ def mamba_block(
     else:
         y, new_state = ops.mamba_scan(
             xm, delta, A, Bm, C, p["D"],
-            initial_state=state, reset_mask=resets, backend=backend,
+            initial_state=state, reset_mask=resets, valid=valid,
+            backend=backend,
         )
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
     y = jnp.einsum("bse,ed->bsd", y, p["out_proj"])

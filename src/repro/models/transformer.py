@@ -153,7 +153,15 @@ def apply_layer_decode(
     contributed: Optional[jnp.ndarray] = None,
 ):
     """One decode block. Returns (x, new_cache). ``contributed`` is this
-    layer's sparse-KV-exchange row during bulk prefill-via-decode."""
+    layer's sparse-KV-exchange row during bulk prefill-via-decode.
+
+    Per-row vectors: ``ctx`` (the decode context) may carry 2-D ``(B, S)``
+    positions/segments and ``(B, capacity)`` kv vectors — the batched
+    contract of repro.kernels.core. Attention consumes them as visibility;
+    the recurrent blocks (mamba/rwkv) derive per-row validity, reset and
+    shift masks from the same segments (models/ssm docstring), so padded
+    suffix tokens (segment -1) are identity state updates and the
+    conv/token-shift carries come from each row's last REAL token."""
     if sync is None:
         sync = ctx.schedule.is_sync(layer_idx)
     h = L.apply_norm(p["norm1"], x, config)
@@ -183,8 +191,13 @@ def apply_layer_decode(
     x = x + o
     h2 = L.apply_norm(p["norm2"], x, config)
     if spec.kind == "rwkv":
+        # same single-token/bulk split as time-mix: S=1 decode continues
+        # the shift carry (sync semantics), bulk prefill-via-decode honors
+        # the layer's real flag so local-layer channel-mix token shifts
+        # mask at segment boundaries exactly as the forward path does
         f, sh2 = S.rwkv_channel_mix(
-            p["cmix"], h2, ctx, config, sync=True, shifted=cache["shift_c"]
+            p["cmix"], h2, ctx, config, sync=ssm_sync,
+            shifted=cache["shift_c"],
         )
         new_cache["shift_c"] = sh2
     elif spec.moe:

@@ -31,12 +31,15 @@ Compiled-serving architecture
   decode write frontier, so the fixed-capacity causal convention masks it
   until the slot is overwritten by a real generated token. Mixed request
   lengths therefore share one executable per bucket — steady-state serving
-  does zero recompilation. L-bucketing auto-disables for SSM/hybrid stacks
-  (a recurrence would scan the padded suffix into its state); n_new
-  bucketing is always safe (extra steps happen after the kept tokens).
-  The trade-off is the classic one: up to ~2x padded work at the top of a
-  bucket (both the padded prefill and the discarded decode tail) in
-  exchange for executable reuse — ``bucket='none'`` opts out per engine.
+  does zero recompilation. The same sentinel drives the recurrent stacks
+  (mamba/rwkv): a segment ``-1`` token is an IDENTITY state update (Δ·mask
+  gating, decay/k masking, valid-aware conv/token-shift carries — the
+  validity contract of models/ssm + kernels/core), so SSM/hybrid stacks
+  bucket L exactly like attention stacks; n_new bucketing is always safe
+  (extra steps happen after the kept tokens). The trade-off is the classic
+  one: up to ~2x padded work at the top of a bucket (both the padded
+  prefill and the discarded decode tail) in exchange for executable reuse
+  — ``bucket='none'`` opts out per engine.
 * **Scan-over-layers** — when the sync schedule is periodic over the layer
   body (``ScanPlan.from_schedule``), prefill and decode lower as one
   ``lax.scan`` over the repeating layer unit with stacked params and
@@ -168,13 +171,12 @@ class FedAttnEngine:
                 "the layer body (ScanPlan.from_schedule returned None)"
             )
         self.layers_mode = layers_mode or ("scan" if self._plan else "loop")
-        # bucketing L pads the *prefill* — a recurrence (mamba/rwkv) would
-        # scan the padded suffix into its carried state, so only pure-
-        # attention causal stacks bucket L; n_new always buckets (extra
-        # decode steps run after the kept tokens and are discarded)
-        self._bucket_L_ok = self.fed.causal and all(
-            s.kind == "attn" for s in config.layer_specs()
-        )
+        # bucketing L pads the *prefill* with segment -1 tokens: attention
+        # masks them out of visibility, recurrences treat them as identity
+        # state updates (the validity contract, models/ssm) — so every
+        # causal stack buckets L; n_new always buckets (extra decode steps
+        # run after the kept tokens and are discarded)
+        self._bucket_L_ok = self.fed.causal
         self._scan_params = None  # lazily stacked params for scan mode
         # compiled drivers, keyed by bucketed shapes + sampling mode only
         self._prefill_fns: dict = {}

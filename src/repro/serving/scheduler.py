@@ -10,7 +10,10 @@ throughput — request interleaving over a shared KV pool:
   (``model.init_cache(max_slots, capacity)``, loop or scan layout). Each
   slot row holds one in-flight request; a retired slot's pages are reused
   immediately by the next admission (the prefill-into-slot write replaces
-  the whole row, so stale KV never leaks between occupants).
+  the whole row, so stale KV never leaks between occupants). Recurrent
+  layers (mamba/rwkv) keep per-slot SSM/conv/token-shift state rows in the
+  same pool under the same whole-row-replace rule — one pool, every stack
+  kind.
 * **One resident decode executable** — every scheduler tick runs ONE cached
   jitted step over ALL slots. Everything that distinguishes slots — write
   frontier, query position, segment vectors, temperature, rng key, fold
@@ -26,7 +29,12 @@ throughput — request interleaving over a shared KV pool:
   real request and are dropped at the slot scatter). Per-row request state
   — real length, partition segments, sparse-exchange masks, sampling —
   rides the batched-vector contract of :mod:`repro.kernels.core`, so one
-  executable per (B-bucket, L-bucket) serves any mix of requests.
+  executable per (B-bucket, L-bucket) serves any mix of requests. This is
+  THE single admission path for every stack kind: recurrent layers consume
+  the same per-row segment vectors as validity/reset/shift masks
+  (:mod:`repro.models.ssm`), so SSM/hybrid admissions coalesce and
+  L-bucket exactly like attention (the per-exact-L executable explosion
+  the legacy one-at-a-time SSM admission paid is gone).
 * **SPMD pooled decode** — when the engine carries a mesh
   (``FedAttnEngine(mesh=...)``), the pool's KV pages are sharded over the
   mesh's 'model' axis along *capacity* and the resident decode step runs
@@ -145,9 +153,12 @@ class ContinuousBatchingScheduler:
                 )
             if not all(s.kind == "attn" for s in engine.config.layer_specs()):
                 raise NotImplementedError(
-                    "SPMD pooled decode shards the KV capacity dim; "
-                    "SSM/hybrid stacks carry unsharded recurrent state "
-                    "(run them without a serving mesh)"
+                    "SPMD pooled decode shards the KV pool's capacity dim; "
+                    "recurrent (SSM/hybrid) slot state follows the "
+                    "validity/segment contract (models/ssm) but spmd_ssm's "
+                    "inter-shard state hand-off does not yet compose with "
+                    "the capacity-sharded slot pool — run SSM/hybrid pools "
+                    "without a serving mesh"
                 )
             pspecs = T.cache_pspecs(self.cache, self._spmd.cache_axes)
             self._cache_shardings = jax.tree.map(
@@ -187,13 +198,6 @@ class ContinuousBatchingScheduler:
         # them); accelerators donate prefill buffers, so there they are
         # rebuilt per admit
         self._prefill_caches: dict = {} if jax.default_backend() == "cpu" else None
-        # coalesced (B>1) admission rides per-row 2-D segment vectors — the
-        # batched contract attention kernels honor but recurrences do not
-        # (SSM shift/reset masks are 1-D); SSM/hybrid stacks admit one
-        # request at a time through the legacy shared-vector prefill
-        self._coalesce = all(
-            s.kind == "attn" for s in engine.config.layer_specs()
-        )
 
     def _spmd_scope(self):
         """runtime.spmd context for tracing/running pooled executables —
@@ -360,62 +364,38 @@ class ContinuousBatchingScheduler:
                 contrib_rows.append(row)
         n_rounds = contrib_rows[0].shape[0] if contrib_rows else None
 
-        if self._coalesce:
-            Bp = self._admit_batch_size(B, Lp, n_rounds)
-            pad = lambda a: np.concatenate(
-                [a, np.broadcast_to(a[:1], (Bp - B,) + a.shape[1:])]
-            ) if Bp > B else a  # padding rows replicate request 0
-            contributed = None
-            if contrib_rows:
-                contributed = jnp.asarray(pad(np.stack(contrib_rows)))
-            one = None
+        Bp = self._admit_batch_size(B, Lp, n_rounds)
+        pad = lambda a: np.concatenate(
+            [a, np.broadcast_to(a[:1], (Bp - B,) + a.shape[1:])]
+        ) if Bp > B else a  # padding rows replicate request 0
+        contributed = None
+        if contrib_rows:
+            contributed = jnp.asarray(pad(np.stack(contrib_rows)))
+        one = None
+        if self._prefill_caches is not None:
+            one = self._prefill_caches.get(Bp)
+        if one is None:
+            one = eng.model.init_cache(Bp, C, plan=self._plan)
             if self._prefill_caches is not None:
-                one = self._prefill_caches.get(Bp)
-            if one is None:
-                one = eng.model.init_cache(Bp, C, plan=self._plan)
-                if self._prefill_caches is not None:
-                    self._prefill_caches[Bp] = one
-            fn = eng._prefill_fn(Bp, Lp, C, n_rounds, False, per_row=True)
-            last, one = fn(
-                eng._run_params(), one, jnp.asarray(pad(tokens)),
-                jnp.asarray(pad(real_len)), jnp.arange(Lp, dtype=jnp.int32),
-                jnp.asarray(pad(q_seg)), jnp.arange(C, dtype=jnp.int32),
-                jnp.asarray(pad(kv_seg)), contributed, None,
-            )
-            tok0, lp0 = self._admit_finish_fn()(
-                last, jnp.asarray(pad(temps)), jnp.asarray(pad(key_data)),
-                jnp.asarray(pad(sampled)),
-            )
-            # scatter the real rows into their slots (padding rows get an
-            # out-of-range index and drop via scatter OOB semantics)
-            slot_idx = np.full(Bp, self.max_slots, np.int32)
-            slot_idx[:B] = slots
-            self.cache = self._slot_write_fn()(
-                self.cache, one, jnp.asarray(slot_idx)
-            )
-        else:
-            # SSM/hybrid: legacy one-request-at-a-time admission with the
-            # shared-vector (1-D) prefill (recurrences cannot take per-row
-            # segment vectors); callers always pass len(items) == 1 here
-            assert B == 1
-            (rid, req), ctx, L = items[0], ctxs[0], int(real_len[0])
-            one = None
-            if self._prefill_caches is not None:
-                one = self._prefill_caches.get(1)
-            if one is None:
-                one = eng.model.init_cache(1, C, plan=self._plan)
-                if self._prefill_caches is not None:
-                    self._prefill_caches[1] = one
-            last, one = eng._prefill_compiled(
-                req.tokens[None], ctx, one, None, L, Lp, C
-            )
-            tok0, lp0 = self._admit_finish_fn()(
-                last, jnp.asarray(temps), jnp.asarray(key_data),
-                jnp.asarray(sampled),
-            )
-            self.cache = self._slot_write_fn()(
-                self.cache, one, jnp.asarray(np.asarray(slots, np.int32))
-            )
+                self._prefill_caches[Bp] = one
+        fn = eng._prefill_fn(Bp, Lp, C, n_rounds, False, per_row=True)
+        last, one = fn(
+            eng._run_params(), one, jnp.asarray(pad(tokens)),
+            jnp.asarray(pad(real_len)), jnp.arange(Lp, dtype=jnp.int32),
+            jnp.asarray(pad(q_seg)), jnp.arange(C, dtype=jnp.int32),
+            jnp.asarray(pad(kv_seg)), contributed, None,
+        )
+        tok0, lp0 = self._admit_finish_fn()(
+            last, jnp.asarray(pad(temps)), jnp.asarray(pad(key_data)),
+            jnp.asarray(pad(sampled)),
+        )
+        # scatter the real rows into their slots (padding rows get an
+        # out-of-range index and drop via scatter OOB semantics)
+        slot_idx = np.full(Bp, self.max_slots, np.int32)
+        slot_idx[:B] = slots
+        self.cache = self._slot_write_fn()(
+            self.cache, one, jnp.asarray(slot_idx)
+        )
 
         tok0 = np.asarray(tok0)
         lp0 = np.asarray(lp0)
@@ -593,12 +573,13 @@ class ContinuousBatchingScheduler:
             batch.append((rid, req))
         if batch:
             groups: dict = {}
-            for n, (rid, req) in enumerate(batch):
+            for rid, req in batch:
+                # coalesce same-bucket admissions into one B>1 prefill —
+                # THE single admission path, every stack kind (per-row
+                # segment vectors drive attention visibility and the
+                # recurrence validity/reset masks alike)
                 Lp = self.engine._bucket_len(int(req.tokens.shape[0]))
-                # coalesce same-bucket admissions into one B>1 prefill;
-                # SSM/hybrid stacks admit singly (1-D segment vectors only)
-                key = Lp if self._coalesce else (Lp, n)
-                groups.setdefault(key, (Lp, []))[1].append((rid, req))
+                groups.setdefault(Lp, (Lp, []))[1].append((rid, req))
             for Lp, items in groups.values():
                 self._admit_group([free.pop(0) for _ in items], items, Lp)
 

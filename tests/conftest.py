@@ -44,6 +44,33 @@ def tiny_config(**kw) -> ModelConfig:
     return ModelConfig(**base)
 
 
+# The three stack kinds the serving layer must treat uniformly (one
+# validity/segment contract from kernels to admission): pure attention,
+# jamba-style mamba+attention hybrid, and an attention-free rwkv stack.
+# Scheduler/bucket tests sweep these via parametrized fixtures.
+STACK_KINDS = ("attn", "hybrid", "rwkv")
+
+
+def stack_config(kind: str, **kw) -> ModelConfig:
+    if kind == "attn":
+        return tiny_config(**kw)
+    if kind == "hybrid":  # jamba-style mamba+attn interleave
+        return tiny_config(
+            arch_type="hybrid",
+            pattern=(LayerSpec(kind="mamba"), LayerSpec(sync=True)),
+            n_layers=4,
+            **kw,
+        )
+    assert kind == "rwkv", kind  # pure-recurrence (attention-free) stack
+    return tiny_config(
+        arch_type="ssm",
+        pattern=tuple(LayerSpec(kind="rwkv", sync=(i == 3)) for i in range(4)),
+        rwkv_head_dim=16,
+        n_layers=4,
+        **kw,
+    )
+
+
 @pytest.fixture
 def rng():
     return jax.random.key(0)

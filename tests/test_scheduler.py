@@ -3,23 +3,30 @@ token/logprob parity with standalone generate (greedy AND sampled, loop
 AND scan layer lowering, sparse KV exchange, heterogeneous partitions),
 the zero-recompile contract (ONE resident decode executable across a
 trace whose active-slot set changes every step), slot reuse, result
-ordering, and capacity validation."""
+ordering, and capacity validation.
+
+The core contracts — parity, churn without recompiles, coalesced
+one-executable admission — are pinned over ALL THREE stack kinds
+(attention / rwkv / mamba-hybrid) from one parametrized fixture
+(``stack_eng``, marked ``stack_sweep``): since the recurrence validity
+contract there is a single admission path, so the pins must hold
+uniformly, including per-slot SSM/conv/token-shift state in the pool."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import tiny_config
+from conftest import STACK_KINDS, stack_config, tiny_config
 from repro.serving import FedAttnEngine, Request
 from repro.serving.scheduler import ContinuousBatchingScheduler
 from repro.types import FedAttnConfig, LayerSpec
 
 
-def _engine(cfg):
+def _engine(cfg, **kw):
     from repro.models import build_model
 
     params = build_model(cfg).init(jax.random.key(0))
-    return FedAttnEngine(cfg, params)
+    return FedAttnEngine(cfg, params, **kw)
 
 
 @pytest.fixture(scope="module")
@@ -27,6 +34,14 @@ def eng():
     """One engine for every default-config test — solo-generate and pool
     executables accumulate in its caches across tests (realistic reuse)."""
     return _engine(tiny_config())
+
+
+@pytest.fixture(scope="module", params=STACK_KINDS)
+def stack_eng(request):
+    """THE stack-kind sweep: one shared engine per stack kind (attention /
+    rwkv / mamba-hybrid), reused across the parity/churn/compile-count
+    tests below so executables accumulate realistically per kind."""
+    return _engine(stack_config(request.param))
 
 
 def _req(i, L, n_new, temp=0.0, cfg=None):
@@ -50,19 +65,21 @@ def _assert_matches_solo(eng, results, reqs):
         assert r.prefill_comm_bytes == solo.prefill_comm_bytes
 
 
-def test_parity_mixed_greedy_and_sampled(eng):
+@pytest.mark.stack_sweep
+def test_parity_mixed_greedy_and_sampled(stack_eng):
     """4 mixed-length requests through a 2-slot pool (forcing mid-flight
     retire + re-admit) must each match a standalone generate exactly —
-    greedy and sampled, including the first (prefill) token."""
+    greedy and sampled, including the first (prefill) token — on every
+    stack kind (recurrent slots carry per-slot SSM/conv/shift state)."""
     reqs = [
         _req(0, 24, 8),
         _req(1, 17, 5, temp=0.7),
         _req(2, 30, 3),
         _req(3, 9, 12, temp=0.9),
     ]
-    res = eng.generate_many(reqs, max_slots=2, capacity=64)
+    res = stack_eng.generate_many(reqs, max_slots=2, capacity=64)
     assert [r.tokens.shape for r in res] == [(1, 8), (1, 5), (1, 3), (1, 12)]
-    _assert_matches_solo(eng, res, reqs)
+    _assert_matches_solo(stack_eng, res, reqs)
 
 
 def test_parity_scan_mode_fused_steps():
@@ -115,12 +132,14 @@ def test_parity_sparse_kv_and_partition(eng):
     _assert_matches_solo(e, res, reqs)
 
 
-def test_zero_decode_recompiles_across_churning_trace(eng):
+@pytest.mark.stack_sweep
+def test_zero_decode_recompiles_across_churning_trace(stack_eng):
     """Acceptance: staggered n_new makes the active-slot set change every
     step (retire + admit mid-flight); the pool must end the trace with
-    exactly ONE decode executable and ONE slot-write executable."""
+    exactly ONE decode executable and ONE slot-write executable — slot
+    churn with recurrent state never recompiles the resident step."""
     reqs = [_req(i, 10 + 3 * i, 2 + i, temp=0.4 * (i % 2)) for i in range(6)]
-    sched = ContinuousBatchingScheduler(eng, max_slots=3, capacity=64)
+    sched = ContinuousBatchingScheduler(stack_eng, max_slots=3, capacity=64)
     res = sched.run(reqs)
     cc = sched.compile_counts
     assert cc["decode_step"] == 1, cc
@@ -158,12 +177,17 @@ def test_n_new_1_request_retires_at_admit(eng):
     _assert_matches_solo(eng, res, reqs)
 
 
-def test_admission_coalescing_one_prefill_executable():
+@pytest.mark.stack_sweep
+@pytest.mark.parametrize("stack", STACK_KINDS)
+def test_admission_coalescing_one_prefill_executable(stack):
     """Same-bucket admissions arriving together must run as ONE B>1
-    bucketed prefill: a fresh engine serving 4 same-bucket requests through
-    a 4-slot pool ends the trace with exactly one prefill executable (the
-    coalesced per-row one), and a second identical trace adds zero."""
-    e = _engine(tiny_config())
+    bucketed prefill — the single admission path, every stack kind: a
+    fresh engine serving 4 same-bucket requests through a 4-slot pool ends
+    the trace with exactly one prefill executable (the coalesced per-row
+    one), and a second identical trace adds zero. For SSM/hybrid stacks
+    this is the pin that the legacy one-at-a-time admission (one
+    executable per exact L) is gone."""
+    e = _engine(stack_config(stack))
     reqs = [_req(i, 20 + i, 4, temp=0.5 * (i % 2)) for i in range(4)]  # all Lp=32
     sched = ContinuousBatchingScheduler(e, max_slots=4, capacity=64)
     res = sched.run(reqs)
@@ -173,6 +197,18 @@ def test_admission_coalescing_one_prefill_executable():
     sched.run(reqs)
     assert sched.compile_counts == cc
     _assert_matches_solo(e, res, reqs)
+
+
+def test_ssm_mesh_raise_names_the_state_handoff_blocker():
+    """SSM/hybrid pools under a serving mesh still raise — but the message
+    must name the ACTUAL remaining blocker: the slot state follows the
+    validity/segment contract now; what is missing is composing spmd_ssm's
+    inter-shard state hand-off with the capacity-sharded slot pool."""
+    from repro.launch.mesh import make_serving_mesh
+
+    e = _engine(stack_config("hybrid"), mesh=make_serving_mesh(1))
+    with pytest.raises(NotImplementedError, match="state hand-off"):
+        ContinuousBatchingScheduler(e, max_slots=2, capacity=32)
 
 
 def test_admission_coalescing_reuses_wider_batches():

@@ -1,0 +1,173 @@
+"""Masked-scan identity properties — the recurrence half of the repo-wide
+validity contract (repro/kernels/core docstring, models/ssm docstring).
+
+A recurrence that scans a pow2-padded suffix (or a padded row of a ragged
+coalesced-admission batch) must treat every invalid token as an IDENTITY
+state update: the mamba Δ·mask gating and the rwkv decay/k masking make
+this exact in float32 (decay ``exp(0) = 1``, zero injection), so both the
+final carried state and every valid token's output are BIT-identical to
+the unpadded scan — not merely close. These properties are what lets the
+serving engine L-bucket SSM/hybrid stacks and the scheduler coalesce their
+admissions (tests/test_bucket_policy.py, tests/test_scheduler.py pin the
+serving-level consequences; this module pins the kernel-level invariant at
+the 1 / pow2 / pow2+1 boundary shapes where an off-by-one would corrupt
+state or leak padding).
+
+Property tests run under real hypothesis in CI and degrade to the
+deterministic offline stub elsewhere (see tests/conftest.py)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.mamba_scan import mamba_scan_chunked
+from repro.kernels.rwkv6 import rwkv6_chunked
+from repro.serving.engine import _next_pow2
+
+# 1 / pow2 / pow2+1 — the bucket-boundary lengths (pow2 pads by 0; pow2+1
+# pads maximally into the next bucket)
+BOUNDARY_L = [1, 2, 3, 4, 5, 8, 9, 16, 17]
+
+
+def _mamba_inputs(rng, B, L, d_in=6, ds=4):
+    r = np.random.default_rng(rng)
+    x = jnp.asarray(r.normal(size=(B, L, d_in)), jnp.float32)
+    delta = jnp.asarray(r.uniform(0.05, 1.0, size=(B, L, d_in)), jnp.float32)
+    A = -jnp.asarray(r.uniform(0.5, 2.0, size=(d_in, ds)), jnp.float32)
+    Bm = jnp.asarray(r.normal(size=(B, L, ds)), jnp.float32)
+    C = jnp.asarray(r.normal(size=(B, L, ds)), jnp.float32)
+    D = jnp.asarray(r.normal(size=(d_in,)), jnp.float32)
+    return x, delta, A, Bm, C, D
+
+
+def _rwkv_inputs(rng, B, L, H=2, dk=4, dv=4):
+    r = np.random.default_rng(rng)
+    rr = jnp.asarray(r.normal(size=(B, L, H, dk)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(B, L, H, dk)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(B, L, H, dv)), jnp.float32)
+    w = jnp.maximum(
+        -jnp.asarray(r.uniform(0.01, 3.0, size=(B, L, H, dk)), jnp.float32), -5.0
+    )
+    u = jnp.asarray(r.normal(size=(H, dk)), jnp.float32)
+    return rr, k, v, w, u
+
+
+@given(L=st.sampled_from(BOUNDARY_L), seed=st.integers(min_value=0, max_value=50))
+@settings(max_examples=12, deadline=None)
+def test_mamba_padded_suffix_is_bit_identical(L, seed):
+    """Garbage tokens in the padded suffix (valid=False) must leave the
+    mamba state and all valid outputs bit-identical to the unpadded scan."""
+    Lp = _next_pow2(L) if L > 1 else 2  # L=1 still exercises a 1-pad
+    x, delta, A, Bm, C, D = _mamba_inputs(seed, 2, Lp)
+    valid = jnp.arange(Lp) < L
+    y_p, h_p = ref.mamba_scan_ref(x, delta, A, Bm, C, D, valid=valid)
+    y_u, h_u = ref.mamba_scan_ref(
+        x[:, :L], delta[:, :L], A, Bm[:, :L], C[:, :L], D
+    )
+    np.testing.assert_array_equal(np.asarray(y_p[:, :L]), np.asarray(y_u))
+    np.testing.assert_array_equal(np.asarray(h_p), np.asarray(h_u))
+
+
+@given(L=st.sampled_from(BOUNDARY_L), seed=st.integers(min_value=0, max_value=50))
+@settings(max_examples=12, deadline=None)
+def test_rwkv_padded_suffix_is_bit_identical(L, seed):
+    Lp = _next_pow2(L) if L > 1 else 2
+    r, k, v, w, u = _rwkv_inputs(seed, 2, Lp)
+    valid = jnp.arange(Lp) < L
+    y_p, S_p = ref.rwkv6_ref(r, k, v, w, u, valid=valid)
+    y_u, S_u = ref.rwkv6_ref(r[:, :L], k[:, :L], v[:, :L], w[:, :L], u)
+    np.testing.assert_array_equal(np.asarray(y_p[:, :L]), np.asarray(y_u))
+    np.testing.assert_array_equal(np.asarray(S_p), np.asarray(S_u))
+
+
+@given(seed=st.integers(min_value=0, max_value=50))
+@settings(max_examples=8, deadline=None)
+def test_mamba_ragged_rows_match_per_row_scans(seed):
+    """A 2-D (B, L) validity mask — each row its own real length, the
+    coalesced-admission shape — must equal per-row unpadded scans bitwise,
+    including per-row 2-D reset masks at per-row segment boundaries."""
+    lens = [1, 5, 8]  # boundary lengths within one padded batch
+    Lp = 8
+    x, delta, A, Bm, C, D = _mamba_inputs(seed, len(lens), Lp)
+    valid = jnp.stack([jnp.arange(Lp) < ln for ln in lens])
+    # per-row segment boundary (reset) at each row's midpoint
+    resets = np.zeros((len(lens), Lp), bool)
+    for i, ln in enumerate(lens):
+        if ln > 1:
+            resets[i, ln // 2] = True
+    resets = jnp.asarray(resets)
+    y_p, h_p = ref.mamba_scan_ref(
+        x, delta, A, Bm, C, D, valid=valid, reset_mask=resets
+    )
+    for i, ln in enumerate(lens):
+        y_u, h_u = ref.mamba_scan_ref(
+            x[i : i + 1, :ln], delta[i : i + 1, :ln], A,
+            Bm[i : i + 1, :ln], C[i : i + 1, :ln], D,
+            reset_mask=resets[i, :ln],
+        )
+        np.testing.assert_array_equal(np.asarray(y_p[i : i + 1, :ln]), np.asarray(y_u))
+        np.testing.assert_array_equal(np.asarray(h_p[i : i + 1]), np.asarray(h_u))
+
+
+@given(seed=st.integers(min_value=0, max_value=50))
+@settings(max_examples=8, deadline=None)
+def test_rwkv_ragged_rows_match_per_row_scans(seed):
+    lens = [1, 5, 8]
+    Lp = 8
+    r, k, v, w, u = _rwkv_inputs(seed, len(lens), Lp)
+    valid = jnp.stack([jnp.arange(Lp) < ln for ln in lens])
+    resets = np.zeros((len(lens), Lp), bool)
+    for i, ln in enumerate(lens):
+        if ln > 1:
+            resets[i, ln // 2] = True
+    resets = jnp.asarray(resets)
+    y_p, S_p = ref.rwkv6_ref(r, k, v, w, u, valid=valid, reset_mask=resets)
+    for i, ln in enumerate(lens):
+        y_u, S_u = ref.rwkv6_ref(
+            r[i : i + 1, :ln], k[i : i + 1, :ln], v[i : i + 1, :ln],
+            w[i : i + 1, :ln], u, reset_mask=resets[i, :ln],
+        )
+        np.testing.assert_array_equal(np.asarray(y_p[i : i + 1, :ln]), np.asarray(y_u))
+        np.testing.assert_array_equal(np.asarray(S_p[i : i + 1]), np.asarray(S_u))
+
+
+# -- Pallas kernels honor the same contract (no oracle fallback) --------------
+
+
+def test_mamba_pallas_valid_and_per_row_resets_match_ref():
+    """The chunked Pallas kernel runs validity (host Δ·mask gating) and
+    per-row resets IN kernel — numerics must match the oracle."""
+    B, L = 2, 9
+    x, delta, A, Bm, C, D = _mamba_inputs(3, B, 16)
+    valid = jnp.arange(16) < L
+    resets = jnp.zeros((B, 16), bool).at[0, 3].set(True).at[1, 5].set(True)
+    want, _ = ref.mamba_scan_ref(
+        x, delta, A, Bm, C, D, valid=valid, reset_mask=resets
+    )
+    got, _ = mamba_scan_chunked(
+        x, delta, A, Bm, C, D, valid=valid, reset_mask=resets,
+        chunk=4, block_d=4,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got[:, :L]), np.asarray(want[:, :L]), atol=2e-5, rtol=2e-5
+    )
+
+
+def test_rwkv_pallas_valid_and_per_row_resets_match_ref():
+    """The chunked WKV6 kernel implements resets as same-epoch masking of
+    the intra-chunk matrix + state-update restriction — must match the
+    sequential oracle, including resets mid-chunk and at chunk edges."""
+    B, L = 2, 9
+    r, k, v, w, u = _rwkv_inputs(3, B, 16)
+    valid = jnp.arange(16) < L
+    resets = (
+        jnp.zeros((B, 16), bool).at[0, 3].set(True)
+        .at[1, 4].set(True).at[1, 7].set(True)  # chunk-edge + mid-chunk
+    )
+    want, _ = ref.rwkv6_ref(r, k, v, w, u, valid=valid, reset_mask=resets)
+    got, _ = rwkv6_chunked(
+        r, k, v, w, u, valid=valid, reset_mask=resets, chunk=4
+    )
+    np.testing.assert_allclose(
+        np.asarray(got[:, :L]), np.asarray(want[:, :L]), atol=2e-4, rtol=2e-4
+    )
