@@ -9,21 +9,35 @@ adapted to TPU pods: FedAttn is realized as a communication-avoiding
 sequence-parallel attention schedule (participants = sequence shards,
 KV exchange = all_gather over the `model` mesh axis at sync layers only).
 
-Public API re-exports the pieces a user typically touches.
+Public API re-exports the pieces a user typically touches — lazily, so
+that the JAX-free subpackages (``repro.analysis`` lint, run by a bare-
+Python CI job) import without pulling in jax.
 """
 
-from repro.types import (
-    FedAttnConfig,
-    LayerSpec,
-    ModelConfig,
-    ShapeSpec,
-    INPUT_SHAPES,
-)
-from repro.core.schedule import SyncSchedule
-from repro.core.partition import Partition
-from repro.core.fedattn import FedAttnContext
-
 __version__ = "1.0.0"
+
+_EXPORTS = {
+    "FedAttnConfig": "repro.types",
+    "LayerSpec": "repro.types",
+    "ModelConfig": "repro.types",
+    "ShapeSpec": "repro.types",
+    "INPUT_SHAPES": "repro.types",
+    "SyncSchedule": "repro.core.schedule",
+    "Partition": "repro.core.partition",
+    "FedAttnContext": "repro.core.fedattn",
+}
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))
 
 __all__ = [
     "FedAttnConfig",

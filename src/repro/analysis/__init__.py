@@ -1,0 +1,39 @@
+"""Static invariant analysis: the serving contracts, machine-checked.
+
+PRs 2-5 established a handful of cross-cutting contracts — ONE visibility/
+masking rule (kernels/core.py), the segment-sentinel scheme (``PAD_SEGMENT``
+bucket padding / ``KERNEL_PAD_SEGMENT`` kernel padding / inactive pool
+slots), recurrence identity updates, and the zero-recompile churn guarantee
+— but enforced them only through ad-hoc test pins.  This package makes them
+mechanical:
+
+* :mod:`repro.analysis.lint` — an AST linter over ``src/`` with named
+  ``FED0xx`` rules (stdlib-only: runs without JAX installed, so CI's lint
+  job needs no JAX matrix).  ``# fedlint: disable=FED0xx`` is the per-line
+  escape hatch.
+* :mod:`repro.analysis.jaxpr_audit` — traces every jitted serving entry
+  point (bucketed prefill, per-row coalesced prefill, resident decode step,
+  slot-write scatter, mesh-pooled step) via ``jax.jit(...).trace`` /
+  ``jax.make_jaxpr`` — **no compilation** — and statically verifies: no f64
+  ops, no host callbacks, O(period) trace size under scan plans, KV
+  pool/cache donation on non-CPU backends, and no weights-scale arrays
+  captured as jaxpr consts where the contract says traced-arg.
+* :mod:`repro.analysis.trace_guard` — per-entry-point executable budgets:
+  one enforced contract replacing the scattered ``compile_counts`` pins,
+  with a pytest-friendly ``enforce()`` scope that raises on overrun.
+
+CLI: ``python -m repro.analysis [--strict] [--jaxpr]`` (see ``__main__``).
+JAX is imported lazily — importing this package or running the AST lint
+works on a box with no JAX at all.
+"""
+from __future__ import annotations
+
+__all__ = ["lint", "trace_guard"]
+
+
+def __getattr__(name):  # lazy: jaxpr_audit pulls in jax + the whole engine
+    if name == "jaxpr_audit":
+        import importlib
+
+        return importlib.import_module("repro.analysis.jaxpr_audit")
+    raise AttributeError(name)

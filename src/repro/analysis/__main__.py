@@ -1,0 +1,76 @@
+"""``python -m repro.analysis`` — run the repo's invariant analyzers.
+
+Default: the stdlib-only AST lint over ``src/`` (no JAX required — this is
+what the CI ``lint`` job runs on a bare Python image).  ``--jaxpr`` adds
+the jaxpr audits: every jitted serving entry point of every registered
+architecture is traced (never compiled) and checked for f64 ops, host
+callbacks, donation gaps and baked-in buffers.
+
+Exit status: 0 when clean; 1 under ``--strict`` when any violation or
+audit issue was found (otherwise findings are reported but the exit stays
+0, for exploratory runs).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+
+def main(argv=None) -> int:
+    here = pathlib.Path(__file__).resolve()
+    src_root = here.parents[2]  # .../src
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="FedAttn invariant analyzers: AST lint + jaxpr audits.",
+    )
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to lint (default: the repro src tree)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any violation")
+    ap.add_argument("--jaxpr", action="store_true",
+                    help="also trace+audit serving entry points (needs JAX)")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="restrict --jaxpr to these architectures "
+                         "(repeatable; default: all registered)")
+    ap.add_argument("--rules", action="store_true",
+                    help="print the lint rule table and exit")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import lint
+
+    if args.rules:
+        for rid, summary in sorted(lint.rules().items()):
+            print(f"{rid}  {summary}")
+        return 0
+
+    paths = args.paths or [str(src_root / "repro")]
+    violations = lint.lint_paths(paths, root=str(src_root))
+    for v in violations:
+        print(f"{v.path}:{v.line}: {v.rule} {v.message}")
+    print(f"lint: {len(violations)} violation(s) in {len(paths)} path(s)")
+
+    n_issues = 0
+    if args.jaxpr:
+        from repro.analysis import jaxpr_audit
+        from repro.configs import ASSIGNED_ARCHS
+
+        archs = args.arch or list(ASSIGNED_ARCHS)
+        for name in archs:
+            try:
+                issues = jaxpr_audit.audit_arch(name)
+            except NotImplementedError as e:  # e.g. unsupported combo
+                print(f"audit {name}: skipped ({e})")
+                continue
+            for issue in issues:
+                print(f"audit {name}: {issue}")
+            n_issues += len(issues)
+            print(f"audit {name}: {len(issues)} issue(s)")
+
+    failed = bool(violations) or n_issues
+    return 1 if (args.strict and failed) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,425 @@
+"""Jaxpr audits: trace every jitted serving entry point, verify contracts.
+
+PRs 2-5 left the serving layer with guarantees that only show up as
+*absences* — no f64 op ever enters a kernel, no host callback hides in a
+hot loop, trace size stays O(period) under a scan plan, the KV pool is
+donated on accelerators, and everything that varies per request is a traced
+argument (never a closure-captured buffer).  A failing case is invisible to
+unit tests until it costs memory or a recompile in production.  This module
+checks them **statically**: each entry point is traced with
+``jax.jit(...).trace`` (abstract evaluation — *no compilation, no
+execution*) and the resulting jaxpr is walked.
+
+Entry points audited (the compiled serving surface):
+
+* ``engine.prefill``          — bucketed single-request prefill
+* ``engine.prefill_per_row``  — coalesced-admission per-row prefill
+* ``engine.decode``           — the multi-token decode driver
+* ``scheduler.decode_step``   — THE resident pooled decode step
+* ``scheduler.slot_write``    — the admission slot-scatter
+* ``scheduler.admit_finish``  — the fused first-token sampler
+
+With an engine carrying a mesh, the scheduler entries trace under the
+SPMD scope, so the mesh-pooled step is audited in its shard_map form.
+
+Checks per entry point:
+
+``f64``        no float64 (or complex128) abstract value anywhere in the
+               jaxpr, including sub-jaxprs (scan/cond/pjit bodies).
+``callback``   no host-callback primitives (pure/io/debug callbacks) — a
+               hidden host round-trip per decode step.
+``donation``   the declared ``donate_argnums`` equal
+               :func:`repro.serving.engine._donation_for_backend` applied
+               to the entry's cache/pool operands — the static sibling of
+               "the pool updates in place on accelerators".
+``consts``     no closure-captured concrete array above a byte threshold:
+               weights-scale consts mean params/cache were baked into the
+               executable instead of passed as traced args (the static
+               sibling of the zero-recompile guarantee — a baked-in buffer
+               forces a retrace per buffer identity).
+``scaling``    (:func:`audit_trace_scaling`) trace size grows by < ``tol``
+               when the layer count doubles under a scan plan — the
+               generalization of PR 2's single jaxpr-size pin to every
+               entry point.
+
+Usage: ``python -m repro.analysis --jaxpr`` or the parametrized
+tier-1 test (tests/test_analysis.py) which sweeps every config in
+``src/repro/configs/``.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+from typing import Callable, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: default ceiling for closure-captured consts (bytes) — far above the
+#: index vectors executables legitimately bake in (O(capacity) int32), far
+#: below any params/cache leaf at serving scale.
+MAX_CONST_BYTES = 1 << 20
+
+_CALLBACK_PRIMS = ("callback", "outside_call", "infeed", "outfeed")
+
+
+@dataclass(frozen=True)
+class AuditIssue:
+    """One contract violation found in a traced entry point."""
+
+    entry: str
+    check: str  # f64 | callback | donation | consts | scaling
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.entry}] {self.check}: {self.detail}"
+
+
+@dataclass
+class EntryPoint:
+    """A traced serving entry point plus its declared donation contract."""
+
+    name: str
+    traced: object  # jax.stages.Traced
+    cache_argnums: tuple = ()  # operands that must donate on non-CPU
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+
+
+def _subjaxprs(params: dict):
+    for v in params.values():
+        if isinstance(v, jax.core.ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, jax.core.Jaxpr):
+            yield v
+        elif isinstance(v, (list, tuple)):
+            for item in v:
+                if isinstance(item, jax.core.ClosedJaxpr):
+                    yield item.jaxpr
+                elif isinstance(item, jax.core.Jaxpr):
+                    yield item
+
+
+def iter_eqns(jaxpr):
+    """Every equation in a jaxpr, recursing into scan/cond/pjit bodies."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in _subjaxprs(eqn.params):
+            yield from iter_eqns(sub)
+
+
+def _avals(jaxpr):
+    for v in list(jaxpr.invars) + list(jaxpr.constvars) + list(jaxpr.outvars):
+        if hasattr(v, "aval"):
+            yield None, v.aval
+    for eqn in iter_eqns(jaxpr):
+        for v in list(eqn.invars) + list(eqn.outvars):
+            if hasattr(v, "aval"):
+                yield eqn.primitive.name, v.aval
+
+
+# ---------------------------------------------------------------------------
+# per-entry checks
+# ---------------------------------------------------------------------------
+
+
+def audit_traced(
+    name: str,
+    traced,
+    *,
+    donate_expected: Optional[tuple] = None,
+    max_const_bytes: int = MAX_CONST_BYTES,
+) -> list[AuditIssue]:
+    """Audit one ``jax.stages.Traced`` (or anything with ``.jaxpr`` /
+    ``.donate_argnums``) against the static serving contracts."""
+    issues: list[AuditIssue] = []
+    closed = traced.jaxpr  # ClosedJaxpr
+    jaxpr = closed.jaxpr
+
+    # -- f64 ---------------------------------------------------------------
+    seen_f64 = set()
+    for prim, aval in _avals(jaxpr):
+        dt = getattr(aval, "dtype", None)
+        if dt is not None and dt in (jnp.float64, jnp.complex128):
+            key = (prim, str(dt))
+            if key not in seen_f64:
+                seen_f64.add(key)
+                issues.append(AuditIssue(
+                    name, "f64",
+                    f"{dt} value {'in primitive ' + prim if prim else 'at the jaxpr boundary'}"
+                    " — serving math is f32/bf16 + int32 only",
+                ))
+
+    # -- host callbacks ----------------------------------------------------
+    for eqn in iter_eqns(jaxpr):
+        pname = eqn.primitive.name
+        if any(tok in pname for tok in _CALLBACK_PRIMS):
+            issues.append(AuditIssue(
+                name, "callback",
+                f"host-callback primitive {pname!r} in the traced body — "
+                "a device→host round trip per step",
+            ))
+
+    # -- donation ----------------------------------------------------------
+    if donate_expected is not None:
+        declared = tuple(sorted(getattr(traced, "donate_argnums", ()) or ()))
+        expected = tuple(sorted(donate_expected))
+        if declared != expected:
+            issues.append(AuditIssue(
+                name, "donation",
+                f"declared donate_argnums {declared} != expected {expected} "
+                "(repro.serving.engine._donation_for_backend — KV pool/cache "
+                "operands must donate on non-CPU backends)",
+            ))
+
+    # -- closure-captured consts -------------------------------------------
+    for const in closed.consts:
+        arr = np.asarray(const) if not hasattr(const, "nbytes") else const
+        nbytes = getattr(arr, "nbytes", 0)
+        if nbytes > max_const_bytes:
+            issues.append(AuditIssue(
+                name, "consts",
+                f"closure-captured concrete array of {nbytes} bytes "
+                f"(shape {getattr(arr, 'shape', '?')}) baked into the "
+                "executable — the contract says traced-arg (zero-recompile "
+                "guarantee)",
+            ))
+    return issues
+
+
+def executable_cache_size(fn) -> Optional[int]:
+    """Number of compiled executables held by a jitted fn (None if the JAX
+    version does not expose it). The audit itself must leave this at 0 —
+    tracing never compiles."""
+    probe = getattr(fn, "_cache_size", None)
+    return probe() if callable(probe) else None
+
+
+# ---------------------------------------------------------------------------
+# entry-point construction (mirrors engine.generate / scheduler.step)
+# ---------------------------------------------------------------------------
+
+
+def trace_engine_entries(
+    engine, *, B: int = 1, L: int = 8, n_new: int = 4, sampled: bool = False,
+    per_row_B: int = 2,
+) -> list[EntryPoint]:
+    """Trace the engine's compiled surface at small shapes: bucketed
+    prefill, per-row coalesced prefill, and the decode driver. Argument
+    construction mirrors ``generate``/``_admit_group`` exactly — the audit
+    sees the same executables serving does."""
+    Lp = engine._bucket_len(L)
+    Nb = engine._bucket_new(n_new)
+    capacity = Lp + Nb
+    plan = engine._plan if engine.layers_mode == "scan" else None
+    params = engine._run_params()
+    ctx = engine.build_context(L)
+    d0 = ctx.decode_template(capacity)
+    entries: list[EntryPoint] = []
+
+    cache = engine.model.init_cache(B, capacity, plan=plan)
+    fn = engine._prefill_fn(B, Lp, capacity, None, False)
+    traced = fn.trace(
+        params, cache, jnp.zeros((B, Lp), jnp.int32), jnp.int32(L),
+        jnp.arange(Lp, dtype=jnp.int32), jnp.zeros((Lp,), jnp.int32),
+        d0.kv_positions, d0.kv_segments, None, None,
+    )
+    entries.append(EntryPoint("engine.prefill", traced, (1,)))
+
+    Bp = per_row_B
+    cache_p = engine.model.init_cache(Bp, capacity, plan=plan)
+    fn = engine._prefill_fn(Bp, Lp, capacity, None, False, per_row=True)
+    traced = fn.trace(
+        params, cache_p, jnp.zeros((Bp, Lp), jnp.int32),
+        jnp.full((Bp,), L, jnp.int32), jnp.arange(Lp, dtype=jnp.int32),
+        jnp.zeros((Bp, Lp), jnp.int32),
+        jnp.arange(capacity, dtype=jnp.int32),
+        jnp.zeros((Bp, capacity), jnp.int32), None, None,
+    )
+    entries.append(EntryPoint("engine.prefill_per_row", traced, (1,)))
+
+    if n_new > 1:
+        fn = engine._decode_fn(B, capacity, Nb, sampled)
+        traced = fn.trace(
+            params, cache, jnp.zeros((B,), jnp.int32), jnp.int32(L),
+            jax.random.key(0), jnp.float32(1.0),
+            d0.positions, d0.segments, d0.kv_positions, d0.kv_segments,
+        )
+        entries.append(EntryPoint("engine.decode", traced, (1,)))
+    return entries
+
+
+def trace_scheduler_entries(scheduler) -> list[EntryPoint]:
+    """Trace the pool's compiled surface: the resident decode step, the
+    slot-write scatter, and the fused admission sampler.  With a serving
+    mesh on the engine, tracing runs under the SPMD scope — the mesh-pooled
+    (shard_map flash-decoding) step is what gets audited."""
+    sched = scheduler
+    eng = sched.engine
+    S, C = sched.max_slots, sched.capacity
+    params = eng._run_params()
+    entries: list[EntryPoint] = []
+
+    with sched._spmd_scope():
+        fn = sched._step_fn(sched.steps_per_admit)
+        traced = fn.trace(
+            params, sched.cache, jnp.asarray(sched._tok),
+            jnp.asarray(sched._write_pos), jnp.asarray(sched._fold),
+            jnp.asarray(sched._qseg), jnp.asarray(sched._kvseg),
+            jnp.asarray(sched._temps), jnp.asarray(sched._sampled),
+            jnp.asarray(sched._key_data),
+        )
+    entries.append(EntryPoint("scheduler.decode_step", traced, (1,)))
+
+    one = eng.model.init_cache(1, C, plan=sched._plan)
+    fn = sched._slot_write_fn()
+    traced = fn.trace(sched.cache, one, jnp.zeros((1,), jnp.int32))
+    entries.append(EntryPoint("scheduler.slot_write", traced, (0,)))
+
+    fn = sched._admit_finish_fn()
+    traced = fn.trace(
+        jnp.zeros((1, eng.config.vocab_size), jnp.float32),
+        jnp.ones((1,), jnp.float32), jnp.asarray(sched._key_data[:1]),
+        jnp.zeros((1,), bool),
+    )
+    entries.append(EntryPoint("scheduler.admit_finish", traced, ()))
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# whole-stack audits
+# ---------------------------------------------------------------------------
+
+
+def audit_entries(
+    entries: Iterable[EntryPoint], *, backend: Optional[str] = None,
+    max_const_bytes: int = MAX_CONST_BYTES,
+) -> list[AuditIssue]:
+    from repro.serving.engine import _donation_for_backend
+
+    issues: list[AuditIssue] = []
+    for e in entries:
+        issues.extend(audit_traced(
+            e.name, e.traced,
+            donate_expected=_donation_for_backend(e.cache_argnums, backend),
+            max_const_bytes=max_const_bytes,
+        ))
+    return issues
+
+
+def audit_engine(
+    engine, *, with_pool: bool = True, B: int = 1, L: int = 8, n_new: int = 4,
+    max_slots: int = 2, backend: Optional[str] = None,
+    max_const_bytes: int = MAX_CONST_BYTES,
+) -> list[AuditIssue]:
+    """Trace + audit every serving entry point of an engine (and, with
+    ``with_pool``, of a small scheduler pool over it)."""
+    entries = trace_engine_entries(engine, B=B, L=L, n_new=n_new)
+    if with_pool:
+        from repro.serving.scheduler import ContinuousBatchingScheduler
+
+        cap = engine._bucket_len(L) + engine._bucket_new(n_new)
+        spmd = getattr(engine, "spmd", None)
+        if spmd is not None:
+            n = spmd.mesh.shape[spmd.cache_axes[0]]
+            cap += (-cap) % n
+        sched = ContinuousBatchingScheduler(
+            engine, max_slots=max_slots, capacity=cap
+        )
+        entries.extend(trace_scheduler_entries(sched))
+    return audit_entries(
+        entries, backend=backend, max_const_bytes=max_const_bytes
+    )
+
+
+def _reduced_engine(config, *, seed: int = 0, **engine_kw):
+    from repro.models import build_model
+    from repro.serving.engine import FedAttnEngine
+
+    model = build_model(config)
+    params = model.init(jax.random.key(seed))
+    return FedAttnEngine(config, params, **engine_kw)
+
+
+def audit_arch(
+    name: str, *, L: int = 8, n_new: int = 4, backend: Optional[str] = None,
+    **reduce_overrides,
+) -> list[AuditIssue]:
+    """Audit one registered architecture at reduced size.
+
+    Decoder-only stacks trace the full serving surface (engine + pool).
+    Encoder-decoder stacks have no serving-engine path yet — their
+    encode+decode forward is traced and checked for f64/callbacks/consts
+    (no donation contract: there is no resident pool to donate).
+    """
+    from repro.configs import get_reduced_config
+
+    cfg = get_reduced_config(name, **reduce_overrides)
+    cfg = cfg.replace(fedattn=cfg.fedattn.replace(n_participants=2))
+    if cfg.is_encoder_decoder:
+        return _audit_encdec(name, cfg, L=L)
+    engine = _reduced_engine(cfg)
+    pool_ok = True
+    return audit_engine(engine, with_pool=pool_ok, L=L, n_new=n_new,
+                        backend=backend)
+
+
+def _audit_encdec(name: str, cfg, *, L: int) -> list[AuditIssue]:
+    from repro.launch import steps as S
+    from repro.models import build_model
+
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    ctx = S.build_context(cfg, L, encoder=True)
+    dec = max(2, L // 2)
+
+    def fwd(params, frames, dec_tokens):
+        return model.apply(params, frames, dec_tokens, ctx)
+
+    traced = jax.jit(fwd).trace(
+        params,
+        jnp.zeros((1, L, cfg.d_model), jnp.float32),
+        jnp.zeros((1, dec), jnp.int32),
+    )
+    return audit_traced(f"{name}.encdec_forward", traced)
+
+
+def audit_trace_scaling(
+    make_engine: Callable[[int], object], *, depths: tuple[int, int] = (2, 4),
+    tol: float = 1.6, B: int = 1, L: int = 8, n_new: int = 4,
+) -> list[AuditIssue]:
+    """The O(period) contract, generalized from PR 2's decode-only pin:
+    for engines in scan mode, doubling the layer count must leave every
+    entry point's traced-jaxpr size within ``tol`` (the scan body is traced
+    once; only bookkeeping may grow).  ``make_engine(k)`` builds the engine
+    at ``n_layers = period * k``."""
+    sizes: dict[int, dict[str, int]] = {}
+    for k in depths:
+        engine = make_engine(k)
+        if engine.layers_mode != "scan":
+            return [AuditIssue(
+                "trace_scaling", "scaling",
+                f"engine at depth multiplier {k} is not in scan mode — "
+                "O(period) tracing does not apply (loop mode is O(n_layers) "
+                "by construction)",
+            )]
+        sizes[k] = {
+            e.name: len(str(e.traced.jaxpr))
+            for e in trace_engine_entries(engine, B=B, L=L, n_new=n_new)
+        }
+    lo, hi = depths[0], depths[-1]
+    issues = []
+    for entry, base in sizes[lo].items():
+        ratio = sizes[hi][entry] / max(base, 1)
+        if ratio > tol:
+            issues.append(AuditIssue(
+                entry, "scaling",
+                f"traced jaxpr grew {ratio:.2f}x going from {lo}x to {hi}x "
+                f"the layer period (budget {tol}x) — the scan plan is not "
+                "keeping trace size O(period)",
+            ))
+    return issues

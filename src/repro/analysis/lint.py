@@ -1,0 +1,445 @@
+"""fedlint — AST rules that pin the repo's serving contracts.
+
+Each rule guards one of the cross-cutting invariants PRs 2-5 established
+(see ROADMAP "Recent" and the :mod:`repro.kernels.core` docstring — THE
+vector/sentinel contract reference).  The linter is **stdlib-only**: no JAX
+import, so CI can run it on a bare Python matrix entry.
+
+Rules
+-----
+FED001  no mask / ``NEG_INF`` / visibility re-derivation outside
+        ``kernels/core.py`` (pins PR 4's four-implementations-one-core
+        collapse).
+FED002  no bare ``-1`` / ``-2`` segment-sentinel literals outside
+        ``kernels/core.py`` — use ``PAD_SEGMENT`` / ``KERNEL_PAD_SEGMENT``.
+FED003  no ``jnp.`` array construction / ``jax.random`` calls at module
+        import time (import-time tracing breaks backend selection and
+        makes import order load-bearing).
+FED004  no host-sync patterns (``np.random``, ``.item()``, ``float()``/``int()`` on a jnp result) in hot modules
+        (kernels/models/serving/distributed/core — the jitted serving
+        path; ``np.random`` also breaks run-to-run determinism keyed on
+        ``jax.random`` keys).
+FED005  no Python branch on a traced ``jnp`` expression (heuristic):
+        ``if jnp.any(...)`` forces a host sync outside jit and a
+        ConcretizationTypeError inside it — use ``jnp.where``/``lax.cond``.
+
+Escape hatch
+------------
+Append ``# fedlint: disable=FED002`` (comma-separate several ids, or give
+no ids to disable every rule) to the offending line.  The escape hatch is
+for *documented* exceptions — pair it with a comment saying why the
+invariant does not apply; reviews treat an unexplained disable as a
+violation.  A disable comment on a line by itself within the first ten
+lines of a file disables the rule(s) for the whole file.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from dataclasses import dataclass
+from typing import Iterable, Optional
+
+#: Packages whose modules sit on the jitted serving path (FED004 scope).
+HOT_PACKAGES = ("kernels", "models", "serving", "distributed", "core")
+
+#: The one module allowed to derive masks and bind sentinel literals.
+CORE_MODULE = "kernels/core.py"
+
+#: Names whose (re)binding to a literal means a private mask-fill constant.
+_NEG_INF_NAMES = {"NEG_INF", "NEG_INFINITY", "MASK_VALUE", "MASK_FILL", "MASKED"}
+
+#: Function names reserved for the shared attention core.
+_CORE_FN_NAMES = {"visibility", "visibility_mask", "masked_attention"}
+
+#: jnp attributes that are static/metadata inspection, not array work.
+_STATIC_JNP = {
+    "iinfo", "finfo", "dtype", "ndim", "shape", "size", "result_type",
+    "issubdtype", "isscalar", "promote_types",
+}
+
+_DISABLE_RE = re.compile(r"#\s*fedlint:\s*disable(?:=([A-Z0-9, ]+))?")
+
+
+@dataclass(frozen=True)
+class Violation:
+    """One rule hit: ``file:line`` plus the rule id and a message."""
+
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+def rules() -> dict[str, str]:
+    """rule id → one-line summary (parsed from the module docstring)."""
+    out: dict[str, str] = {}
+    cur = None
+    for ln in (__doc__ or "").splitlines():
+        m = re.match(r"(FED\d{3})\s+(.*)", ln)
+        if m:
+            cur = m.group(1)
+            out[cur] = m.group(2).strip()
+        elif cur and ln.startswith(" " * 8) and not ln.strip().startswith("FED"):
+            out[cur] += " " + ln.strip()
+        else:
+            cur = None
+    return out
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _int_literal(node: ast.AST) -> Optional[int]:
+    """The value of an integer literal (incl. unary minus), else None."""
+    if (
+        isinstance(node, ast.UnaryOp)
+        and isinstance(node.op, ast.USub)
+        and isinstance(node.operand, ast.Constant)
+        and type(node.operand.value) is int
+    ):
+        return -node.operand.value
+    if isinstance(node, ast.Constant) and type(node.value) is int:
+        return node.value
+    return None
+
+
+def _float_literal(node: ast.AST) -> Optional[float]:
+    if (
+        isinstance(node, ast.UnaryOp)
+        and isinstance(node.op, ast.USub)
+        and isinstance(node.operand, ast.Constant)
+        and isinstance(node.operand.value, (int, float))
+    ):
+        return -float(node.operand.value)
+    if isinstance(node, ast.Constant) and isinstance(node.value, (int, float)):
+        return float(node.value)
+    return None
+
+
+def _attr_chain(node: ast.AST) -> list[str]:
+    """``jnp.full`` → ["jnp", "full"]; ``a.b.c`` → ["a","b","c"]."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    else:
+        return []
+    return parts[::-1]
+
+
+def _mentions_segment(node: ast.AST) -> bool:
+    """Does any identifier in the expression look segment-valued?"""
+    for sub in ast.walk(node):
+        name = None
+        if isinstance(sub, ast.Name):
+            name = sub.id
+        elif isinstance(sub, ast.Attribute):
+            name = sub.attr
+        if name is not None and "seg" in name.lower():
+            return True
+    return False
+
+
+def _is_jnp_chain(chain: list[str]) -> bool:
+    if not chain:
+        return False
+    if chain[0] in ("jnp",):
+        return True
+    return len(chain) >= 2 and chain[0] == "jax" and chain[1] in ("numpy", "random")
+
+
+# ---------------------------------------------------------------------------
+# the checker
+# ---------------------------------------------------------------------------
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(self, rel: str, source: str, hot: bool):
+        self.rel = rel
+        self.hot = hot
+        self.is_core = rel.endswith(CORE_MODULE)
+        self.lines = source.splitlines()
+        self.violations: list[Violation] = []
+        self.file_disabled: set[str] = set()  # rule ids; "*" = all
+        for ln in self.lines[:10]:
+            stripped = ln.strip()
+            if stripped.startswith("#"):
+                m = _DISABLE_RE.search(stripped)
+                if m:
+                    ids = m.group(1)
+                    if ids is None:
+                        self.file_disabled.add("*")
+                    else:
+                        self.file_disabled.update(
+                            i.strip() for i in ids.split(",") if i.strip()
+                        )
+        self._depth = 0  # function-nesting depth (0 = module import time)
+
+    # -- reporting ----------------------------------------------------------
+
+    def _disabled(self, rule: str, line: int) -> bool:
+        if "*" in self.file_disabled or rule in self.file_disabled:
+            return True
+        if 1 <= line <= len(self.lines):
+            m = _DISABLE_RE.search(self.lines[line - 1])
+            if m:
+                ids = m.group(1)
+                if ids is None:
+                    return True
+                if rule in {i.strip() for i in ids.split(",")}:
+                    return True
+        return False
+
+    def report(self, rule: str, node: ast.AST, msg: str) -> None:
+        line = getattr(node, "lineno", 1)
+        if not self._disabled(rule, line):
+            self.violations.append(Violation(self.rel, line, rule, msg))
+
+    # -- scope tracking -----------------------------------------------------
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._check_fn_name(node)
+        self._depth += 1
+        self.generic_visit(node)
+        self._depth -= 1
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        self._depth += 1
+        self.generic_visit(node)
+        self._depth -= 1
+
+    # -- FED001: mask re-derivation ----------------------------------------
+
+    def _check_fn_name(self, node: ast.FunctionDef) -> None:
+        if self.is_core:
+            return
+        if node.name in _CORE_FN_NAMES:
+            self.report(
+                "FED001", node,
+                f"function {node.name!r} re-derives the attention mask/"
+                "softmax contract — compose repro.kernels.core instead",
+            )
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if not self.is_core:
+            for tgt in node.targets:
+                names = [tgt.id] if isinstance(tgt, ast.Name) else []
+                for n in names:
+                    if n in _NEG_INF_NAMES and not isinstance(
+                        node.value, (ast.Attribute, ast.Name)
+                    ):
+                        self.report(
+                            "FED001", node,
+                            f"{n} bound to a private literal — alias "
+                            "repro.kernels.core.NEG_INF instead",
+                        )
+            self._check_sentinel_assign(node)
+        self.generic_visit(node)
+
+    # -- FED002: bare sentinels --------------------------------------------
+
+    def _check_sentinel_assign(self, node: ast.Assign) -> None:
+        val = _int_literal(node.value)
+        if val not in (-1, -2):
+            return
+        for tgt in node.targets:
+            if _mentions_segment(tgt):
+                self.report(
+                    "FED002", node,
+                    f"bare segment sentinel {val} — use repro.kernels.core."
+                    + ("PAD_SEGMENT" if val == -1 else "KERNEL_PAD_SEGMENT"),
+                )
+                return
+
+    def visit_Compare(self, node: ast.Compare) -> None:
+        if not self.is_core:
+            operands = [node.left, *node.comparators]
+            lits = [_int_literal(o) for o in operands]
+            if any(v in (-1, -2) for v in lits) and any(
+                _mentions_segment(o)
+                for o, v in zip(operands, lits)
+                if v is None
+            ):
+                val = next(v for v in lits if v in (-1, -2))
+                self.report(
+                    "FED002", node,
+                    f"segment compared against bare sentinel {val} — use "
+                    "repro.kernels.core."
+                    + ("PAD_SEGMENT" if val == -1 else "KERNEL_PAD_SEGMENT"),
+                )
+        self.generic_visit(node)
+
+    # -- calls: FED001/002/003/004/005 -------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func)
+
+        # FED002: sentinel literals as pad/fill values
+        if not self.is_core:
+            fills: list[ast.AST] = [
+                kw.value for kw in node.keywords if kw.arg == "constant_values"
+            ]
+            if chain and chain[-1] in ("full", "full_like") and len(node.args) >= 2:
+                fills.append(node.args[1])
+            for f in fills:
+                val = _int_literal(f)
+                if val in (-1, -2):
+                    self.report(
+                        "FED002", node,
+                        f"bare segment sentinel {val} as a fill value — use "
+                        "repro.kernels.core."
+                        + ("PAD_SEGMENT" if val == -1 else "KERNEL_PAD_SEGMENT"),
+                    )
+
+        # FED001: private NEG_INF-style mask fills
+        if not self.is_core and chain and chain[-1] in ("where", "asarray", "full", "full_like", "select"):
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                v = _float_literal(arg)
+                if v is not None and v <= -1e8:
+                    self.report(
+                        "FED001", node,
+                        f"literal mask fill {v:g} — use "
+                        "repro.kernels.core.NEG_INF",
+                    )
+
+        # FED003: import-time jnp / jax.random work
+        if self._depth == 0 and _is_jnp_chain(chain):
+            if not (len(chain) == 2 and chain[-1] in _STATIC_JNP):
+                self.report(
+                    "FED003", node,
+                    f"{'.'.join(chain)}(...) at module import time — arrays "
+                    "must be built inside functions (import must not touch "
+                    "the backend)",
+                )
+
+        # FED004: host-sync patterns in hot modules
+        if self.hot:
+            if chain[:2] == ["np", "random"] or chain[:2] == ["numpy", "random"]:
+                self.report(
+                    "FED004", node,
+                    "np.random in a hot module — use jax.random keyed RNG",
+                )
+            if (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "item"
+                and not node.args
+            ):
+                self.report(
+                    "FED004", node,
+                    ".item() in a hot module — forces a device sync per "
+                    "element; convert whole arrays once at the boundary",
+                )
+            # float(jnp...(...)) / int(jnp...(...)) — concretizes the array
+            # (a per-call device sync, a ConcretizationTypeError under jit).
+            # float(jnp.finfo(...)...) etc. stay legal: static inspection.
+            if chain in (["float"], ["int"]) and node.args:
+                a = node.args[0]
+                if isinstance(a, ast.Call):
+                    inner = _attr_chain(a.func)
+                    if _is_jnp_chain(inner) and inner[-1] not in _STATIC_JNP:
+                        self.report(
+                            "FED004", node,
+                            f"{chain[0]}({'.'.join(inner)}(...)) in a hot "
+                            "module — concretizes the array (host sync per "
+                            "call); keep it on device or convert at the "
+                            "boundary",
+                        )
+
+        self.generic_visit(node)
+
+    # -- FED005: python branch on a traced expression ----------------------
+
+    def _traced_call_in(self, expr: ast.AST) -> Optional[str]:
+        for sub in ast.walk(expr):
+            if isinstance(sub, ast.Call):
+                chain = _attr_chain(sub.func)
+                if _is_jnp_chain(chain) and chain[-1] not in _STATIC_JNP:
+                    return ".".join(chain)
+                if chain == ["bool"] and sub.args:
+                    inner = _attr_chain(
+                        sub.args[0].func
+                    ) if isinstance(sub.args[0], ast.Call) else _attr_chain(sub.args[0])
+                    if _is_jnp_chain(inner):
+                        return "bool(" + ".".join(inner) + ")"
+        return None
+
+    def _check_branch(self, node: ast.AST, test: ast.AST, kind: str) -> None:
+        hit = self._traced_call_in(test)
+        if hit:
+            self.report(
+                "FED005", node,
+                f"Python {kind} on {hit}(...) — concretizes a tracer under "
+                "jit; use jnp.where / lax.cond / lax.select",
+            )
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_branch(node, node.test, "if")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_branch(node, node.test, "while")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp) -> None:
+        self._check_branch(node, node.test, "conditional expression")
+        self.generic_visit(node)
+
+    def visit_Assert(self, node: ast.Assert) -> None:
+        self._check_branch(node, node.test, "assert")
+        self.generic_visit(node)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def _is_hot(rel: str) -> bool:
+    parts = pathlib.PurePosixPath(rel).parts
+    if "repro" in parts:
+        parts = parts[parts.index("repro") + 1:]
+    return bool(parts) and parts[0] in HOT_PACKAGES
+
+
+def lint_source(
+    source: str, filename: str = "<string>", *, hot: Optional[bool] = None
+) -> list[Violation]:
+    """Lint one module's source text.  ``hot`` overrides the path-based
+    hot-module detection (tests lint synthetic fixtures this way)."""
+    rel = filename.replace("\\", "/")
+    if hot is None:
+        hot = _is_hot(rel)
+    try:
+        tree = ast.parse(source, filename=filename)
+    except SyntaxError as e:  # a file that doesn't parse fails loudly
+        return [Violation(rel, e.lineno or 1, "FED000", f"syntax error: {e.msg}")]
+    chk = _Checker(rel, source, hot)
+    chk.visit(tree)
+    return sorted(chk.violations, key=lambda v: (v.path, v.line, v.rule))
+
+
+def lint_file(path, root=None) -> list[Violation]:
+    p = pathlib.Path(path)
+    rel = str(p.relative_to(root)) if root else str(p)
+    return lint_source(p.read_text(), rel)
+
+
+def lint_paths(paths: Iterable, root=None) -> list[Violation]:
+    """Lint every ``.py`` file under the given files/directories."""
+    out: list[Violation] = []
+    for path in paths:
+        p = pathlib.Path(path)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            out.extend(lint_file(f, root=root))
+    return out

@@ -1,0 +1,125 @@
+"""Executable budgets: the zero-recompile churn guarantee as ONE contract.
+
+PRs 2-5 pinned "steady-state serving never recompiles" through scattered
+``compile_counts`` assertions (engine executable-cache sizes re-checked in
+test after test).  This module gives every jitted serving entry point a
+:class:`TraceGuard` — a named counter of *distinct executable keys* with a
+declared budget — so the contract lives next to the code that builds the
+executables, and tests enforce it with one fixture instead of re-deriving
+the expected counts.
+
+Semantics
+---------
+* ``guard.charge(key)`` records that an executable keyed ``key`` was (or is
+  about to be) built.  Charging an already-seen key is free — caches hit.
+* Outside an :func:`enforce` scope charges only record (production serving
+  never raises mid-request).
+* Inside ``with enforce():`` any charge that pushes a guard past its
+  *effective budget* — an override passed to ``enforce``, else the budget
+  declared at construction — raises :class:`BudgetExceeded` at the charge
+  site, i.e. pytest fails pointing at the exact build that broke the
+  zero-recompile guarantee.  The ``trace_budget`` fixture in
+  ``tests/conftest.py`` wraps a test in this scope.
+
+Declared budgets (the serving contract):
+
+* ``scheduler.decode_step`` = 1 — ONE resident pooled decode executable per
+  scheduler, regardless of admission/retirement churn (PR 3's tentpole).
+* ``scheduler.slot_write`` = 1, ``scheduler.admit_finish`` = 1 — one
+  scatter / one fused first-token sampler per pool.
+* ``engine.prefill`` / ``engine.decode`` — unbounded by default (the count
+  is workload-dependent: one executable per shape bucket); tests pass
+  explicit overrides for the trace they drive.
+
+No JAX import — budgets are pure bookkeeping.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Hashable, Iterator, Optional
+
+__all__ = ["BudgetExceeded", "TraceGuard", "enforce", "enforcing"]
+
+
+class BudgetExceeded(RuntimeError):
+    """A jitted entry point built more distinct executables than declared."""
+
+
+_STATE = threading.local()
+
+
+def _scopes() -> list[dict]:
+    if not hasattr(_STATE, "scopes"):
+        _STATE.scopes = []
+    return _STATE.scopes
+
+
+def enforcing() -> bool:
+    """Is an :func:`enforce` scope active on this thread?"""
+    return bool(_scopes())
+
+
+@contextmanager
+def enforce(overrides: Optional[dict] = None) -> Iterator[dict]:
+    """Enforcement scope: every :meth:`TraceGuard.charge` past budget raises.
+
+    ``overrides`` maps guard *names* to budgets, tightening (or loosening)
+    the declared ones for this scope — e.g. ``{"engine.prefill": 2}`` pins
+    "this trace may compile at most two prefill buckets".  Scopes nest; the
+    innermost override for a name wins.
+    """
+    scope = dict(overrides or {})
+    _scopes().append(scope)
+    try:
+        yield scope
+    finally:
+        _scopes().pop()
+
+
+class TraceGuard:
+    """Named executable-count budget for one jitted entry point.
+
+    One guard per entry point per engine/scheduler *instance* — two pools
+    each get their own ``scheduler.decode_step`` count (budgets bound
+    per-pool executables, not process-global jit caches).
+    """
+
+    def __init__(self, name: str, budget: Optional[int] = None):
+        self.name = name
+        self.budget = budget
+        self._keys: set = set()
+
+    @property
+    def count(self) -> int:
+        """Distinct executable keys charged so far."""
+        return len(self._keys)
+
+    def keys(self) -> frozenset:
+        return frozenset(self._keys)
+
+    def effective_budget(self) -> Optional[int]:
+        for scope in reversed(_scopes()):
+            if self.name in scope:
+                return scope[self.name]
+        return self.budget
+
+    def charge(self, key: Hashable = None) -> None:
+        """Record (and, under :func:`enforce`, check) one executable build."""
+        if key in self._keys:
+            return
+        self._keys.add(key)
+        if not enforcing():
+            return
+        budget = self.effective_budget()
+        if budget is not None and len(self._keys) > budget:
+            raise BudgetExceeded(
+                f"{self.name}: {len(self._keys)} distinct executables "
+                f"(budget {budget}); new key {key!r}, prior "
+                f"{sorted(map(repr, self._keys - {key}))} — a traced "
+                "argument leaked into the static executable key (the "
+                "zero-recompile churn contract, repro.analysis.trace_guard)"
+            )
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"TraceGuard({self.name!r}, count={self.count}, budget={self.budget})"

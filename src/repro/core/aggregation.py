@@ -63,7 +63,11 @@ def contribution_mask(
     local_pos = _local_positions(seg, partition.n_participants)
     sizes = partition.sizes()  # (N,)
     my_size = sizes[seg]  # (L,)
-    keep_n = jnp.maximum(1, jnp.ceil(my_size * ratio).astype(jnp.int32))
+    # explicit f32 cast: int32 * python-float is an error under the strict
+    # dtype-promotion regime tier-1 runs in (see tests/conftest.py)
+    keep_n = jnp.maximum(
+        1, jnp.ceil(my_size.astype(jnp.float32) * ratio).astype(jnp.int32)
+    )
 
     if selection == "strided":
         stride = jnp.maximum(1, (my_size + keep_n - 1) // keep_n)

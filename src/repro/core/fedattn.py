@@ -45,7 +45,10 @@ from repro.kernels.core import visibility as _core_visibility
 from repro.types import FedAttnConfig
 
 
-def visibility(
+# fedlint's FED001 reserves this name for the shared attention core; this
+# is the documented exception — a thin *delegating* wrapper (protocol
+# vocabulary only, every mask rule lives in kernels/core.py).
+def visibility(  # fedlint: disable=FED001
     q_pos: jnp.ndarray,
     kv_pos: jnp.ndarray,
     q_seg: jnp.ndarray,

@@ -57,9 +57,11 @@ class Partition:
 
     @staticmethod
     def from_segment_ids(segment_ids: np.ndarray | jnp.ndarray) -> "Partition":
-        arr = jnp.asarray(segment_ids, dtype=jnp.int32)
-        n = int(jnp.max(arr)) + 1 if arr.size else 1
-        return Partition(arr, n)
+        # host-side constructor: n_participants must be a static int, so
+        # reduce on the host copy (one transfer, no device reduce + sync)
+        host = np.asarray(segment_ids, dtype=np.int32)
+        n = int(host.max()) + 1 if host.size else 1
+        return Partition(jnp.asarray(host), n)
 
     # Paper §VII-A2 segmentation settings ------------------------------------
 

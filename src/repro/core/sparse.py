@@ -47,7 +47,12 @@ def sparse_local_keep_mask(
     smaller = (scores[None, :] < scores[:, None]) & same
     rank = jnp.sum(smaller, axis=1)  # rank of each token inside its segment
     sizes = partition.sizes()[seg]
-    keep_n = jnp.maximum(1, jnp.ceil(sizes * sparsity_ratio).astype(jnp.int32))
+    # explicit f32 cast: int32 * python-float is an error under the strict
+    # dtype-promotion regime tier-1 runs in (see tests/conftest.py)
+    keep_n = jnp.maximum(
+        1,
+        jnp.ceil(sizes.astype(jnp.float32) * sparsity_ratio).astype(jnp.int32),
+    )
     return rank < keep_n
 
 

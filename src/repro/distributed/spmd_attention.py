@@ -43,7 +43,6 @@ from repro.compat import shard_map
 from repro.distributed import runtime
 from repro.kernels import core as K
 
-INT_MAX = jnp.iinfo(jnp.int32).max
 NEG_INF = K.NEG_INF
 
 
@@ -106,7 +105,7 @@ def prefill_attention(
         # not available on JAX 0.4.x, and arange needs a static extent)
         n_shards = kg.shape[1] // n_keep
         owner = jnp.repeat(jnp.arange(n_shards), n_keep)
-        pg = jnp.where(owner == me, INT_MAX, pg)
+        pg = jnp.where(owner == me, K.PAD_POS, pg)
         k_all = jnp.concatenate([k, kg], axis=1)
         v_all = jnp.concatenate([v, vg], axis=1)
         p_all = jnp.concatenate([pos, pg], axis=0)

@@ -61,6 +61,12 @@ segment plus every generated token — are visible. It is equivalent to
 ``local_only`` segment masking whenever the publisher owns the trailing
 contiguous segment (the repo-wide convention); pass segments instead when
 per-row partitions make that assumption unsafe.
+
+This contract is *mechanically enforced*: :mod:`repro.analysis` lints the
+tree against private mask/sentinel copies (rules FED001/FED002) and
+jaxpr-audits every jitted serving entry point — see README.md,
+"Static analysis & enforced invariants", for the rule table and the
+escape-hatch policy.
 """
 from __future__ import annotations
 
@@ -70,10 +76,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+# THE repo-wide sentinel scheme. Bare ``-1``/``-2`` segment literals and
+# private NEG_INF copies outside this module are rejected by the invariant
+# analyzer (``python -m repro.analysis`` — rules FED001/FED002); always
+# name these constants.
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
-POS_PAD = jnp.iinfo(jnp.int32).max  # padded KV slot position sentinel
-SEG_PAD_BUCKET = -1  # shape-bucketing / inactive-pool-slot segment sentinel
-SEG_PAD_KERNEL = -2  # kernel-internal chunk/block padding sentinel
+PAD_POS = jnp.iinfo(jnp.int32).max  # padded KV slot position sentinel
+PAD_SEGMENT = -1  # shape-bucketing / inactive-pool-slot segment sentinel
+KERNEL_PAD_SEGMENT = -2  # kernel-internal chunk/block padding sentinel
 
 
 def _as2(a: jnp.ndarray) -> jnp.ndarray:
@@ -133,7 +143,7 @@ def visibility(
         mask = qp[:, :, None] >= kp[:, None, :]
     else:
         mask = jnp.broadcast_to(
-            kp[:, None, :] < POS_PAD,
+            kp[:, None, :] < PAD_POS,
             (max(qp.shape[0], kp.shape[0]), qp.shape[1], kp.shape[1]),
         )
     if window is not None:
@@ -198,8 +208,8 @@ class AttnSpec:
         )
         return replace(
             self,
-            kv_pos=last(self.kv_pos, POS_PAD),
-            kv_seg=None if self.kv_seg is None else last(self.kv_seg, SEG_PAD_KERNEL),
+            kv_pos=last(self.kv_pos, PAD_POS),
+            kv_seg=None if self.kv_seg is None else last(self.kv_seg, KERNEL_PAD_SEGMENT),
             contributed=(
                 None if self.contributed is None else last(self.contributed, False)
             ),

@@ -183,17 +183,19 @@ def flash_attention(
         q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
         q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)))
         if q_seg is not None:
-            q_seg = jnp.pad(q_seg, ((0, 0), (0, pad_q)), constant_values=-1)
+            q_seg = jnp.pad(
+                q_seg, ((0, 0), (0, pad_q)), constant_values=_core.PAD_SEGMENT
+            )
     if pad_k:
         k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
         kv_pos = jnp.pad(
-            kv_pos, ((0, 0), (0, pad_k)), constant_values=_core.POS_PAD
+            kv_pos, ((0, 0), (0, pad_k)), constant_values=_core.PAD_POS
         )
         if kv_seg is not None:
             kv_seg = jnp.pad(
                 kv_seg, ((0, 0), (0, pad_k)),
-                constant_values=_core.SEG_PAD_KERNEL,
+                constant_values=_core.KERNEL_PAD_SEGMENT,
             )
         if contributed is not None:
             contributed = jnp.pad(

@@ -10,6 +10,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.core import NEG_INF, PAD_SEGMENT
 from repro.types import ModelConfig
 
 Params = dict
@@ -155,7 +156,7 @@ def apply_lm_head(
         # mask padded columns (elementwise — keeps the vocab dim sharded);
         # outside SPMD slice back so callers see exactly vocab_size columns
         col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
-        logits = jnp.where(col < V, logits, jnp.asarray(-1e30, logits.dtype))
+        logits = jnp.where(col < V, logits, jnp.asarray(NEG_INF, logits.dtype))
         from repro.distributed import runtime
 
         if not runtime.active():
@@ -191,7 +192,7 @@ def shift_right(
         shifted = jnp.concatenate([carry.astype(x.dtype), x[:, :-1]], axis=1)
     if segment_ids is not None:
         seg2 = segment_ids if segment_ids.ndim == 2 else segment_ids[None]
-        prev = jnp.pad(seg2, ((0, 0), (1, 0)), constant_values=-1)[:, :-1]
+        prev = jnp.pad(seg2, ((0, 0), (1, 0)), constant_values=PAD_SEGMENT)[:, :-1]
         same = (prev == seg2)[..., None]  # (B-or-1, L, 1)
         shifted = jnp.where(same, shifted, jnp.zeros_like(shifted))
     return shifted
@@ -201,7 +202,7 @@ def segment_start_mask(segment_ids: jnp.ndarray) -> jnp.ndarray:
     """bool mask, same shape as the input — True at the first token of each
     participant segment. ``segment_ids``: (L,) shared or (B, L) per row."""
     pad = ((0, 0),) * (segment_ids.ndim - 1) + ((1, 0),)
-    prev = jnp.pad(segment_ids, pad, constant_values=-1)[..., :-1]
+    prev = jnp.pad(segment_ids, pad, constant_values=PAD_SEGMENT)[..., :-1]
     return prev != segment_ids
 
 

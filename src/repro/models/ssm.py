@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.core.fedattn import FedAttnContext
 from repro.kernels import ops
+from repro.kernels.core import PAD_SEGMENT
 from repro.models import layers as L
 from repro.types import ModelConfig
 
@@ -250,7 +251,9 @@ def _causal_conv(
         xj = jax.lax.dynamic_slice_in_dim(xext, j, S, axis=1)
         if segments is not None and shift > 0:
             seg2 = segments if segments.ndim == 2 else segments[None]
-            src = jnp.pad(seg2, ((0, 0), (shift, 0)), constant_values=-1)[:, :-shift]
+            src = jnp.pad(
+                seg2, ((0, 0), (shift, 0)), constant_values=PAD_SEGMENT
+            )[:, :-shift]
             ok = (src == seg2)[..., None]  # (B-or-1, S, 1)
             xj = jnp.where(ok, xj, jnp.zeros_like(xj))
         y = y + xj * w[j]

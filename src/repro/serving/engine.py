@@ -70,13 +70,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.trace_guard import TraceGuard
 from repro.core.fedattn import FedAttnContext
 from repro.core.partition import Partition
 from repro.configs import schedule_from_config
+from repro.kernels.core import PAD_SEGMENT
 from repro.models import build_model
 from repro.models import layers as LY
 from repro.models import transformer as T
 from repro.types import FedAttnConfig, ModelConfig
+
+
+def _donation_for_backend(argnums, backend: Optional[str] = None) -> tuple:
+    """The repo's ONE donation policy (audited by analysis/jaxpr_audit).
+
+    ``argnums`` name the KV cache/pool operands of a jitted serving entry
+    point: on accelerator backends they are donated so the compiled step
+    updates them in place (decode would otherwise double the pool's memory
+    every tick); on CPU XLA ignores donation and warns, so the declared set
+    is empty there.  engine.py and scheduler.py route every ``jax.jit``
+    through this helper — the jaxpr audit asserts each entry point's
+    declared donation matches this policy, so a silently dropped
+    ``donate_argnums`` (the bug this replaced: two inline backend checks
+    that new entry points forgot to copy) is caught statically."""
+    be = backend if backend is not None else jax.default_backend()
+    return tuple(argnums) if be != "cpu" else ()
 
 
 @dataclass
@@ -178,9 +196,15 @@ class FedAttnEngine:
         # run after the kept tokens and are discarded)
         self._bucket_L_ok = self.fed.causal
         self._scan_params = None  # lazily stacked params for scan mode
-        # compiled drivers, keyed by bucketed shapes + sampling mode only
+        # compiled drivers, keyed by bucketed shapes + sampling mode only;
+        # the guards carry the executable-budget contract (one charge per
+        # distinct key — see repro.analysis.trace_guard)
         self._prefill_fns: dict = {}
         self._decode_fns: dict = {}
+        self._trace_guards = {
+            "prefill": TraceGuard("engine.prefill"),
+            "decode": TraceGuard("engine.decode"),
+        }
 
     # -- protocol setup ---------------------------------------------------------
 
@@ -234,10 +258,11 @@ class FedAttnEngine:
 
     @property
     def compile_counts(self) -> dict:
-        """Number of cached compiled drivers — the recompile metric."""
+        """Number of cached compiled drivers — the recompile metric, read
+        from the executable-budget guards (repro.analysis.trace_guard)."""
         return {
-            "prefill": len(self._prefill_fns),
-            "decode": len(self._decode_fns),
+            "prefill": self._trace_guards["prefill"].count,
+            "decode": self._trace_guards["decode"].count,
         }
 
     def decode_trace_size(self, B: int, L: int, n_new: int, *, sampled: bool = False) -> int:
@@ -438,7 +463,7 @@ class FedAttnEngine:
         if pad:
             tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
         q_pos = jnp.arange(Lp, dtype=jnp.int32)
-        q_seg = jnp.pad(ctx.segments, (0, pad), constant_values=-1)
+        q_seg = jnp.pad(ctx.segments, (0, pad), constant_values=PAD_SEGMENT)
         dctx0 = ctx.for_decode_step(capacity, 0)
         contrib = None
         if ctx.contributed is not None:
@@ -514,8 +539,8 @@ class FedAttnEngine:
             logits = LY.apply_lm_head(params["head"], params["embed"], x, cfg)
             return logits[:, 0], cache
 
-        donate = (1,) if jax.default_backend() != "cpu" else ()
-        fn = jax.jit(run, donate_argnums=donate)
+        self._trace_guards["prefill"].charge(key)
+        fn = jax.jit(run, donate_argnums=_donation_for_backend((1,)))
         self._prefill_fns[key] = fn
         return fn
 
@@ -573,10 +598,9 @@ class FedAttnEngine:
             )
             return toks.T, lps.T, cache  # (B, n_steps-1) each
 
-        # Donate the cache so the compiled step updates it in place
-        # (donation is a no-op warning on CPU — skip it there).
-        donate = (1,) if jax.default_backend() != "cpu" else ()
-        fn = jax.jit(run, donate_argnums=donate)
+        # Donate the cache so the compiled step updates it in place.
+        self._trace_guards["decode"].charge(key)
+        fn = jax.jit(run, donate_argnums=_donation_for_backend((1,)))
         self._decode_fns[key] = fn
         return fn
 

@@ -72,8 +72,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.trace_guard import TraceGuard
 from repro.core.partition import Partition
-from repro.serving.engine import GenerationResult, _next_pow2, _token_logprob
+from repro.kernels.core import PAD_SEGMENT
+from repro.serving.engine import (
+    GenerationResult, _donation_for_backend, _next_pow2, _token_logprob,
+)
 
 
 @dataclass
@@ -178,8 +182,9 @@ class ContinuousBatchingScheduler:
         self._tok = np.zeros(S, np.int32)  # last emitted token
         self._write_pos = np.zeros(S, np.int32)  # its KV slot = its position
         self._fold = np.zeros(S, np.int32)  # rng fold step of the NEXT token
-        self._qseg = np.full(S, -1, np.int32)
-        self._kvseg = np.full((S, C), -1, np.int32)  # -1 ⇒ page invisible
+        self._qseg = np.full(S, PAD_SEGMENT, np.int32)
+        # PAD_SEGMENT ⇒ page invisible (inactive slot)
+        self._kvseg = np.full((S, C), PAD_SEGMENT, np.int32)
         self._temps = np.full(S, 1.0, np.float32)
         self._sampled = np.zeros(S, bool)
         kd = jax.random.key_data(jax.random.key(0))
@@ -189,6 +194,14 @@ class ContinuousBatchingScheduler:
         self._step_fns: dict = {}
         self._write_fn = None
         self._admit_fn = None
+        # executable budgets (repro.analysis.trace_guard): ONE resident
+        # decode step / slot scatter / admit sampler per pool — THE
+        # zero-recompile churn contract, enforceable via trace_guard.enforce
+        self._trace_guards = {
+            "decode_step": TraceGuard("scheduler.decode_step", budget=1),
+            "slot_write": TraceGuard("scheduler.slot_write", budget=1),
+            "admit_finish": TraceGuard("scheduler.admit_finish", budget=1),
+        }
         # admission-rate state, rebuilt only when the slot set changes (the
         # per-tick arrays tok/write_pos/fold are tiny; these are the wide
         # ones + the ones that cost dispatches to rebuild)
@@ -231,8 +244,8 @@ class ContinuousBatchingScheduler:
         stay at 1 across any trace (per (pool shape, steps_per_admit))."""
         return {
             "prefill": self.engine.compile_counts["prefill"],
-            "decode_step": len(self._step_fns),
-            "slot_write": int(self._write_fn is not None),
+            "decode_step": self._trace_guards["decode_step"].count,
+            "slot_write": self._trace_guards["slot_write"].count,
         }
 
     @property
@@ -339,7 +352,7 @@ class ContinuousBatchingScheduler:
 
         tokens = np.zeros((B, Lp), np.int32)
         real_len = np.ones(B, np.int32)
-        q_seg = np.full((B, Lp), -1, np.int32)
+        q_seg = np.full((B, Lp), PAD_SEGMENT, np.int32)
         kv_seg = np.zeros((B, C), np.int32)
         temps = np.ones(B, np.float32)
         sampled = np.zeros(B, bool)
@@ -435,8 +448,8 @@ class ContinuousBatchingScheduler:
         self._slots[slot] = None
         # hide the freed pages from every query until the next occupant's
         # prefill rewrites the row
-        self._kvseg[slot] = -1
-        self._qseg[slot] = -1
+        self._kvseg[slot] = PAD_SEGMENT
+        self._qseg[slot] = PAD_SEGMENT
         self._sampled[slot] = False
         self._slot_args = None
 
@@ -460,6 +473,7 @@ class ContinuousBatchingScheduler:
             tok0 = jnp.where(sampled, cat, greedy)
             return tok0, _token_logprob(last, tok0)
 
+        self._trace_guards["admit_finish"].charge(())
         self._admit_fn = jax.jit(finish)
         return self._admit_fn
 
@@ -494,8 +508,8 @@ class ContinuousBatchingScheduler:
                 )
             return self._constrain_cache(out)
 
-        donate = (0,) if jax.default_backend() != "cpu" else ()
-        self._write_fn = jax.jit(write, donate_argnums=donate)
+        self._trace_guards["slot_write"].charge(())
+        self._write_fn = jax.jit(write, donate_argnums=_donation_for_backend((0,)))
         return self._write_fn
 
     def _step_fn(self, n_steps: int):
@@ -550,8 +564,8 @@ class ContinuousBatchingScheduler:
             )
             return toks, lps, self._constrain_cache(cache)  # (n_steps, S)
 
-        donate = (1,) if jax.default_backend() != "cpu" else ()
-        fn = jax.jit(run, donate_argnums=donate)
+        self._trace_guards["decode_step"].charge(key)
+        fn = jax.jit(run, donate_argnums=_donation_for_backend((1,)))
         self._step_fns[key] = fn
         return fn
 

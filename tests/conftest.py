@@ -20,10 +20,22 @@ except ModuleNotFoundError:
     _spec.loader.exec_module(_mod)
     sys.modules["hypothesis.strategies"] = _mod.strategies
 
+import os
+
 import jax
 import pytest
 
+from repro.analysis import trace_guard
 from repro.types import FedAttnConfig, LayerSpec, ModelConfig
+
+# Tier-1 runs under strict dtype promotion: any implicit mixed-strong-dtype
+# promotion in src/ (the classic source of silent f64/f32 upcasts on new
+# backends) is a hard error instead of a warning. Escape hatch for
+# debugging/bisection: REPRO_DTYPE_PROMOTION=standard.
+jax.config.update(
+    "jax_numpy_dtype_promotion",
+    os.environ.get("REPRO_DTYPE_PROMOTION", "strict"),
+)
 
 
 def tiny_config(**kw) -> ModelConfig:
@@ -69,6 +81,23 @@ def stack_config(kind: str, **kw) -> ModelConfig:
         n_layers=4,
         **kw,
     )
+
+
+@pytest.fixture
+def trace_budget():
+    """Enforce executable budgets (repro.analysis.trace_guard) for the test
+    body: any jitted serving entry point that builds more distinct
+    executables than declared raises BudgetExceeded at the build site.
+
+    Usage::
+
+        def test_churn(trace_budget):
+            with trace_budget():                      # declared budgets
+                ...
+            with trace_budget({"engine.prefill": 2}):  # per-test override
+                ...
+    """
+    return trace_guard.enforce
 
 
 @pytest.fixture
