@@ -14,9 +14,14 @@ Entry points audited (the compiled serving surface):
 
 * ``engine.prefill``          — bucketed single-request prefill
 * ``engine.prefill_per_row``  — coalesced-admission per-row prefill
+* ``engine.suffix_prefill``   — suffix-only prefill over gathered prefix
+                                pages (paged pools with a prefix cache)
 * ``engine.decode``           — the multi-token decode driver
-* ``scheduler.decode_step``   — THE resident pooled decode step
-* ``scheduler.slot_write``    — the admission slot-scatter
+* ``scheduler.decode_step``   — THE resident pooled decode step (traced
+                                with per-slot page tables when the pool
+                                is block-paged — the paged gather path)
+* ``scheduler.slot_write``    — the admission slot-scatter (page-table
+                                routed under the paged layout)
 * ``scheduler.admit_finish``  — the fused first-token sampler
 
 With an engine carrying a mesh, the scheduler entries trace under the
@@ -260,24 +265,35 @@ def trace_scheduler_entries(scheduler) -> list[EntryPoint]:
     (shard_map flash-decoding) step is what gets audited."""
     sched = scheduler
     eng = sched.engine
-    S, C = sched.max_slots, sched.capacity
+    C = sched._cap  # page-padded working capacity (== capacity when dense)
     params = eng._run_params()
     entries: list[EntryPoint] = []
 
+    paged = sched._paged
     with sched._spmd_scope():
         fn = sched._step_fn(sched.steps_per_admit)
-        traced = fn.trace(
+        step_args = [
             params, sched.cache, jnp.asarray(sched._tok),
             jnp.asarray(sched._write_pos), jnp.asarray(sched._fold),
             jnp.asarray(sched._qseg), jnp.asarray(sched._kvseg),
             jnp.asarray(sched._temps), jnp.asarray(sched._sampled),
             jnp.asarray(sched._key_data),
-        )
+        ]
+        if paged:
+            # the paged gather step: per-slot page tables are traced DATA
+            step_args.append(jnp.asarray(sched._pages_tbl))
+        traced = fn.trace(*step_args)
     entries.append(EntryPoint("scheduler.decode_step", traced, (1,)))
 
     one = eng.model.init_cache(1, C, plan=sched._plan)
     fn = sched._slot_write_fn()
-    traced = fn.trace(sched.cache, one, jnp.zeros((1,), jnp.int32))
+    if paged:
+        traced = fn.trace(
+            sched.cache, one, jnp.zeros((1,), jnp.int32),
+            jnp.full((1, sched._pp), sched.num_pages, jnp.int32),
+        )
+    else:
+        traced = fn.trace(sched.cache, one, jnp.zeros((1,), jnp.int32))
     entries.append(EntryPoint("scheduler.slot_write", traced, (0,)))
 
     fn = sched._admit_finish_fn()
@@ -287,6 +303,24 @@ def trace_scheduler_entries(scheduler) -> list[EntryPoint]:
         jnp.zeros((1,), bool),
     )
     entries.append(EntryPoint("scheduler.admit_finish", traced, ()))
+
+    if paged and all(s.kind == "attn" for s in eng.config.layer_specs()):
+        # suffix-only prefill (prefix-cache hits): cached prefix KV is
+        # gathered from the pool through source page tables; write
+        # frontiers are traced per-row, the pool is NOT donated (the
+        # caller keeps reading it)
+        Ls = min(C, eng._bucket_len(2))
+        fn = eng._suffix_prefill_fn(1, Ls, C, None)
+        traced = fn.trace(
+            params, sched.cache,
+            jnp.full((1, sched._pp), sched.num_pages, jnp.int32),
+            jnp.zeros((1, Ls), jnp.int32), jnp.ones((1,), jnp.int32),
+            jnp.zeros((1,), jnp.int32),
+            jnp.zeros((1, Ls), jnp.int32),
+            jnp.arange(C, dtype=jnp.int32),
+            jnp.zeros((1, C), jnp.int32), None,
+        )
+        entries.append(EntryPoint("engine.suffix_prefill", traced, ()))
     return entries
 
 

@@ -22,6 +22,12 @@ FED004  no host-sync patterns (``np.random``, ``.item()``, ``float()``/``int()``
 FED005  no Python branch on a traced ``jnp`` expression (heuristic):
         ``if jnp.any(...)`` forces a host sync outside jit and a
         ConcretizationTypeError inside it — use ``jnp.where``/``lax.cond``.
+FED006  no raw page-index arithmetic (``// page_size`` / ``% page_size``,
+        or dividing/modding by a page count) on the paged KV pool outside
+        ``serving/paging.py`` — use ``paging.page_split`` /
+        ``paging.pages_for`` / ``paging.linear_pos`` so the
+        page-coordinate convention (incl. the sentinel-entry contract)
+        has exactly one home.
 
 Escape hatch
 ------------
@@ -45,6 +51,9 @@ HOT_PACKAGES = ("kernels", "models", "serving", "distributed", "core")
 
 #: The one module allowed to derive masks and bind sentinel literals.
 CORE_MODULE = "kernels/core.py"
+
+#: The one module allowed raw page-coordinate arithmetic (FED006 scope).
+PAGING_MODULE = "serving/paging.py"
 
 #: Names whose (re)binding to a literal means a private mask-fill constant.
 _NEG_INF_NAMES = {"NEG_INF", "NEG_INFINITY", "MASK_VALUE", "MASK_FILL", "MASKED"}
@@ -148,6 +157,19 @@ def _mentions_segment(node: ast.AST) -> bool:
     return False
 
 
+def _mentions_page(node: ast.AST) -> bool:
+    """Does any identifier in the expression look page-valued (FED006)?"""
+    for sub in ast.walk(node):
+        name = None
+        if isinstance(sub, ast.Name):
+            name = sub.id
+        elif isinstance(sub, ast.Attribute):
+            name = sub.attr
+        if name is not None and "page" in name.lower():
+            return True
+    return False
+
+
 def _is_jnp_chain(chain: list[str]) -> bool:
     if not chain:
         return False
@@ -166,6 +188,7 @@ class _Checker(ast.NodeVisitor):
         self.rel = rel
         self.hot = hot
         self.is_core = rel.endswith(CORE_MODULE)
+        self.is_paging = rel.endswith(PAGING_MODULE)
         self.lines = source.splitlines()
         self.violations: list[Violation] = []
         self.file_disabled: set[str] = set()  # rule ids; "*" = all
@@ -355,6 +378,29 @@ class _Checker(ast.NodeVisitor):
                             "boundary",
                         )
 
+        self.generic_visit(node)
+
+    # -- FED006: raw page arithmetic outside serving/paging.py --------------
+
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        # dividing or modding BY a page-valued quantity converts linear
+        # KV positions to page coordinates by hand — that convention
+        # (incl. sentinel entries) lives in serving/paging.py only.
+        # Multiplication (linear_pos reconstruction at call sites) and
+        # page-count divisibility checks like ``num_pages % n_shards``
+        # (clean divisor) stay legal.
+        if (
+            not self.is_paging
+            and isinstance(node.op, (ast.FloorDiv, ast.Mod))
+            and _mentions_page(node.right)
+        ):
+            op = "//" if isinstance(node.op, ast.FloorDiv) else "%"
+            self.report(
+                "FED006", node,
+                f"raw `{op}` by a page quantity — use repro.serving.paging"
+                ".page_split / .pages_for / .linear_pos (the page-"
+                "coordinate convention has one home)",
+            )
         self.generic_visit(node)
 
     # -- FED005: python branch on a traced expression ----------------------

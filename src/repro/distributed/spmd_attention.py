@@ -327,6 +327,139 @@ def decode_attention(
     )(*args)
 
 
+def paged_decode_attention(
+    q: jnp.ndarray,  # (B, S, nq, dh) — replicated over cache axes
+    pk: jnp.ndarray,  # (num_pages, page_size, nkv, dh) — PAGES sharded
+    pv: jnp.ndarray,
+    pages: jnp.ndarray,  # (B, P') int32 page tables — replicated
+    *,
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,  # (P'*ps,) or (B, P'*ps) linear positions, replicated
+    sync: bool,
+    q_seg: Optional[jnp.ndarray] = None,
+    kv_seg: Optional[jnp.ndarray] = None,
+    publisher_lo: int = 0,
+    causal: bool = True,
+    window: Optional[int] = None,
+    soft_cap: Optional[float] = None,
+    sm_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Flash-decoding over a page-sharded physical pool.
+
+    The pool shards over *pages* (each shard owns a contiguous run of
+    physical pages); page tables and position/segment vectors replicate.
+    Each shard gathers only the table entries landing in its page run —
+    every other column (other shards' pages AND sentinel entries, which
+    are >= every shard's upper bound) gets ``kv_pos → PAD_POS`` so the
+    shared visibility removes it — and the per-shard partial softmax
+    stats combine with the exact same pmax/psum as
+    :func:`decode_attention`. No collective touches the pool itself."""
+    ctx = runtime.current()
+    assert ctx is not None
+    axes = ctx.cache_axes
+    pool_spec = P(axes, None, None, None)
+    q_spec = P(ctx.bfirst, None, None, None)
+
+    use_seg = q_seg is not None and kv_seg is not None
+    args = [q, pk, pv, pages, kv_pos, q_pos]
+    specs = [
+        q_spec, pool_spec, pool_spec, P(ctx.bfirst, None),
+        _q_spec(kv_pos, ctx.bfirst), _q_spec(q_pos, ctx.bfirst),
+    ]
+    if use_seg:
+        args += [q_seg, kv_seg]
+        specs += [_q_spec(q_seg, ctx.bfirst), _q_spec(kv_seg, ctx.bfirst)]
+
+    def fn(q, pk, pv, pg, kpos, qpos, qseg=None, kseg=None):
+        n_local, ps = pk.shape[0], pk.shape[1]
+        lo = _shard_offset(axes, n_local)
+        B, Pp = pg.shape
+        Lk = Pp * ps
+        mine = (pg >= lo) & (pg < lo + n_local)  # (B, P')
+        local = jnp.where(mine, pg - lo, 0)
+        k = jnp.take(pk, local, axis=0).reshape(B, Lk, *pk.shape[2:])
+        v = jnp.take(pv, local, axis=0).reshape(B, Lk, *pv.shape[2:])
+        colm = jnp.repeat(mine, ps, axis=1)  # (B, Lk)
+        kpos = jnp.where(colm, jnp.broadcast_to(jnp.atleast_2d(kpos), (B, Lk)), K.PAD_POS)
+        if kseg is not None:
+            kseg = jnp.where(
+                colm, jnp.broadcast_to(jnp.atleast_2d(kseg), (B, Lk)),
+                K.KERNEL_PAD_SEGMENT,
+            )
+        mask = K.visibility(
+            qpos, kpos, qseg, kseg,
+            causal=causal,
+            local_only=(not sync) and use_seg,
+            window=window,
+            publisher_lo=None if (sync or use_seg) else publisher_lo,
+        )
+        m, l, acc = K.masked_attention(
+            q, k, v, mask, soft_cap=soft_cap, sm_scale=sm_scale,
+            return_stats=True,
+        )
+        m_g = jax.lax.pmax(m, axes)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, axes)
+        acc_g = jax.lax.psum(acc * corr.transpose(0, 2, 1)[..., None], axes)
+        out = acc_g / jnp.maximum(l_g, 1e-20).transpose(0, 2, 1)[..., None]
+        return out.astype(q.dtype)
+
+    return shard_map(
+        fn,
+        mesh=ctx.mesh,
+        in_specs=tuple(specs),
+        out_specs=q_spec,
+        check_vma=False,
+    )(*args)
+
+
+def paged_kv_write(
+    pk: jnp.ndarray,  # (num_pages, page_size, nkv, dh) — PAGES sharded
+    pv: jnp.ndarray,
+    k_new: jnp.ndarray,  # (B, S_new, nkv, dh) — replicated
+    v_new: jnp.ndarray,
+    pages: jnp.ndarray,  # (B, P') page tables — replicated
+    cache_len: jnp.ndarray,  # (B,) per-row write frontiers (linear positions)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row KV write through page tables into a page-sharded pool: each
+    shard resolves every row's frontier to a (page, offset) and scatters
+    only the entries whose page lands in its run — everything else (other
+    shards' pages, sentinel table entries, frontiers coasting past the
+    table) drops via scatter OOB semantics. No collective."""
+    ctx = runtime.current()
+    assert ctx is not None
+    axes = ctx.cache_axes
+    pool_spec = P(axes, None, None, None)
+    new_spec = P(ctx.bfirst, None, None, None)
+
+    def fn(pk, pv, kn, vn, pg, cl):
+        from repro.serving import paging
+
+        n_local, ps = pk.shape[0], pk.shape[1]
+        lo = _shard_offset(axes, n_local)
+        B, S_new = kn.shape[:2]
+        Cp = pg.shape[1] * ps
+        pos = jnp.broadcast_to(
+            cl[:, None] + jnp.arange(S_new)[None, :], (B, S_new)
+        )
+        pslot, off = paging.page_split(jnp.minimum(pos, Cp - 1), ps)
+        page_idx = jnp.take_along_axis(pg, pslot, axis=1)
+        ok = (pos < Cp) & (page_idx >= lo) & (page_idx < lo + n_local)
+        local = jnp.where(ok, page_idx - lo, n_local)  # OOB → drop
+        pk = pk.at[local, off].set(kn.astype(pk.dtype), mode="drop")
+        pv = pv.at[local, off].set(vn.astype(pv.dtype), mode="drop")
+        return pk, pv
+
+    return shard_map(
+        fn,
+        mesh=ctx.mesh,
+        in_specs=(pool_spec, pool_spec, new_spec, new_spec,
+                  P(ctx.bfirst, None), P(ctx.bfirst)),
+        out_specs=(pool_spec, pool_spec),
+        check_vma=False,
+    )(pk, pv, k_new, v_new, pages, cache_len)
+
+
 def decode_kv_write(
     k_cache: jnp.ndarray,  # (B, C, nkv, dh) — C sharded over cache axes
     v_cache: jnp.ndarray,

@@ -54,6 +54,36 @@ the unpadded scan (pinned in tests/test_ssm_masking.py). This is what lets
 the serving engine L-bucket SSM/hybrid stacks and the scheduler run ONE
 coalesced admission path for every stack kind.
 
+Page tables and visibility (the paged KV pool)
+----------------------------------------------
+The block-paged pool (:mod:`repro.serving.paging`,
+``models.transformer.init_paged_cache``) stores KV in a per-layer
+``(num_pages, page_size, ...)`` physical pool; each slot reaches its rows
+through a traced int32 page table. The interaction rules with this
+contract:
+
+* **Page tables are DATA, never shapes.** They enter jitted entry points
+  as traced arguments, so admission/retirement rewrites them without
+  recompiling — the same zero-churn guarantee the dense pool pins.
+* **Gather first, then the one masking rule.** Paged readers
+  (``kernels.ops.paged_attention`` / ``paged_decode_attention``,
+  ``distributed.spmd_attention.paged_decode_attention``) gather pages
+  into the dense ``(B, capacity)`` layout and hand the SAME
+  ``kv_pos``/``kv_seg`` vectors to this module — visibility is decided
+  by position/segment exactly as for dense rows, NEVER by page identity.
+  A page being mapped does not make its rows visible; rows past a slot's
+  frontier still carry ``kv_pos == PAD_POS``/``kv_seg < 0``.
+* **The sentinel page id is ``num_pages``.** Unmapped table entries point
+  one past the pool; gathers clamp the index and the ``PAD_POS`` rule
+  masks the result, scatters drop out-of-range writes
+  (``mode="drop"``) — so a sentinel entry is exactly "no rows here".
+* **Shared pages are immutable.** A prefix-cache hit maps cached pages
+  (refcounted) into a new slot's table; writes only ever target pages the
+  slot owns solely — a shared partially-filled boundary page is
+  copied-on-write before the suffix lands. Page arithmetic (which page,
+  which offset) lives ONLY in :mod:`repro.serving.paging` (lint rule
+  FED006).
+
 ``publisher_lo`` is the decode-time alternative to segment masking used by
 the sequence-sharded SPMD cache (flash-decoding): at a local (non-sync)
 layer only cache rows with ``kv_pos >= publisher_lo`` — the publisher's own

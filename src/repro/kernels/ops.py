@@ -129,13 +129,24 @@ def _chunked_attention(
         f"over-padded KV: Lk={Lk} chunk={chunk} padded={k.shape[1]}"
     )
     n_chunks = (Lk + pad) // chunk
+    sl = lambda a, i: jax.lax.dynamic_slice_in_dim(a, i * chunk, chunk, axis=1)
+    fetch = lambda i: (sl(k, i), sl(v, i))
+    return _online_attention(
+        q, fetch, spec, chunk, n_chunks, g=g, soft_cap=soft_cap, scale=scale
+    )
 
+
+def _online_attention(q, fetch, spec, chunk, n_chunks, *, g, soft_cap, scale):
+    """Online-softmax (flash-style) accumulation over KV chunks. ``fetch(i)``
+    supplies chunk ``i``'s (kc, vc) — a dynamic slice of a dense cache or a
+    page-group gather from a paged pool; the math is identical, so paged and
+    dense attention agree bitwise wherever their masks agree."""
+    B, Lq, nq, dh = q.shape
     qf = q.astype(jnp.float32) * scale
 
     def body(carry, i):
         m, l, acc = carry  # (B,nq,Lq), (B,nq,Lq), (B,Lq,nq,dh)
-        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * chunk, chunk, axis=1)
-        kc, vc = sl(k), sl(v)
+        kc, vc = fetch(i)
         kcf = jnp.repeat(kc.astype(jnp.float32), g, axis=2)
         vcf = jnp.repeat(vc.astype(jnp.float32), g, axis=2)
         s = jnp.einsum("bqhd,bkhd->bhqk", qf, kcf)  # (B,nq,Lq,chunk)
@@ -193,6 +204,143 @@ def decode_attention(
     """Decode-step attention against a KV cache; same masking vocabulary."""
     kw.setdefault("chunk", 2048)
     return attention(q, k_cache, v_cache, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Paged attention (block-paged KV pool, serving/paging.py conventions)
+# ---------------------------------------------------------------------------
+
+
+def _gather_pages(pool, pages):
+    """(num_pages, page_size, nkv, dh) pool + (B, P') tables → dense
+    (B, P'*page_size, nkv, dh). Gather CLAMPS sentinel entries to the last
+    physical page; callers mask those columns via kv_pos/kv_seg."""
+    N, ps = pool.shape[0], pool.shape[1]
+    B, Pp = pages.shape
+    out = jnp.take(pool, jnp.minimum(pages, N - 1), axis=0)
+    return out.reshape(B, Pp * ps, pool.shape[2], pool.shape[3])
+
+
+def paged_attention(
+    q: jnp.ndarray,  # (B, S, nq, dh)
+    pk: jnp.ndarray,  # (num_pages, page_size, nkv, dh) — shared pool
+    pv: jnp.ndarray,
+    pages: jnp.ndarray,  # (B, P') int32 page tables; entries >= num_pages are holes
+    *,
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,  # (P'*ps,) or (B, P'*ps) linear positions
+    q_seg: Optional[jnp.ndarray] = None,
+    kv_seg: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    local_only: bool = False,
+    contributed: Optional[jnp.ndarray] = None,
+    window: Optional[int] = None,
+    soft_cap: Optional[float] = None,
+    sm_scale: Optional[float] = None,
+    backend: Optional[str] = None,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """FedAttn attention reading KV through per-row page tables.
+
+    Before any visibility decision, columns owned by sentinel table entries
+    get ``kv_pos → PAD_POS`` (and ``kv_seg → KERNEL_PAD_SEGMENT``) so the
+    standard mask vocabulary removes them — required because jnp gather
+    clamps out-of-range page ids instead of dropping them. On the small /
+    ref path the pool is densified per row and handed to :func:`attention`
+    (same backend dispatch, hence bitwise parity with the dense pool); the
+    large path gathers page groups chunk-by-chunk inside the online-softmax
+    scan without ever materializing the dense (B, Lk) cache."""
+    backend = backend or _DEFAULT_BACKEND
+    N, ps = pk.shape[0], pk.shape[1]
+    B, Pp = pages.shape
+    Lk = Pp * ps
+    col_valid = jnp.repeat(pages < N, ps, axis=1)  # (B, Lk)
+    kv_pos = jnp.broadcast_to(jnp.atleast_2d(kv_pos), (B, Lk))
+    kv_pos = jnp.where(col_valid, kv_pos, _core.PAD_POS)
+    if kv_seg is not None:
+        kv_seg = jnp.broadcast_to(jnp.atleast_2d(kv_seg), (B, Lk))
+        kv_seg = jnp.where(col_valid, kv_seg, _core.KERNEL_PAD_SEGMENT)
+    if backend != "xla" or q.shape[1] * Lk <= 256 * 256:
+        k = _gather_pages(pk, pages)
+        v = _gather_pages(pv, pages)
+        return attention(
+            q, k, v, q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg, kv_seg=kv_seg,
+            causal=causal, local_only=local_only, contributed=contributed,
+            window=window, soft_cap=soft_cap, sm_scale=sm_scale,
+            backend=backend,
+        )
+    return _chunked_paged_attention(
+        q, pk, pv, pages, q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg,
+        kv_seg=kv_seg, causal=causal, local_only=local_only,
+        contributed=contributed, window=window, soft_cap=soft_cap,
+        sm_scale=sm_scale, chunk=chunk,
+    )
+
+
+def _chunked_paged_attention(
+    q, pk, pv, pages, *, q_pos, kv_pos, q_seg, kv_seg, causal, local_only,
+    contributed, window, soft_cap, sm_scale, chunk,
+):
+    """Online-softmax attention over page *groups*: each scan step gathers
+    ``G = chunk // page_size`` pages from the pool and reuses the shared
+    accumulation body (:func:`_online_attention`), so compiled memory is
+    O(Lq · chunk) regardless of pool size. ``kv_pos``/``kv_seg`` arrive
+    already per-row with sentinel columns masked (see paged_attention)."""
+    from repro.serving import paging as _paging
+
+    B, Lq, nq, dh = q.shape
+    N, ps, nkv = pk.shape[0], pk.shape[1], pk.shape[2]
+    Pp = pages.shape[1]
+    g = nq // nkv
+    scale = sm_scale if sm_scale is not None else dh**-0.5
+
+    G = max(1, min(_paging.pages_for(chunk, ps), Pp))
+    chunk = G * ps
+    padp = (-Pp) % G
+    if padp:
+        pages = jnp.pad(pages, ((0, 0), (0, padp)), constant_values=N)
+        kv_pos = jnp.pad(
+            kv_pos, ((0, 0), (0, padp * ps)), constant_values=_core.PAD_POS
+        )
+        if kv_seg is not None:
+            kv_seg = jnp.pad(
+                kv_seg, ((0, 0), (0, padp * ps)),
+                constant_values=_core.KERNEL_PAD_SEGMENT,
+            )
+        if contributed is not None:
+            pad_c = ((0, 0),) * (contributed.ndim - 1) + ((0, padp * ps),)
+            contributed = jnp.pad(contributed, pad_c)
+    n_groups = (Pp + padp) // G
+
+    spec = _core.AttnSpec(
+        q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg, kv_seg=kv_seg,
+        contributed=contributed, causal=causal, local_only=local_only,
+        window=window, soft_cap=soft_cap, sm_scale=sm_scale,
+    )
+
+    def fetch(i):
+        pg = jax.lax.dynamic_slice_in_dim(pages, i * G, G, axis=1)  # (B, G)
+        return (
+            _gather_pages(pk, pg),
+            _gather_pages(pv, pg),
+        )
+
+    return _online_attention(
+        q, fetch, spec, chunk, n_groups, g=g, soft_cap=soft_cap, scale=scale
+    )
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,
+    pk: jnp.ndarray,
+    pv: jnp.ndarray,
+    pages: jnp.ndarray,
+    **kw,
+) -> jnp.ndarray:
+    """Decode-step attention through page tables; same masking vocabulary
+    as :func:`decode_attention`."""
+    kw.setdefault("chunk", 2048)
+    return paged_attention(q, pk, pv, pages, **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -87,6 +87,7 @@ def run_stream(engine: FedAttnEngine, config, args) -> None:
     sched = ContinuousBatchingScheduler(
         engine, max_slots=args.max_slots, capacity=capacity,
         steps_per_admit=args.steps_per_admit,
+        prefix_cache=args.prefix_cache,
     )
     # warmup: compile the pool executables the timed run will hit, so it
     # measures steady-state serving, not compile time. Admission coalescing
@@ -107,8 +108,15 @@ def run_stream(engine: FedAttnEngine, config, args) -> None:
           f"pool {args.max_slots} slots x {capacity} pages"
           + (f" sharded over {shards} devices" if shards > 1 else "")
           + f", steps_per_admit={args.steps_per_admit}")
+    st = sched.pool_stats()
+    prefix = ""
+    if args.prefix_cache:
+        hits, misses = st["prefix_hits"], st["prefix_misses"]
+        rate = hits / max(1, hits + misses)
+        prefix = (f", prefix hit-rate {rate:.0%} "
+                  f"({st['prefix_tokens_reused']} prompt tokens reused)")
     print(f"aggregate decode throughput: {total / wall:,.1f} tok/s "
-          f"({total} tokens / {wall:.2f}s wall incl. arrivals)")
+          f"({total} tokens / {wall:.2f}s wall incl. arrivals){prefix}")
     print(f"executables: {sched.compile_counts} (decode_step stays 1 — "
           f"admission/retirement never recompiles)")
 
@@ -143,6 +151,12 @@ def main() -> None:
                     help="--stream Poisson arrival rate (requests/sec)")
     ap.add_argument("--max-slots", type=int, default=8,
                     help="--stream KV pool slots (max concurrent requests)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="--stream: enable the refcounted prefix cache on "
+                         "the paged KV pool — requests sharing a cached "
+                         "prompt map its pages copy-free and prefill only "
+                         "their suffix (attention-only stacks); the hit "
+                         "rate is reported next to tok/s")
     ap.add_argument("--steps-per-admit", type=int, default=4,
                     help="--stream decode sub-steps fused per scheduler "
                          "tick (amortizes dispatch; admission latency "

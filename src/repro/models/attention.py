@@ -162,9 +162,18 @@ def attention_decode_block(
     sync: Optional[bool] = None,
     backend: Optional[str] = None,
     contributed: Optional[jnp.ndarray] = None,
+    pages: Optional[jnp.ndarray] = None,
 ):
     """Decode-step attention against the cache; writes the new KV in-place
     (dynamic_update_slice) and returns (y, k_cache, v_cache).
+
+    Paged pool: with ``pages`` ((B, P') int32 page tables), ``k_cache`` /
+    ``v_cache`` are the *shared* (num_pages, page_size, nkv, dh) physical
+    pool. New KV scatters through the table (entries >= num_pages and
+    positions past the table's capacity drop — serving/paging.py sentinel
+    convention) and the attention gathers each row's pages, masking
+    sentinel columns before any visibility decision. Tables are traced
+    data, so admission churn never re-specializes this function.
 
     ``cache_len`` may be a scalar (whole batch at one frontier — classic
     generate) or a (B,) vector (continuous batching: every slot of the KV
@@ -191,7 +200,35 @@ def attention_decode_block(
     from repro.distributed import runtime
 
     spmd = runtime.active()
-    if jnp.ndim(cache_len) == 1:
+    if pages is not None:
+        from repro.serving import paging
+
+        if spmd:
+            from repro.distributed import spmd_attention
+
+            k_cache, v_cache = spmd_attention.paged_kv_write(
+                k_cache, v_cache, k_new, v_new, pages, cache_len
+            )
+        else:
+            N, ps = k_cache.shape[0], k_cache.shape[1]
+            Cp = pages.shape[1] * ps
+            B = x.shape[0]
+            pos = jnp.broadcast_to(
+                jnp.reshape(cache_len, (-1, 1)) + jnp.arange(S_new)[None, :],
+                (B, S_new),
+            )
+            pslot, off = paging.page_split(jnp.minimum(pos, Cp - 1), ps)
+            page_idx = jnp.take_along_axis(pages, pslot, axis=1)
+            # positions past the table (retired slots coasting) must not
+            # clamp into a real page — force the sentinel so they drop
+            page_idx = jnp.where(pos < Cp, page_idx, N)
+            k_cache = k_cache.at[page_idx, off].set(
+                k_new.astype(k_cache.dtype), mode="drop"
+            )
+            v_cache = v_cache.at[page_idx, off].set(
+                v_new.astype(v_cache.dtype), mode="drop"
+            )
+    elif jnp.ndim(cache_len) == 1:
         if spmd:
             # sequence-sharded cache (pooled SPMD decode): each shard
             # scatters only the rows landing in its slice — no collective
@@ -210,6 +247,43 @@ def attention_decode_block(
         v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), cache_len, axis=1)
     if sync is None:
         sync = ctx.schedule.is_sync(layer_idx)
+
+    if pages is not None:
+        publisher_lo = (
+            ctx.partition.publisher_start(ctx.config.publisher_index)
+            if ctx.enabled else 0
+        )
+        if spmd:
+            from repro.distributed import spmd_attention
+
+            out = spmd_attention.paged_decode_attention(
+                q, k_cache, v_cache, pages,
+                q_pos=ctx.positions,
+                kv_pos=ctx.kv_positions,
+                q_seg=ctx.segments if ctx.enabled else None,
+                kv_seg=ctx.kv_segments if ctx.enabled else None,
+                publisher_lo=publisher_lo,
+                sync=sync or not ctx.enabled,
+                window=spec.window,
+                soft_cap=config.attn_soft_cap,
+            )
+        else:
+            out = ops.paged_decode_attention(
+                q, k_cache, v_cache, pages,
+                q_pos=ctx.positions,
+                kv_pos=ctx.kv_positions,
+                q_seg=ctx.segments if ctx.enabled else None,
+                kv_seg=ctx.kv_segments if ctx.enabled else None,
+                causal=True,
+                local_only=(not sync) and ctx.enabled,
+                contributed=contributed if (sync and ctx.enabled) else None,
+                window=spec.window,
+                soft_cap=config.attn_soft_cap,
+                backend=backend,
+            )
+        B = x.shape[0]
+        y = jnp.einsum("bse,ed->bsd", out.reshape(B, S_new, -1), p["wo"])
+        return y, k_cache, v_cache
 
     if spmd:
         from repro.distributed import spmd_attention

@@ -137,6 +137,128 @@ def init_layer_cache(
     }
 
 
+def init_paged_layer_cache(
+    spec: LayerSpec, config: ModelConfig, batch: int, num_pages: int,
+    page_size: int, dtype
+) -> Params:
+    """Paged variant of :func:`init_layer_cache`: attention layers get a
+    *shared* physical pool ``pk``/``pv`` of shape (num_pages, page_size,
+    nkv, dh) — no batch dim; slots address it through int32 page tables
+    (serving/paging.py). Recurrent layers keep per-slot state rows."""
+    if spec.kind == "attn":
+        nkv, dh = config.n_kv_heads, config.head_dim
+        return {
+            "pk": jnp.zeros((num_pages, page_size, nkv, dh), dtype),
+            "pv": jnp.zeros((num_pages, page_size, nkv, dh), dtype),
+        }
+    return init_layer_cache(spec, config, batch, page_size, dtype)
+
+
+def init_paged_cache(
+    config: ModelConfig, batch: int, num_pages: int, page_size: int,
+    *, plan: Optional["ScanPlan"] = None
+):
+    """Block-paged decode caches, loop or scan form (mirrors init_cache /
+    init_cache_scan; scan form stacks pool leaves to (n_periods, num_pages,
+    page_size, nkv, dh))."""
+    dt = jnp.dtype(config.dtype)
+    mk = lambda s: init_paged_layer_cache(s, config, batch, num_pages, page_size, dt)
+    if plan is not None:
+        per = [mk(s) for s in plan.specs]
+        stacked = jax.tree.map(
+            lambda x: jnp.zeros((plan.n_periods,) + x.shape, x.dtype), per
+        )
+        return {
+            "stacked": stacked,
+            "remainder": [mk(s) for s in plan.remainder_specs],
+        }
+    return [mk(s) for s in config.layer_specs()]
+
+
+def _gather_pool(pool, pages):
+    """Densify page tables through a physical pool: pool (..., N, ps, nkv,
+    dh) + pages (B, P') int32 → (..., B, P'*ps, nkv, dh). Gather CLAMPS, so
+    sentinel entries (>= N) read the last physical page — callers must mask
+    those columns (kv_pos → PAD_POS) before any visibility decision."""
+    axis = pool.ndim - 4
+    N, ps = pool.shape[axis], pool.shape[axis + 1]
+    B, Pp = pages.shape
+    out = jnp.take(pool, jnp.minimum(pages, N - 1), axis=axis)
+    return out.reshape(out.shape[:axis] + (B, Pp * ps) + out.shape[-2:])
+
+
+def _scatter_pool(pool, dense, dst_pages):
+    """Inverse of :func:`_gather_pool`: write a dense per-slot cache
+    (..., B, P'*ps, nkv, dh) into the pool at ``dst_pages`` (B, P').
+    Scatter DROPS out-of-bounds rows, so sentinel entries are no-ops —
+    bucket-padding garbage beyond a slot's allocation never lands."""
+    axis = pool.ndim - 4
+    ps = pool.shape[axis + 1]
+    B, Pp = dst_pages.shape
+    blk = dense.reshape(dense.shape[:axis] + (B * Pp, ps) + dense.shape[-2:])
+    blk = blk.astype(pool.dtype)
+    idx = dst_pages.reshape(-1)
+    if axis == 0:
+        return pool.at[idx].set(blk, mode="drop")
+    return pool.at[:, idx].set(blk, mode="drop")
+
+
+def gather_paged_cache(cache, pages):
+    """Dense transient caches for a batch of slots of a paged pool cache:
+    attention leaves gather ``pages`` (B, P') into (B, P'*ps, nkv, dh)
+    k/v; recurrent leaves come back as fresh zero state for B rows (the
+    suffix-prefill consumer is attn-only — enforced by the scheduler)."""
+    B = pages.shape[0]
+    scan_form = isinstance(cache, dict)
+
+    def rec(x):
+        if scan_form:
+            return jnp.zeros((x.shape[0], B) + x.shape[2:], x.dtype)
+        return jnp.zeros((B,) + x.shape[1:], x.dtype)
+
+    def layer(c):
+        if "pk" in c:
+            return {"k": _gather_pool(c["pk"], pages),
+                    "v": _gather_pool(c["pv"], pages)}
+        return {key: rec(val) for key, val in c.items()}
+
+    if scan_form:
+        return {
+            "stacked": [layer(c) for c in cache["stacked"]],
+            "remainder": [layer(c) for c in cache["remainder"]],
+        }
+    return [layer(c) for c in cache]
+
+
+def paged_slot_write(cache, batch, dst_pages, slots):
+    """Write an admitted group's dense transient caches into the paged
+    pool: attention leaves scatter page blocks at ``dst_pages`` ((B, P')
+    int32, sentinel entries drop), recurrent leaves write rows at
+    ``slots`` ((B,) int32, out-of-bounds padding rows drop)."""
+    scan_form = isinstance(cache, dict)
+
+    def layer(pc, bc):
+        if "pk" in pc:
+            return {"pk": _scatter_pool(pc["pk"], bc["k"], dst_pages),
+                    "pv": _scatter_pool(pc["pv"], bc["v"], dst_pages)}
+        if scan_form:
+            return {k: pc[k].at[:, slots].set(bc[k].astype(pc[k].dtype))
+                    for k in pc}
+        return {k: pc[k].at[slots].set(bc[k].astype(pc[k].dtype)) for k in pc}
+
+    if scan_form:
+        return {
+            "stacked": [
+                layer(p, b) for p, b in zip(cache["stacked"], batch["stacked"])
+            ],
+            "remainder": [
+                layer(p, b)
+                for p, b in zip(cache["remainder"], batch["remainder"])
+            ],
+        }
+    return [layer(p, b) for p, b in zip(cache, batch)]
+
+
 def apply_layer_decode(
     p: Params,
     cache: Params,
@@ -151,6 +273,7 @@ def apply_layer_decode(
     backend: Optional[str] = None,
     moe_impl: str = "dense",
     contributed: Optional[jnp.ndarray] = None,
+    pages: Optional[jnp.ndarray] = None,
 ):
     """One decode block. Returns (x, new_cache). ``contributed`` is this
     layer's sparse-KV-exchange row during bulk prefill-via-decode.
@@ -167,11 +290,20 @@ def apply_layer_decode(
     h = L.apply_norm(p["norm1"], x, config)
     new_cache = dict(cache)
     if spec.kind == "attn":
-        o, kc, vc = A.attention_decode_block(
-            p["attn"], h, cache["k"], cache["v"], cache_len, ctx, layer_idx,
-            spec, config, sync=sync, backend=backend, contributed=contributed,
-        )
-        new_cache["k"], new_cache["v"] = kc, vc
+        if "pk" in cache:
+            o, kc, vc = A.attention_decode_block(
+                p["attn"], h, cache["pk"], cache["pv"], cache_len, ctx,
+                layer_idx, spec, config, sync=sync, backend=backend,
+                contributed=contributed, pages=pages,
+            )
+            new_cache["pk"], new_cache["pv"] = kc, vc
+        else:
+            o, kc, vc = A.attention_decode_block(
+                p["attn"], h, cache["k"], cache["v"], cache_len, ctx,
+                layer_idx, spec, config, sync=sync, backend=backend,
+                contributed=contributed,
+            )
+            new_cache["k"], new_cache["v"] = kc, vc
     elif spec.kind == "mamba":
         # single-token decode: state continues (sync irrelevant); bulk
         # prefill-via-decode (S_new > 1, engine) honors the real sync flag
@@ -302,6 +434,10 @@ def cache_pspecs(cache, cache_axes):
     def leaf(path_key, x):
         if path_key in ("k", "v"):
             return P(*([None] * (x.ndim - 3)), cache_axes, None, None)
+        if path_key in ("pk", "pv"):
+            # paged pool (..., num_pages, page_size, nkv, dh): shard PAGES,
+            # not rows — each shard owns a contiguous run of physical pages
+            return P(*([None] * (x.ndim - 4)), cache_axes, None, None, None)
         return P(*([None] * x.ndim))
 
     def layer(c):
@@ -327,6 +463,7 @@ def apply_layers_decode_scan(
     backend: Optional[str] = None,
     moe_impl: str = "dense",
     contributed: Optional[jnp.ndarray] = None,  # rounds-first prefill rows
+    pages: Optional[jnp.ndarray] = None,  # (B, P') page tables (paged pool)
 ):
     """All decoder layers as one ``lax.scan`` over the plan's scan units.
 
@@ -358,7 +495,7 @@ def apply_layers_decode_scan(
             h, c = apply_layer_decode(
                 per_params[i], per_cache[i], h, cache_len, dctx, 0, spec,
                 config, sync=plan.sync[i], backend=backend, moe_impl=moe_impl,
-                contributed=row,
+                contributed=row, pages=pages,
             )
             new_c.append(c)
         return h, new_c
@@ -381,7 +518,7 @@ def apply_layers_decode_scan(
         x, c = apply_layer_decode(
             params["remainder"][j], cache["remainder"][j], x, cache_len,
             dctx, 0, spec, config, sync=plan.remainder_sync[j],
-            backend=backend, moe_impl=moe_impl, contributed=row,
+            backend=backend, moe_impl=moe_impl, contributed=row, pages=pages,
         )
         new_rem.append(c)
     return x, {"stacked": new_stacked, "remainder": new_rem}
@@ -548,8 +685,15 @@ class TransformerLM:
         dctx: Optional[FedAttnContext] = None,
         mode: str = "loop",
         plan: Optional[ScanPlan] = None,
+        pages: Optional[jnp.ndarray] = None,
     ):
         """One autoregressive step. Returns (logits (B, S_new, V), new_cache).
+
+        Paged pool: with ``pages`` ((B, P') int32 page tables — traced
+        DATA, never a shape) the cache's attention leaves are the shared
+        ``pk``/``pv`` physical pool and both the KV write and the
+        attention gather route through the table (serving/paging.py holds
+        the geometry convention; sentinel entries >= num_pages are holes).
 
         Jit-stable: ``cache_len`` and ``step`` may be traced scalars (cache
         capacity is taken from static shapes). Callers running a compiled
@@ -580,14 +724,14 @@ class TransformerLM:
                 raise ValueError("decode_step(mode='scan') requires a ScanPlan")
             x, new_cache = apply_layers_decode_scan(
                 params, cache, x, cache_len, dctx, cfg, plan,
-                backend=backend, moe_impl=moe_impl,
+                backend=backend, moe_impl=moe_impl, pages=pages,
             )
         elif mode == "loop":
             new_cache = []
             for m, (p, spec) in enumerate(zip(params["layers"], cfg.layer_specs())):
                 x, c = apply_layer_decode(
                     p, cache[m], x, cache_len, dctx, m, spec, cfg,
-                    backend=backend, moe_impl=moe_impl,
+                    backend=backend, moe_impl=moe_impl, pages=pages,
                 )
                 new_cache.append(c)
         else:

@@ -1,12 +1,33 @@
-"""Serving: FedAttn collaborative-inference engine (prefill + decode) and
-the continuous-batching scheduler (slot-pool request interleaving)."""
+"""Serving: FedAttn collaborative-inference engine (prefill + decode), the
+continuous-batching scheduler (slot-pool request interleaving) and the
+block-paged KV allocator / prefix cache backing its pool.
 
-from repro.serving.engine import FedAttnEngine, GenerationResult
-from repro.serving.scheduler import ContinuousBatchingScheduler, Request
+Exports resolve lazily so that the leaf :mod:`repro.serving.paging` module
+(pure page-table bookkeeping, no engine dependency) can be imported from
+the model/kernel layers without dragging the whole engine in — importing
+``repro.serving.paging`` must not execute ``engine``/``scheduler`` (which
+import the model stack and would cycle back into the importer).
+"""
 
-__all__ = [
-    "FedAttnEngine",
-    "GenerationResult",
-    "ContinuousBatchingScheduler",
-    "Request",
-]
+_EXPORTS = {
+    "FedAttnEngine": "repro.serving.engine",
+    "GenerationResult": "repro.serving.engine",
+    "ContinuousBatchingScheduler": "repro.serving.scheduler",
+    "Request": "repro.serving.scheduler",
+    "PageAllocator": "repro.serving.paging",
+    "PrefixCache": "repro.serving.paging",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module 'repro.serving' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

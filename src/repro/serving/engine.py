@@ -392,6 +392,7 @@ class FedAttnEngine:
         capacity: Optional[int] = None,
         steps_per_admit: int = 1,
         arrival_times=None,
+        **scheduler_kwargs,
     ) -> list:
         """Serve many single-sequence requests through the continuous-
         batching scheduler (serving/scheduler.py): admissions fill a fixed
@@ -411,7 +412,7 @@ class FedAttnEngine:
             capacity = ContinuousBatchingScheduler.capacity_for(self, requests)
         sched = ContinuousBatchingScheduler(
             self, max_slots=max_slots, capacity=capacity,
-            steps_per_admit=steps_per_admit,
+            steps_per_admit=steps_per_admit, **scheduler_kwargs,
         )
         return sched.run(requests, arrival_times=arrival_times)
 
@@ -541,6 +542,69 @@ class FedAttnEngine:
 
         self._trace_guards["prefill"].charge(key)
         fn = jax.jit(run, donate_argnums=_donation_for_backend((1,)))
+        self._prefill_fns[key] = fn
+        return fn
+
+    def _suffix_prefill_fn(self, B, Ls, capacity, n_rounds):
+        """Build (or fetch) the jitted *suffix* prefill for prefix-cache
+        hits (paged scheduler): each row's cached prefix KV is gathered
+        from the physical pool through its source page table into a dense
+        transient cache, and only the suffix tokens run through the
+        layers — at traced per-row write frontiers ``write_lo`` (the
+        prefix lengths), so one executable serves every (bucketed-suffix,
+        capacity) combination regardless of where prefixes end. Always
+        per-row (coalesced admission semantics: ``real_len`` is each
+        row's true suffix length, the LM head gathers that position).
+
+        The pool is NOT donated — the caller keeps using it; the returned
+        transient goes through the same paged slot write as a fresh
+        admission. Distinct from ``_prefill_fn`` because the bucketed
+        full prefill bakes ``cache_len=0`` into its trace; the "suffix"
+        key tag keeps the two executable families apart in
+        ``_prefill_fns`` (and in the scheduler's batch-size reuse scan)."""
+        key = (B, Ls, capacity, n_rounds, False, "suffix")
+        fn = self._prefill_fns.get(key)
+        if fn is not None:
+            return fn
+
+        model, backend, cfg = self.model, self.backend, self.config
+        schedule, plan = self._schedule, self._plan
+        scan = self.layers_mode == "scan"
+        proto = self._proto_ctx(capacity)
+        round_of = [self._round_of(m) for m in range(cfg.n_layers)]
+
+        def run(params, pool, src_pages, tokens, real_len, write_lo,
+                q_seg, kv_pos, kv_seg, contributed):
+            if contributed is not None and contributed.ndim == 3:
+                contributed = jnp.swapaxes(contributed, 0, 1)
+            cache = T.gather_paged_cache(pool, src_pages)
+            q_pos = write_lo[:, None] + jnp.arange(Ls, dtype=jnp.int32)[None, :]
+            dctx = dataclasses.replace(
+                proto, positions=q_pos, segments=q_seg,
+                kv_positions=kv_pos, kv_segments=kv_seg, contributed=None,
+            )
+            x = model._embed(params, tokens, None)
+            if scan:
+                x, cache = T.apply_layers_decode_scan(
+                    params, cache, x, write_lo, dctx, cfg, plan,
+                    backend=backend, contributed=contributed,
+                )
+            else:
+                for m, (p, spec) in enumerate(zip(params["layers"], cfg.layer_specs())):
+                    row = None
+                    if contributed is not None and schedule.is_sync(m):
+                        row = contributed[round_of[m] % n_rounds]
+                    x, cache[m] = T.apply_layer_decode(
+                        p, cache[m], x, write_lo, dctx, m, spec, cfg,
+                        backend=backend, contributed=row,
+                    )
+            x = jnp.take_along_axis(x, (real_len - 1)[:, None, None], axis=1)
+            x = LY.apply_norm(params["final_norm"], x, cfg)
+            logits = LY.apply_lm_head(params["head"], params["embed"], x, cfg)
+            return logits[:, 0], cache
+
+        self._trace_guards["prefill"].charge(key)
+        fn = jax.jit(run, donate_argnums=_donation_for_backend(()))
         self._prefill_fns[key] = fn
         return fn
 

@@ -6,14 +6,28 @@ request queued behind a long one waits the whole decode. This module adds
 the layer that took centralized engines from batch-at-a-time to production
 throughput — request interleaving over a shared KV pool:
 
-* **Slot pool** — one fixed cache of ``(max_slots, capacity)`` KV pages
-  (``model.init_cache(max_slots, capacity)``, loop or scan layout). Each
-  slot row holds one in-flight request; a retired slot's pages are reused
-  immediately by the next admission (the prefill-into-slot write replaces
-  the whole row, so stale KV never leaks between occupants). Recurrent
-  layers (mamba/rwkv) keep per-slot SSM/conv/token-shift state rows in the
-  same pool under the same whole-row-replace rule — one pool, every stack
-  kind.
+* **Block-paged slot pool** (default ``kv_layout='paged'``) — attention KV
+  lives in one fixed physical pool of ``(num_pages, page_size)`` blocks per
+  layer (``transformer.init_paged_cache``), shared by every slot; each slot
+  addresses it through an int32 *page table* row assembled host-side by a
+  refcounted allocator (:mod:`repro.serving.paging`). Tables are traced
+  DATA — admission/retirement rewrites tables, never shapes, so the
+  zero-recompile churn contract is untouched — and pool memory is
+  Σ(actual request spans), not ``max_slots × worst-case capacity``.
+  ``kv_layout='dense'`` keeps the original ``(max_slots, capacity)`` row
+  pool (token/logprob parity between the two layouts is pinned in
+  tests/test_paged_serving.py). Recurrent layers (mamba/rwkv) keep
+  per-slot SSM/conv/token-shift state rows under the whole-row-replace
+  rule in either layout — one pool, every stack kind.
+* **Prefix cache** (opt-in ``prefix_cache=True``, paged + attention-only) —
+  admitted prompts publish their page runs keyed by the exact bytes that
+  determine their KV (tokens, segments, sparse-exchange masks); a later
+  admission sharing a cached prefix maps those pages copy-free into its
+  table and prefills ONLY the suffix through a dedicated jitted entry
+  point (``engine._suffix_prefill_fn`` — traced per-row write frontiers,
+  so one executable serves any prefix length). A partially-filled
+  boundary page is copied into a fresh page (copy-on-write) so shared
+  bytes stay immutable while any reference lives.
 * **One resident decode executable** — every scheduler tick runs ONE cached
   jitted step over ALL slots. Everything that distinguishes slots — write
   frontier, query position, segment vectors, temperature, rng key, fold
@@ -63,6 +77,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import hashlib
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -75,6 +90,8 @@ import numpy as np
 from repro.analysis.trace_guard import TraceGuard
 from repro.core.partition import Partition
 from repro.kernels.core import PAD_SEGMENT
+from repro.models import transformer as T
+from repro.serving import paging
 from repro.serving.engine import (
     GenerationResult, _donation_for_backend, _next_pow2, _token_logprob,
 )
@@ -107,6 +124,7 @@ class _Slot:
     tokens: list = field(default_factory=list)
     logprobs: list = field(default_factory=list)
     comm_bytes: float = 0.0
+    pages: list = field(default_factory=list)  # owned page refs (paged layout)
 
 
 class ContinuousBatchingScheduler:
@@ -123,8 +141,26 @@ class ContinuousBatchingScheduler:
       steps_per_admit: decode sub-steps fused into one executable call
         (lax.scan inside the jit). Higher amortizes per-step dispatch;
         admission latency grows by the same factor. Finished slots coast
-        (their surplus tokens are discarded, surplus KV writes land in
-        their own row which the next occupant's prefill overwrites).
+        (their surplus tokens are discarded; under the paged layout the
+        surplus KV writes hit page-table sentinels and drop, under the
+        dense layout they land in the slot's own row which the next
+        occupant's prefill overwrites).
+      kv_layout: ``'paged'`` (default) stores attention KV in a shared
+        ``(num_pages, page_size)`` physical pool addressed through per-slot
+        page tables; ``'dense'`` keeps the original per-slot
+        ``(max_slots, capacity)`` rows. Token/logprob parity between the
+        two is exact (pinned in tests/test_paged_serving.py).
+      page_size: tokens per physical page (paged layout only). The working
+        capacity is rounded up to a whole number of pages; ``capacity``
+        itself stays the user-facing admission bound.
+      num_pages: physical pages in the pool. Default
+        ``max_slots * ceil(capacity / page_size)`` (same bytes as the dense
+        layout, rounded up to the mesh shard count) — smaller pools
+        oversubscribe: admission simply waits for pages, so short requests
+        pack many more residents into the same memory.
+      prefix_cache: opt-in (paged + attention-only stacks): admitted
+        prompts publish their page runs; later admissions sharing a cached
+        prefix map those pages copy-free and prefill only the suffix.
     """
 
     def __init__(
@@ -134,23 +170,75 @@ class ContinuousBatchingScheduler:
         max_slots: int = 8,
         capacity: int = 256,
         steps_per_admit: int = 1,
+        kv_layout: str = "paged",
+        page_size: int = 16,
+        num_pages: Optional[int] = None,
+        prefix_cache: bool = False,
     ):
         if max_slots < 1 or capacity < 2 or steps_per_admit < 1:
             raise ValueError("max_slots >= 1, capacity >= 2, steps_per_admit >= 1")
+        if kv_layout not in ("paged", "dense"):
+            raise ValueError("kv_layout must be 'paged' or 'dense'")
+        if page_size < 1:
+            raise ValueError("page_size >= 1")
         self.engine = engine
         self.max_slots = max_slots
         self.capacity = capacity
         self.steps_per_admit = steps_per_admit
+        self.page_size = page_size
+        self._paged = kv_layout == "paged"
         self._plan = engine._plan if engine.layers_mode == "scan" else None
-        self.cache = engine.model.init_cache(max_slots, capacity, plan=self._plan)
-
         self._spmd = getattr(engine, "spmd", None)
+        n_shards = (
+            self._spmd.mesh.shape[self._spmd.cache_axes[0]]
+            if self._spmd is not None else 1
+        )
+
+        if self._paged:
+            # Device arrays and executables are keyed on the page-padded
+            # capacity; ``self.capacity`` keeps the user-facing bound.
+            self._cap = paging.padded_capacity(capacity, page_size)
+            self._pp = paging.pages_for(self._cap, page_size)  # table width
+            if num_pages is None:
+                num_pages = max_slots * self._pp
+                num_pages += (-num_pages) % n_shards
+            elif num_pages < 1:
+                raise ValueError("num_pages >= 1")
+            self.num_pages = num_pages
+            self._alloc = paging.PageAllocator(num_pages)
+            self._prefix = None
+            if prefix_cache:
+                if not all(s.kind == "attn" for s in engine.config.layer_specs()):
+                    raise ValueError(
+                        "prefix_cache requires an attention-only stack: "
+                        "recurrent (SSM/RWKV) layers carry per-slot state "
+                        "that cached KV pages cannot reconstruct"
+                    )
+                self._prefix = paging.PrefixCache(self._alloc, page_size)
+            self.cache = T.init_paged_cache(
+                engine.config, max_slots, num_pages, page_size, plan=self._plan
+            )
+        else:
+            if prefix_cache:
+                raise ValueError("prefix_cache requires kv_layout='paged'")
+            self._cap = capacity
+            self._pp = 0
+            self.num_pages = 0
+            self._alloc = None
+            self._prefix = None
+            self.cache = engine.model.init_cache(
+                max_slots, capacity, plan=self._plan
+            )
+
         self._cache_shardings = None
         if self._spmd is not None:
-            from repro.models import transformer as T
-
-            n_shards = self._spmd.mesh.shape[self._spmd.cache_axes[0]]
-            if capacity % n_shards:
+            if self._paged:
+                if self.num_pages % n_shards:
+                    raise ValueError(
+                        f"num_pages {self.num_pages} must divide over the "
+                        f"{n_shards} page shards of the serving mesh"
+                    )
+            elif capacity % n_shards:
                 raise ValueError(
                     f"capacity {capacity} must divide over the {n_shards} "
                     "cache shards of the serving mesh"
@@ -172,8 +260,21 @@ class ContinuousBatchingScheduler:
             )
             self.cache = jax.device_put(self.cache, self._cache_shardings)
 
-        S, C = max_slots, capacity
+        S, C = max_slots, self._cap
         self._slots: list[Optional[_Slot]] = [None] * S
+        # per-slot page tables (paged layout): traced DATA, entry
+        # ``num_pages`` is the hole sentinel (writes drop, reads mask)
+        self._pages_tbl = (
+            np.full((S, self._pp), self.num_pages, np.int32)
+            if self._paged else None
+        )
+        self.stats = {
+            "full_prefills": 0,
+            "suffix_prefills": 0,
+            "prefill_tokens": 0,
+            "peak_resident": 0,
+            "peak_resident_tokens": 0,
+        }
         self._queue: deque = deque()  # (req_id, Request, arrival_time|None)
         self._results: dict[int, GenerationResult] = {}
         self._next_id = 0
@@ -316,7 +417,7 @@ class ContinuousBatchingScheduler:
 
     # -- admission --------------------------------------------------------------
 
-    def _admit_batch_size(self, B: int, Lp: int, n_rounds) -> int:
+    def _admit_batch_size(self, B: int, Lp: int, n_rounds, tag=True) -> int:
         """pow2-pad the admission batch, preferring the smallest ALREADY
         COMPILED (B', Lp) prefill with Bp <= B' <= 2·Bp: re-using a
         slightly larger executable costs at most one doubling of padded
@@ -330,12 +431,153 @@ class ContinuousBatchingScheduler:
         Bp = _next_pow2(B)
         compiled = sorted(
             k[0] for k in self.engine._prefill_fns
-            if k[1:] == (Lp, self.capacity, n_rounds, False, True)
+            if k[1:] == (Lp, self._cap, n_rounds, False, tag)
             and Bp <= k[0] <= 2 * Bp
         )
         return compiled[0] if compiled else Bp
 
-    def _admit_group(self, slots: list[int], items: list, Lp: int) -> None:
+    def _prefix_key(self, req, ctx):
+        """Length-indexed digest of everything that determines a prompt's
+        KV bytes — token ids, partition segment labels, and the sparse-
+        exchange contribution masks. Two prompts share cached pages only
+        when all three agree over the shared span."""
+        toks = np.asarray(req.tokens)
+        segs = np.asarray(ctx.segments)
+        contrib = (
+            None if ctx.contributed is None else np.asarray(ctx.contributed)
+        )
+
+        def key_of(d: int) -> bytes:
+            h = hashlib.blake2b(digest_size=16)
+            h.update(np.int64(d).tobytes())
+            h.update(toks[:d].tobytes())
+            h.update(segs[:d].tobytes())
+            if contrib is not None:
+                h.update(np.ascontiguousarray(contrib[:, :d]).tobytes())
+            return h.digest()
+
+        return key_of
+
+    def _alloc_pages(self, n: int):
+        """All-or-nothing page allocation, evicting prefix-cache LRU
+        entries under pressure (cold cached prefixes yield their pages to
+        live admissions). None ⇒ the pool genuinely cannot hold ``n`` more
+        pages right now."""
+        if n == 0:
+            return []
+        out = self._alloc.alloc(n)
+        while out is None and self._prefix is not None and self._prefix.evict_lru():
+            out = self._alloc.alloc(n)
+        return out
+
+    def _prepare_admission(self, rid: int, req: Request):
+        """Build the request's decode context and — under the paged
+        layout — its page plan: prefix-cache lookup, refcounted shares of
+        full prefix pages, a copy-on-write page when the prefix ends
+        mid-page, fresh pages for the rest of the prompt+generation span.
+
+        Returns an admission dict, or None when the pool cannot hold the
+        request right now (every ref taken here is rolled back; the caller
+        leaves the request at the head of the queue — admission is FIFO,
+        later smaller requests do not jump a starved large one)."""
+        eng = self.engine
+        L = int(req.tokens.shape[0])
+        ctx = eng.build_context(L, partition=req.partition, rng=req.rng)
+        adm = {
+            "rid": rid, "req": req, "ctx": ctx, "L": L, "d": 0,
+            "pages": [], "dst": None, "src": None, "table": None,
+            "key_of": None,
+        }
+        if not self._paged:
+            return adm
+        ps = self.page_size
+        N = self.num_pages
+        n_total = paging.pages_for(L + req.n_new, ps)
+        d, run = 0, ()
+        if self._prefix is not None:
+            adm["key_of"] = self._prefix_key(req, ctx)
+            hit = self._prefix.lookup(adm["key_of"], L)
+            if hit is not None:
+                d, run = hit
+        n_shared = paging.pages_for(d, ps)
+        partial = d > 0 and paging.page_split(d, ps)[1] != 0
+        owned: list = []
+        table = np.full(self._pp, N, np.int32)
+        dst = np.full(self._pp, N, np.int32)
+        src = np.full(self._pp, N, np.int32)
+        # shared prefix pages: the slot takes a ref on each; reads go
+        # straight to the shared page (src + decode table) and the
+        # admission scatter skips it (dst sentinel) — shared bytes stay
+        # immutable while any reference lives
+        for j, p in enumerate(run[:n_shared]):
+            self._alloc.incref(p)
+            owned.append(p)
+            src[j] = table[j] = p
+        if partial:
+            # copy-on-write: the prefix ends mid-page, so the suffix write
+            # must not touch the shared copy. The prefill gathers through
+            # the shared page (src) and the scatter rewrites a fresh
+            # private page (dst/table) with identical prefix bytes + the
+            # new suffix. The slot keeps its ref on the shared original
+            # until retirement so eviction cannot recycle it pre-gather.
+            copy = self._alloc_pages(1)
+            if copy is None:
+                for p in owned:
+                    self._alloc.free(p)
+                return None
+            j = n_shared - 1
+            dst[j] = table[j] = copy[0]
+            owned.append(copy[0])
+        fresh = self._alloc_pages(n_total - n_shared)
+        if fresh is None:
+            for p in owned:
+                self._alloc.free(p)
+            return None
+        for j, p in enumerate(fresh):
+            dst[n_shared + j] = table[n_shared + j] = p
+            owned.append(p)
+        adm.update(d=d, pages=owned, dst=dst, src=src, table=table)
+        return adm
+
+    def pool_stats(self) -> dict:
+        """Memory + prefix-cache effectiveness counters for the pool:
+        ``bytes_per_resident_token`` is the whole slot pool (attention KV
+        + any recurrent state) divided by the tokens actually resident —
+        the paged layout's headline win over dense rows (benchmarks/
+        serving_throughput.py, ``serving_paged_prefix`` record)."""
+        resident = sum(
+            occ.real_len + occ.n_emitted
+            for occ in self._slots if occ is not None
+        )
+        pool_bytes = sum(
+            l.size * l.dtype.itemsize for l in jax.tree.leaves(self.cache)
+        )
+        out = {
+            "kv_layout": "paged" if self._paged else "dense",
+            "pool_bytes": int(pool_bytes),
+            "resident_tokens": int(resident),
+            "bytes_per_resident_token": float(pool_bytes) / max(1, resident),
+            "peak_bytes_per_resident_token": (
+                float(pool_bytes)
+                / max(1, self.stats["peak_resident_tokens"])
+            ),
+            **self.stats,
+        }
+        if self._paged:
+            out["num_pages"] = self.num_pages
+            out["page_size"] = self.page_size
+            out["used_pages"] = self._alloc.used_pages
+            out["free_pages"] = self._alloc.free_pages
+        if self._prefix is not None:
+            out["prefix_hits"] = self._prefix.hits
+            out["prefix_misses"] = self._prefix.misses
+            out["prefix_evictions"] = self._prefix.evictions
+            out["prefix_tokens_reused"] = self._prefix.tokens_reused
+            out["prefix_entries"] = len(self._prefix)
+        return out
+
+    def _admit_group(self, slots: list[int], adms: list, Lp: int,
+                     *, suffix: bool = False) -> None:
         """Admit same-bucket requests with ONE B>1 bucketed prefill.
 
         The admission batch is pow2-padded (padding rows replicate request
@@ -345,26 +587,35 @@ class ContinuousBatchingScheduler:
         wider batches (:meth:`_admit_batch_size`). Per-request state flows
         as per-row vectors (real_len, segments, kv segments, contribution
         masks, sampling knobs) — the batched-vector contract of
-        kernels.core."""
+        kernels.core.
+
+        ``suffix=True`` (prefix-cache hits): ``Lp`` buckets the SUFFIX
+        lengths and the group runs ``engine._suffix_prefill_fn`` — cached
+        prefix KV is gathered from the pool through each row's source page
+        table, only the suffix tokens run through the layers at traced
+        per-row write frontiers. Either way the resulting transient goes
+        through the same slot scatter (paged: routed by per-row
+        destination page tables, where sentinel entries skip shared
+        immutable prefix pages)."""
         eng = self.engine
-        B = len(items)
-        C = self.capacity
+        B = len(adms)
+        C = self._cap
 
         tokens = np.zeros((B, Lp), np.int32)
         real_len = np.ones(B, np.int32)
+        write_lo = np.zeros(B, np.int32)
         q_seg = np.full((B, Lp), PAD_SEGMENT, np.int32)
         kv_seg = np.zeros((B, C), np.int32)
         temps = np.ones(B, np.float32)
         sampled = np.zeros(B, bool)
         key_data = np.zeros((B,) + self._key_shape, self._key_dtype)
-        ctxs, contrib_rows = [], []
-        for i, (rid, req) in enumerate(items):
-            L = int(req.tokens.shape[0])
-            ctx = eng.build_context(L, partition=req.partition, rng=req.rng)
-            ctxs.append(ctx)
-            tokens[i, :L] = np.asarray(req.tokens)
-            real_len[i] = L
-            q_seg[i, :L] = np.asarray(ctx.segments)
+        contrib_rows = []
+        for i, a in enumerate(adms):
+            req, ctx, L, d = a["req"], a["ctx"], a["L"], a["d"]
+            tokens[i, : L - d] = np.asarray(req.tokens)[d:]
+            real_len[i] = L - d
+            write_lo[i] = d
+            q_seg[i, : L - d] = np.asarray(ctx.segments)[d:]
             kv_seg[i] = np.asarray(ctx.decode_kv_segments(C))
             temps[i] = max(req.temperature, 1e-6)
             sampled[i] = req.temperature > 0.0 and req.rng is not None
@@ -377,27 +628,43 @@ class ContinuousBatchingScheduler:
                 contrib_rows.append(row)
         n_rounds = contrib_rows[0].shape[0] if contrib_rows else None
 
-        Bp = self._admit_batch_size(B, Lp, n_rounds)
+        Bp = self._admit_batch_size(
+            B, Lp, n_rounds, "suffix" if suffix else True
+        )
         pad = lambda a: np.concatenate(
             [a, np.broadcast_to(a[:1], (Bp - B,) + a.shape[1:])]
         ) if Bp > B else a  # padding rows replicate request 0
         contributed = None
         if contrib_rows:
             contributed = jnp.asarray(pad(np.stack(contrib_rows)))
-        one = None
-        if self._prefill_caches is not None:
-            one = self._prefill_caches.get(Bp)
-        if one is None:
-            one = eng.model.init_cache(Bp, C, plan=self._plan)
+        if suffix:
+            # gather tables: padding rows stay all-sentinel (clamped
+            # garbage gather; their compute is discarded anyway)
+            src = np.full((Bp, self._pp), self.num_pages, np.int32)
+            src[:B] = np.stack([a["src"] for a in adms])
+            fn = eng._suffix_prefill_fn(Bp, Lp, C, n_rounds)
+            last, one = fn(
+                eng._run_params(), self.cache, jnp.asarray(src),
+                jnp.asarray(pad(tokens)), jnp.asarray(pad(real_len)),
+                jnp.asarray(pad(write_lo)), jnp.asarray(pad(q_seg)),
+                jnp.arange(C, dtype=jnp.int32), jnp.asarray(pad(kv_seg)),
+                contributed,
+            )
+        else:
+            one = None
             if self._prefill_caches is not None:
-                self._prefill_caches[Bp] = one
-        fn = eng._prefill_fn(Bp, Lp, C, n_rounds, False, per_row=True)
-        last, one = fn(
-            eng._run_params(), one, jnp.asarray(pad(tokens)),
-            jnp.asarray(pad(real_len)), jnp.arange(Lp, dtype=jnp.int32),
-            jnp.asarray(pad(q_seg)), jnp.arange(C, dtype=jnp.int32),
-            jnp.asarray(pad(kv_seg)), contributed, None,
-        )
+                one = self._prefill_caches.get(Bp)
+            if one is None:
+                one = eng.model.init_cache(Bp, C, plan=self._plan)
+                if self._prefill_caches is not None:
+                    self._prefill_caches[Bp] = one
+            fn = eng._prefill_fn(Bp, Lp, C, n_rounds, False, per_row=True)
+            last, one = fn(
+                eng._run_params(), one, jnp.asarray(pad(tokens)),
+                jnp.asarray(pad(real_len)), jnp.arange(Lp, dtype=jnp.int32),
+                jnp.asarray(pad(q_seg)), jnp.arange(C, dtype=jnp.int32),
+                jnp.asarray(pad(kv_seg)), contributed, None,
+            )
         tok0, lp0 = self._admit_finish_fn()(
             last, jnp.asarray(pad(temps)), jnp.asarray(pad(key_data)),
             jnp.asarray(pad(sampled)),
@@ -406,23 +673,32 @@ class ContinuousBatchingScheduler:
         # out-of-range index and drop via scatter OOB semantics)
         slot_idx = np.full(Bp, self.max_slots, np.int32)
         slot_idx[:B] = slots
-        self.cache = self._slot_write_fn()(
-            self.cache, one, jnp.asarray(slot_idx)
-        )
+        if self._paged:
+            dst = np.full((Bp, self._pp), self.num_pages, np.int32)
+            dst[:B] = np.stack([a["dst"] for a in adms])
+            self.cache = self._slot_write_fn()(
+                self.cache, one, jnp.asarray(slot_idx), jnp.asarray(dst)
+            )
+        else:
+            self.cache = self._slot_write_fn()(
+                self.cache, one, jnp.asarray(slot_idx)
+            )
 
         tok0 = np.asarray(tok0)
         lp0 = np.asarray(lp0)
-        for i, (rid, req) in enumerate(items):
-            slot, ctx = slots[i], ctxs[i]
-            L = int(real_len[i])
+        for i, a in enumerate(adms):
+            slot, ctx, req, rid = slots[i], a["ctx"], a["req"], a["rid"]
+            L, d = a["L"], a["d"]
             self._tok[slot] = int(tok0[i])
-            self._write_pos[slot] = L  # tok0's KV goes to page L next tick
+            self._write_pos[slot] = L  # tok0's KV goes to position L next tick
             self._fold[slot] = 1  # token m samples with fold_in(rng, m)
             self._qseg[slot] = ctx.partition.publisher(ctx.config.publisher_index)
             self._kvseg[slot] = kv_seg[i]
             self._temps[slot] = temps[i]
             self._sampled[slot] = sampled[i]
             self._key_data[slot] = key_data[i]
+            if self._paged:
+                self._pages_tbl[slot] = a["table"]
             self._slots[slot] = _Slot(
                 req_id=rid,
                 real_len=L,
@@ -433,7 +709,23 @@ class ContinuousBatchingScheduler:
                 comm_bytes=ctx.comm_bytes_per_participant(
                     eng.config.n_kv_heads, eng.config.head_dim
                 ),
+                pages=a["pages"],
             )
+            if suffix:
+                self.stats["suffix_prefills"] += 1
+                self.stats["prefill_tokens"] += L - d
+            else:
+                self.stats["full_prefills"] += 1
+                self.stats["prefill_tokens"] += L
+            if self._prefix is not None and a["key_of"] is not None:
+                # publish this prompt's page run (entry refs protect the
+                # pages past this slot's retirement) — BEFORE any
+                # n_new==1 instant retirement frees the slot's own refs
+                self._prefix.insert(
+                    a["key_of"], L,
+                    [int(p) for p in
+                     a["table"][: paging.pages_for(L, self.page_size)]],
+                )
             if req.n_new == 1:
                 self._retire(slot)
         self._slot_args = None  # slot set changed; re-upload wide arrays
@@ -451,6 +743,13 @@ class ContinuousBatchingScheduler:
         self._kvseg[slot] = PAD_SEGMENT
         self._qseg[slot] = PAD_SEGMENT
         self._sampled[slot] = False
+        if self._paged:
+            # drop the slot's page refs (pages shared with the prefix
+            # cache or other slots stay alive) and sentinel the table so
+            # a coasting write from this slot's final fused call drops
+            for p in occ.pages:
+                self._alloc.free(p)
+            self._pages_tbl[slot] = self.num_pages
         self._slot_args = None
 
     def _admit_finish_fn(self):
@@ -488,6 +787,22 @@ class ContinuousBatchingScheduler:
             return self._write_fn
 
         scan_form = isinstance(self.cache, dict)
+
+        if self._paged:
+            # paged layout: attention KV routes through per-row destination
+            # page tables (sentinel entries — padding rows, shared
+            # immutable prefix pages — drop at the scatter); recurrent
+            # state still replaces whole slot rows
+            def write_paged(pool, batch, slots, dst_pages):
+                return self._constrain_cache(
+                    T.paged_slot_write(pool, batch, dst_pages, slots)
+                )
+
+            self._trace_guards["slot_write"].charge(())
+            self._write_fn = jax.jit(
+                write_paged, donate_argnums=_donation_for_backend((0,))
+            )
+            return self._write_fn
 
         def write(pool, batch, slots):
             if scan_form:
@@ -528,11 +843,11 @@ class ContinuousBatchingScheduler:
         eng = self.engine
         model, backend = eng.model, eng.backend
         mode, plan = eng.layers_mode, eng._plan
-        proto = eng._proto_ctx(self.capacity)
-        kv_pos = jnp.arange(self.capacity, dtype=jnp.int32)
+        proto = eng._proto_ctx(self._cap)
+        kv_pos = jnp.arange(self._cap, dtype=jnp.int32)
 
         def run(params, cache, tok, write_pos, fold, q_seg, kv_seg,
-                temps, sampled, key_data):
+                temps, sampled, key_data, pages=None):
             keys = jax.random.wrap_key_data(key_data)
 
             def body(carry, _):
@@ -546,6 +861,7 @@ class ContinuousBatchingScheduler:
                 logits, cache = model.decode_step(
                     params, cache, tok[:, None], wp, proto,
                     backend=backend, dctx=dctx, mode=mode, plan=plan,
+                    pages=pages,
                 )
                 last = logits[:, -1]
                 greedy = jnp.argmax(last, axis=-1)
@@ -583,19 +899,36 @@ class ContinuousBatchingScheduler:
             rid, req, at = self._queue[0]
             if at is not None and at > (now if now is not None else time.perf_counter()):
                 break
+            adm = self._prepare_admission(rid, req)
+            if adm is None:
+                # page pool exhausted (even after prefix-cache eviction) —
+                # the request stays at the head of the queue until
+                # retirements free pages; admission stays FIFO
+                break
             self._queue.popleft()
-            batch.append((rid, req))
+            batch.append(adm)
         if batch:
             groups: dict = {}
-            for rid, req in batch:
+            for adm in batch:
                 # coalesce same-bucket admissions into one B>1 prefill —
                 # THE single admission path, every stack kind (per-row
                 # segment vectors drive attention visibility and the
-                # recurrence validity/reset masks alike)
-                Lp = self.engine._bucket_len(int(req.tokens.shape[0]))
-                groups.setdefault(Lp, (Lp, []))[1].append((rid, req))
-            for Lp, items in groups.values():
-                self._admit_group([free.pop(0) for _ in items], items, Lp)
+                # recurrence validity/reset masks alike). Prefix-cache
+                # hits bucket by SUFFIX length into their own groups.
+                Lp = self.engine._bucket_len(adm["L"] - adm["d"])
+                groups.setdefault((Lp, adm["d"] > 0), []).append(adm)
+            for (Lp, suffix), adms in groups.items():
+                self._admit_group(
+                    [free.pop(0) for _ in adms], adms, Lp, suffix=suffix
+                )
+            self.stats["peak_resident"] = max(
+                self.stats["peak_resident"], self.n_active
+            )
+            self.stats["peak_resident_tokens"] = max(
+                self.stats["peak_resident_tokens"],
+                sum(o.real_len + o.n_emitted
+                    for o in self._slots if o is not None),
+            )
 
         if self.n_active == 0:
             return False
@@ -609,13 +942,15 @@ class ContinuousBatchingScheduler:
                     jnp.asarray(self._qseg), jnp.asarray(self._kvseg),
                     jnp.asarray(self._temps), jnp.asarray(self._sampled),
                     jnp.asarray(self._key_data),
+                ) + (
+                    (jnp.asarray(self._pages_tbl),) if self._paged else ()
                 )
-            q_seg, kv_seg, temps, sampled, key_data = self._slot_args
+            q_seg, kv_seg, temps, sampled, key_data = self._slot_args[:5]
             toks, lps, self.cache = fn(
                 self.engine._run_params(), self.cache,
                 jnp.asarray(self._tok), jnp.asarray(self._write_pos),
                 jnp.asarray(self._fold), q_seg, kv_seg, temps, sampled,
-                key_data,
+                key_data, *self._slot_args[5:],
             )
         toks = np.asarray(toks)
         lps = np.asarray(lps)

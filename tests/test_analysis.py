@@ -40,7 +40,9 @@ def _rules_of(violations):
 class TestLintRules:
     def test_rule_table_complete(self):
         table = lint.rules()
-        assert set(table) == {"FED001", "FED002", "FED003", "FED004", "FED005"}
+        assert set(table) == {
+            "FED001", "FED002", "FED003", "FED004", "FED005", "FED006",
+        }
         assert all(table.values())  # every rule has a one-line summary
 
     def test_fed001_private_mask_copy(self):
@@ -181,6 +183,38 @@ class TestLintRules:
             "NEG_INF = -0.7 * 3.4e38\n"
         )
         assert lint.lint_source(filewide, "repro/models/ok.py") == []
+
+    def test_fed006_raw_page_arithmetic(self):
+        # seeded regression: a consumer re-deriving page coordinates from
+        # linear KV positions by hand instead of paging.page_split
+        src = (
+            "def f(pos, page_size):\n"
+            "    return pos // page_size, pos % page_size\n"
+        )
+        vs = lint.lint_source(src, "repro/models/bad.py")
+        assert "FED006" in _rules_of(vs)
+        # ...and modding a slot index by the pool's page count
+        src = "def f(i, num_pages):\n    return i % num_pages\n"
+        assert "FED006" in _rules_of(lint.lint_source(src, "repro/serving/bad.py"))
+
+    def test_fed006_paging_module_and_blessed_idioms_clean(self):
+        # the paging module itself is the one home of the convention
+        src = (
+            "def page_split(pos, page_size):\n"
+            "    return pos // page_size, pos % page_size\n"
+        )
+        assert lint.lint_source(src, "repro/serving/paging.py") == []
+        # calling the helpers, multiplying back to linear positions, and
+        # page-count divisibility checks (clean divisor) are all legal
+        ok = (
+            "from repro.serving import paging\n"
+            "def f(pos, page_size, num_pages, n_shards):\n"
+            "    pslot, off = paging.page_split(pos, page_size)\n"
+            "    lin = pslot * page_size + off\n"
+            "    pad = (-num_pages) % n_shards\n"
+            "    return lin, pad\n"
+        )
+        assert lint.lint_source(ok, "repro/models/ok.py") == []
 
     def test_repo_is_clean(self):
         import pathlib

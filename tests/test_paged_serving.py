@@ -1,0 +1,265 @@
+"""The block-paged KV pool + prefix cache (serving/paging.py wired through
+scheduler/engine/models/kernels): exact dense↔paged parity on every stack
+kind, the zero-recompile churn contract under page tables, prefill-once
+shared prefixes (executable- AND token-count pinned, including the
+copy-on-write mid-page case), ≥2x residency from the same pool bytes, and
+FIFO queueing under genuine page exhaustion."""
+import jax
+import numpy as np
+import pytest
+
+from conftest import STACK_KINDS, stack_config
+from repro.serving import FedAttnEngine, Request
+from repro.serving.scheduler import ContinuousBatchingScheduler
+
+
+def _engine(cfg, **kw):
+    from repro.models import build_model
+
+    params = build_model(cfg).init(jax.random.key(0))
+    return FedAttnEngine(cfg, params, **kw)
+
+
+@pytest.fixture(scope="module", params=STACK_KINDS)
+def stack_eng(request):
+    return _engine(stack_config(request.param))
+
+
+@pytest.fixture(scope="module")
+def attn_eng():
+    return _engine(stack_config("attn"))
+
+
+def _req(i, L, n_new, temp=0.0, vocab=97):
+    toks = jax.random.randint(jax.random.key(10 + i), (L,), 0, vocab)
+    rng = jax.random.key(100 + i) if temp > 0 else None
+    return Request(tokens=toks, n_new=n_new, temperature=temp, rng=rng)
+
+
+def _assert_same(dense, paged):
+    assert len(dense) == len(paged)
+    for i, (a, b) in enumerate(zip(dense, paged)):
+        np.testing.assert_array_equal(a.tokens, b.tokens, err_msg=f"req {i}")
+        np.testing.assert_array_equal(
+            a.logprobs, b.logprobs, err_msg=f"req {i}"
+        )
+
+
+def _prefix_reqs(cfg, sys_len, tails, n_new=3):
+    """Requests sharing a ``sys_len``-token system prompt + distinct tails."""
+    sys_prompt = np.asarray(
+        jax.random.randint(jax.random.key(1), (sys_len,), 0, cfg.vocab_size)
+    )
+    out = []
+    for i, tail_len in enumerate(tails):
+        tail = np.asarray(jax.random.randint(
+            jax.random.key(50 + i), (tail_len,), 0, cfg.vocab_size
+        ))
+        out.append(Request(
+            tokens=np.concatenate([sys_prompt, tail]).astype(np.int32),
+            n_new=n_new,
+        ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dense ↔ paged parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.stack_sweep
+def test_paged_matches_dense_exactly(stack_eng):
+    """Acceptance: token AND logprob parity between the dense slot pool and
+    the paged pool on a churning mixed-length greedy+sampled trace, over
+    every stack kind. The paged small-batch read path gathers pages into
+    the exact dense layout before the shared attention core, so agreement
+    is bitwise — any drift is a routing bug, not rounding."""
+    reqs = [
+        _req(0, 24, 8),
+        _req(1, 17, 5, temp=0.7),
+        _req(2, 30, 3),
+        _req(3, 9, 12, temp=0.9),
+        _req(4, 11, 2),
+    ]
+    dense = ContinuousBatchingScheduler(
+        stack_eng, max_slots=2, capacity=64, kv_layout="dense"
+    ).run(reqs)
+    paged = ContinuousBatchingScheduler(
+        stack_eng, max_slots=2, capacity=64, kv_layout="paged", page_size=16
+    ).run(reqs)
+    _assert_same(dense, paged)
+
+
+def test_paged_odd_page_size_and_padded_capacity(attn_eng):
+    """page_size that does not divide capacity: the working capacity pads
+    up to whole pages while ``capacity`` stays the admission bound.
+    Tokens still match dense at the ORIGINAL capacity exactly; logprobs
+    only to float tolerance, because the padded KV width (35 vs 30
+    masked-out columns) changes the softmax reduction order by design —
+    bitwise parity is pinned where widths agree
+    (test_paged_matches_dense_exactly)."""
+    reqs = [_req(0, 10, 4), _req(1, 16, 6, temp=0.5), _req(2, 7, 3)]
+    dense = ContinuousBatchingScheduler(
+        attn_eng, max_slots=2, capacity=30, kv_layout="dense"
+    ).run(reqs)
+    sched = ContinuousBatchingScheduler(
+        attn_eng, max_slots=2, capacity=30, kv_layout="paged", page_size=7
+    )
+    assert sched._cap == 35 and sched.capacity == 30
+    paged = sched.run(reqs)
+    for i, (a, b) in enumerate(zip(dense, paged)):
+        np.testing.assert_array_equal(a.tokens, b.tokens, err_msg=f"req {i}")
+        np.testing.assert_allclose(
+            a.logprobs, b.logprobs, rtol=1e-6, atol=1e-6, err_msg=f"req {i}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# the zero-recompile churn contract, under page tables
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.stack_sweep
+def test_paged_churn_zero_new_executables(stack_eng):
+    """Page tables are traced DATA: a churning trace (retire + re-admit
+    every step, page tables rewritten each admission) ends with ONE decode
+    executable and ONE slot-write executable, and a fresh same-bucket
+    trace through the same pool adds ZERO prefill executables."""
+    reqs = [_req(i, 10 + 3 * i, 2 + i, temp=0.4 * (i % 2)) for i in range(6)]
+    sched = ContinuousBatchingScheduler(
+        stack_eng, max_slots=3, capacity=64, page_size=16
+    )
+    res = sched.run(reqs)
+    cc = sched.compile_counts
+    assert cc["decode_step"] == 1, cc
+    assert cc["slot_write"] == 1, cc
+    assert len(res) == 6
+    n_prefill = cc["prefill"]
+    sched.run([_req(10 + i, 11 + 5 * i, 3 + i) for i in range(4)])
+    cc2 = sched.compile_counts
+    assert cc2["decode_step"] == 1 and cc2["prefill"] == n_prefill, cc2
+
+
+# ---------------------------------------------------------------------------
+# prefix cache: prefill-once shared prefixes
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_parity_and_prefill_once(attn_eng):
+    """Acceptance: on a shared-system-prompt trace each unique prefix is
+    prefilled exactly once — pinned by BOTH the executable count (one full
+    + one suffix prefill executable for the whole trace) and the prefilled
+    token count (first request pays the full prompt; every later request
+    pays only its suffix past the page-aligned shared boundary) — while
+    tokens/logprobs stay exactly equal to the dense pool's."""
+    cfg = stack_config("attn")
+    # 24 = 3 exact pages of 8 → the shared boundary sits at token 24
+    reqs = _prefix_reqs(cfg, sys_len=24, tails=[4, 4, 4, 4])
+    dense = ContinuousBatchingScheduler(
+        attn_eng, max_slots=1, capacity=64, kv_layout="dense"
+    ).run(reqs)
+
+    eng = _engine(cfg)  # fresh executable caches → exact compile pins
+    sched = ContinuousBatchingScheduler(
+        eng, max_slots=1, capacity=64, page_size=8, prefix_cache=True
+    )
+    _assert_same(dense, sched.run(reqs))
+
+    st = sched.pool_stats()
+    # prefix tokens prefilled exactly once: 28 for request 0, then 4/suffix
+    assert st["full_prefills"] == 1
+    assert st["suffix_prefills"] == 3
+    assert st["prefill_tokens"] == 28 + 3 * 4
+    assert st["prefix_hits"] == 3
+    assert st["prefix_tokens_reused"] == 3 * 24
+    # executable count pinned: ONE bucketed full prefill + ONE suffix
+    # prefill serve the whole trace
+    assert eng.compile_counts["prefill"] == 2
+
+
+def test_prefix_cache_copy_on_write_mid_page(attn_eng):
+    """A cached prefix ending mid-page (26 = 3 pages + 2 tokens of 8)
+    forces the copy-on-write path: the sharer's suffix lands in a private
+    copy of the boundary page while the cached original stays immutable —
+    later hits and the original's own decode both stay exact."""
+    cfg = stack_config("attn")
+    reqs = _prefix_reqs(cfg, sys_len=26, tails=[3, 5, 3, 5], n_new=4)
+    dense = ContinuousBatchingScheduler(
+        attn_eng, max_slots=2, capacity=64, kv_layout="dense"
+    ).run(reqs)
+    sched = ContinuousBatchingScheduler(
+        attn_eng, max_slots=2, capacity=64, page_size=8, prefix_cache=True
+    )
+    _assert_same(dense, sched.run(reqs))
+    st = sched.pool_stats()
+    assert st["prefix_hits"] >= 1
+    # every hit shares the 26-token terminal entry (mid-page → COW fork)
+    assert st["prefix_tokens_reused"] >= 26
+
+
+def test_prefix_cache_requires_paged_attn_only():
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousBatchingScheduler(
+            _engine(stack_config("attn")), kv_layout="dense",
+            prefix_cache=True,
+        )
+    with pytest.raises(ValueError, match="attention-only"):
+        ContinuousBatchingScheduler(
+            _engine(stack_config("rwkv")), prefix_cache=True
+        )
+
+
+# ---------------------------------------------------------------------------
+# memory: residency and exhaustion
+# ---------------------------------------------------------------------------
+
+
+def _kv_bytes(sched):
+    import jax as _jax
+
+    return sum(
+        l.size * l.dtype.itemsize for l in _jax.tree.leaves(sched.cache)
+    )
+
+
+def test_same_bytes_pool_admits_2x_residents(attn_eng):
+    """Acceptance: with the SAME pool bytes, the paged layout holds 2x the
+    concurrently-resident requests of the dense layout, because slots cost
+    page-table rows (bytes) instead of worst-case KV rows."""
+    reqs = [_req(i, 8, 4) for i in range(4)]  # 12-token spans → 2 pages
+    dense = ContinuousBatchingScheduler(
+        attn_eng, max_slots=2, capacity=32, kv_layout="dense"
+    )
+    paged = ContinuousBatchingScheduler(
+        attn_eng, max_slots=4, capacity=32, page_size=8, num_pages=8
+    )
+    assert _kv_bytes(paged) == _kv_bytes(dense)  # same physical KV rows
+    dres = dense.run(reqs)
+    pres = paged.run(reqs)
+    _assert_same(dres, pres)
+    assert dense.stats["peak_resident"] == 2
+    assert paged.stats["peak_resident"] == 4  # 2x from the same bytes
+    assert paged.pool_stats()["bytes_per_resident_token"] <= (
+        dense.pool_stats()["bytes_per_resident_token"]
+    )
+
+
+def test_page_exhaustion_queues_fifo(attn_eng):
+    """An oversubscribed pool (slots > pages can serve) admits what fits
+    and leaves the rest QUEUED — FIFO, no deadlock, and results still
+    exactly match an uncontended dense run."""
+    reqs = [_req(i, 8, 4) for i in range(4)]  # 2 pages each, 4 available
+    sched = ContinuousBatchingScheduler(
+        attn_eng, max_slots=4, capacity=32, page_size=8, num_pages=4
+    )
+    for r in reqs:
+        sched.submit(r)
+    assert sched.step()  # first tick: only 2 requests' pages fit
+    assert sched.n_active == 2 and sched.n_queued == 2
+    while not sched.done():
+        sched.step()
+    res = [sched.pop_result(i) for i in range(4)]
+    dense = ContinuousBatchingScheduler(
+        attn_eng, max_slots=4, capacity=32, kv_layout="dense"
+    ).run(reqs)
+    _assert_same(dense, res)

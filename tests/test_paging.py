@@ -1,0 +1,207 @@
+"""Property tests for the block-paged KV allocator (serving/paging.py):
+alloc/free/refcount round-trips, double-free detection, copy-on-write
+forks, prefix-cache refcount discipline, and the page-table ↔ linear-
+position round-trip at the boundary page sizes (1, pow2, pow2+1).
+
+Pure host-side properties — no JAX arrays, so the whole module runs in
+milliseconds. Uses hypothesis (or the vendored deterministic stub on
+air-gapped machines — conftest installs it before collection)."""
+import pytest
+from hypothesis import assume, given, settings
+from hypothesis import strategies as st
+
+from repro.serving.paging import (
+    PageAllocator, PrefixCache, linear_pos, page_split, padded_capacity,
+    pages_for,
+)
+
+# THE boundary page sizes: degenerate (1), the pow2 fast path, and a
+# pow2+1 to catch any &-mask / shift shortcut masquerading as div/mod.
+BOUNDARY_PAGE_SIZES = (1, 8, 9)
+
+
+# ---------------------------------------------------------------------------
+# page arithmetic
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6)
+@given(
+    pos=st.integers(min_value=0, max_value=10_000),
+    ps=st.sampled_from(BOUNDARY_PAGE_SIZES),
+)
+def test_page_split_linear_pos_round_trip(pos, ps):
+    page, off = page_split(pos, ps)
+    assert 0 <= off < ps
+    assert linear_pos(page, off, ps) == pos
+    # the page index agrees with the page count covering [0, pos]
+    assert page == pages_for(pos + 1, ps) - 1
+
+
+@settings(max_examples=6)
+@given(
+    n=st.integers(min_value=0, max_value=10_000),
+    ps=st.sampled_from(BOUNDARY_PAGE_SIZES),
+)
+def test_pages_for_is_ceil_div(n, ps):
+    got = pages_for(n, ps)
+    assert got * ps >= n  # covers n tokens
+    assert (got - 1) * ps < n or got == 0  # with no page to spare
+    assert padded_capacity(n, ps) == got * ps
+
+
+def test_page_arithmetic_exact_boundaries():
+    for ps in BOUNDARY_PAGE_SIZES:
+        assert pages_for(0, ps) == 0
+        assert pages_for(1, ps) == 1
+        assert pages_for(ps, ps) == 1
+        assert pages_for(ps + 1, ps) == 2
+        assert page_split(ps - 1, ps) == (0, ps - 1)
+        assert page_split(ps, ps) == (1, 0)
+
+
+# ---------------------------------------------------------------------------
+# allocator: alloc/free/refcount round-trips
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6)
+@given(
+    num_pages=st.integers(min_value=1, max_value=32),
+    takes=st.lists(st.integers(min_value=1, max_value=8), max_size=8),
+)
+def test_alloc_free_round_trip(num_pages, takes):
+    a = PageAllocator(num_pages)
+    held = []
+    for n in takes:
+        got = a.alloc(n)
+        if got is None:
+            # all-or-nothing: a refused alloc must not leak partial pages
+            assert a.free_pages < n
+            continue
+        assert len(got) == n
+        assert all(a.refcount(p) == 1 for p in got)
+        held.extend(got)
+    assert a.used_pages == len(held)
+    assert len(set(held)) == len(held)  # no page handed out twice
+    for p in held:
+        a.free(p)
+    assert a.used_pages == 0
+    assert a.free_pages == num_pages
+    # the drained pool serves a full-size alloc again
+    assert a.alloc(num_pages) is not None
+
+
+@settings(max_examples=6)
+@given(extra_refs=st.integers(min_value=1, max_value=5))
+def test_refcount_round_trip(extra_refs):
+    a = PageAllocator(4)
+    (p,) = a.alloc(1)
+    for _ in range(extra_refs):
+        a.incref(p)
+    assert a.refcount(p) == 1 + extra_refs
+    for _ in range(extra_refs):
+        a.free(p)
+    assert a.refcount(p) == 1
+    assert a.used_pages == 1  # still held by the original owner
+    a.free(p)
+    assert a.used_pages == 0
+
+
+def test_double_free_raises():
+    a = PageAllocator(2)
+    (p,) = a.alloc(1)
+    a.free(p)
+    with pytest.raises(ValueError, match="double free"):
+        a.free(p)
+    with pytest.raises(ValueError):
+        a.incref(p)  # resurrecting a freed page is also a bug
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write forks
+# ---------------------------------------------------------------------------
+
+
+def test_fork_sole_owner_shares():
+    a = PageAllocator(4)
+    (p,) = a.alloc(1)
+    page, needs_copy = a.fork(p)
+    assert page == p and needs_copy is False  # zero-copy share
+    assert a.refcount(p) == 2
+    a.free(p)
+    a.free(p)
+    assert a.used_pages == 0
+
+
+def test_fork_shared_page_copies():
+    a = PageAllocator(4)
+    (p,) = a.alloc(1)
+    a.incref(p)  # someone else holds it → the writer must copy
+    page, needs_copy = a.fork(p)
+    assert needs_copy is True and page is not None and page != p
+    assert a.refcount(p) == 2  # untouched
+    assert a.refcount(page) == 1  # the private copy
+    a.free(page)
+    a.free(p)
+    a.free(p)
+    assert a.used_pages == 0
+
+
+def test_fork_exhausted_pool():
+    a = PageAllocator(1)
+    (p,) = a.alloc(1)
+    a.incref(p)
+    page, needs_copy = a.fork(p)  # copy needed, but no page left
+    assert page is None and needs_copy is True
+    assert a.refcount(p) == 2  # failed fork must not leak a ref
+
+
+# ---------------------------------------------------------------------------
+# prefix cache refcount discipline
+# ---------------------------------------------------------------------------
+
+
+def _key_of(d: int) -> bytes:
+    return b"prompt:%d" % d
+
+
+@settings(max_examples=6)
+@given(ps=st.sampled_from(BOUNDARY_PAGE_SIZES))
+def test_prefix_insert_lookup_evict_round_trip(ps, ):
+    L = 3 * ps + max(1, ps // 2)  # three full pages + a partial tail
+    a = PageAllocator(16)
+    cache = PrefixCache(a, ps)
+    pages = a.alloc(pages_for(L, ps))
+    cache.insert(_key_of, L, pages)
+    assert len(cache) > 0
+    # the slot retires: entry refs alone keep the pages alive
+    for p in pages:
+        a.free(p)
+    assert a.used_pages == len(pages)
+    # longest cached prefix < L wins (the last prompt token always
+    # prefills so the admission has first-token logits)
+    hit = cache.lookup(_key_of, L)
+    assert hit is not None
+    d, run = hit
+    assert 0 < d < L
+    assert list(run) == pages[: pages_for(d, ps)]
+    assert cache.hits == 1 and cache.tokens_reused == d
+    # eviction drops every entry ref; the pool drains to empty
+    while cache.evict_lru():
+        pass
+    assert len(cache) == 0
+    assert a.used_pages == 0
+    assert cache.lookup(_key_of, L) is None  # and now it misses
+
+
+def test_prefix_lookup_never_returns_full_prompt():
+    # terminal entries exist (a longer prompt may extend them) but a
+    # same-length lookup must still leave >= 1 token to prefill
+    ps = 4
+    a = PageAllocator(8)
+    cache = PrefixCache(a, ps)
+    pages = a.alloc(2)
+    cache.insert(_key_of, 2 * ps, pages)
+    d, _ = cache.lookup(_key_of, 2 * ps)
+    assert d < 2 * ps
