@@ -20,6 +20,10 @@ Entry points audited (the compiled serving surface):
 * ``scheduler.decode_step``   — THE resident pooled decode step (traced
                                 with per-slot page tables when the pool
                                 is block-paged — the paged gather path)
+* ``scheduler.verify_step``   — the speculative multi-token verify step
+                                (pools built with ``spec_k > 0``; traced
+                                with per-slot draft blocks — same pool
+                                donation contract as decode_step)
 * ``scheduler.slot_write``    — the admission slot-scatter (page-table
                                 routed under the paged layout)
 * ``scheduler.admit_finish``  — the fused first-token sampler
@@ -285,6 +289,24 @@ def trace_scheduler_entries(scheduler) -> list[EntryPoint]:
         traced = fn.trace(*step_args)
     entries.append(EntryPoint("scheduler.decode_step", traced, (1,)))
 
+    if getattr(sched, "spec_k", 0) > 0:
+        # speculative verify: the same pooled forward at k+1 query
+        # positions per slot; draft tokens are traced data like the rest
+        with sched._spmd_scope():
+            fn = sched._verify_fn()
+            vargs = [
+                params, sched.cache, jnp.asarray(sched._tok),
+                jnp.zeros((sched.max_slots, sched.spec_k), jnp.int32),
+                jnp.asarray(sched._write_pos), jnp.asarray(sched._fold),
+                jnp.asarray(sched._qseg), jnp.asarray(sched._kvseg),
+                jnp.asarray(sched._temps), jnp.asarray(sched._sampled),
+                jnp.asarray(sched._key_data),
+            ]
+            if paged:
+                vargs.append(jnp.asarray(sched._pages_tbl))
+            traced = fn.trace(*vargs)
+        entries.append(EntryPoint("scheduler.verify_step", traced, (1,)))
+
     one = eng.model.init_cache(1, C, plan=sched._plan)
     fn = sched._slot_write_fn()
     if paged:
@@ -361,8 +383,12 @@ def audit_engine(
         if spmd is not None:
             n = spmd.mesh.shape[spmd.cache_axes[0]]
             cap += (-cap) % n
+        # attention-only stacks also audit the speculative verify entry
+        # (spec_k raises on recurrent stacks by design)
+        attn_only = all(s.kind == "attn" for s in engine.config.layer_specs())
         sched = ContinuousBatchingScheduler(
-            engine, max_slots=max_slots, capacity=cap
+            engine, max_slots=max_slots, capacity=cap,
+            spec_k=2 if attn_only else 0,
         )
         entries.extend(trace_scheduler_entries(sched))
     return audit_entries(

@@ -25,6 +25,10 @@ Declared budgets (the serving contract):
 
 * ``scheduler.decode_step`` = 1 — ONE resident pooled decode executable per
   scheduler, regardless of admission/retirement churn (PR 3's tentpole).
+* ``scheduler.verify_step`` = 1 — ONE speculative multi-token verify
+  executable per pool (``spec_k > 0``): draft tokens, per-slot frontiers
+  and ragged accept advances are traced data, so speculation inherits the
+  same zero-recompile pin (count stays 0 for non-speculative pools).
 * ``scheduler.slot_write`` = 1, ``scheduler.admit_finish`` = 1 — one
   scatter / one fused first-token sampler per pool.
 * ``engine.prefill`` / ``engine.decode`` — unbounded by default (the count

@@ -84,6 +84,36 @@ contract:
   which offset) lives ONLY in :mod:`repro.serving.paging` (lint rule
   FED006).
 
+Multi-token verify (speculative decoding)
+-----------------------------------------
+The scheduler's speculative verify step (``serving/scheduler._verify_fn``)
+is a plain instance of the 2-D vector contract — no new mask logic. Each
+pool slot ``b`` queries ``k+1`` positions spanning its write frontier:
+``positions[b] = frontier_b .. frontier_b + k`` (the last accepted token
+plus ``k`` draft candidates), with its publisher segment broadcast across
+the block. Visibility rules as they apply to that block:
+
+* **Within the block, causality orders the drafts.** Draft row ``i`` is
+  visible to draft queries ``> i`` of the same slot (its KV is written
+  before the block attends — the decode-layer contract) and hidden from
+  queries ``<= i`` by the ordinary ``q_pos >= kv_pos`` rule. That is
+  exactly the sequential decode's view, which is why accepted tokens are
+  bitwise those of non-speculative decode.
+* **Draft rows past the accept point are never visible afterwards.** The
+  scheduler advances the frontier by ``accept+1``, so the NEXT verify
+  block's write span ``[frontier', frontier'+k]`` starts at (covers) every
+  rejected row and overwrites it before any query can look that far;
+  causality hides rows beyond the live write span in the meantime, and a
+  retiring slot's whole row set drops behind the ``PAD_SEGMENT``
+  kv-segment sentinel (inactive slots are invisible, including to
+  themselves). No scrub pass, no new sentinel — the existing
+  segment-sentinel contract is the invalidation mechanism.
+* **Other slots never see draft rows at all** (segment masking between
+  slots is unchanged); under the paged pool draft rows land in pages the
+  slot owns solely — speculative headroom is allocated at admission
+  (``serving.paging.pages_for_request``) precisely so a draft write never
+  targets a shared or unmapped page.
+
 ``publisher_lo`` is the decode-time alternative to segment masking used by
 the sequence-sharded SPMD cache (flash-decoding): at a local (non-sync)
 layer only cache rows with ``kv_pos >= publisher_lo`` — the publisher's own

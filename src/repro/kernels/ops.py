@@ -201,7 +201,14 @@ def decode_attention(
     v_cache: jnp.ndarray,
     **kw,
 ) -> jnp.ndarray:
-    """Decode-step attention against a KV cache; same masking vocabulary."""
+    """Decode-step attention against a KV cache; same masking vocabulary.
+
+    ``S > 1`` is the multi-query verify form (speculative decoding): row
+    ``b`` queries positions ``frontier_b .. frontier_b + S - 1`` against a
+    cache whose matching rows were written immediately before this call,
+    with 2-D per-row ``q_pos``/``q_seg`` vectors per the kernels.core
+    contract — intra-block causality falls out of the ordinary
+    ``q_pos >= kv_pos`` rule, no speculative-specific masking exists."""
     kw.setdefault("chunk", 2048)
     return attention(q, k_cache, v_cache, **kw)
 
@@ -338,7 +345,10 @@ def paged_decode_attention(
     **kw,
 ) -> jnp.ndarray:
     """Decode-step attention through page tables; same masking vocabulary
-    as :func:`decode_attention`."""
+    as :func:`decode_attention`, including its ``S > 1`` multi-query
+    verify form — the page gather densifies (or chunk-streams) the pool
+    and the block then sees exactly the dense verify semantics, so
+    speculative paged decode is bitwise the dense-pool verify."""
     kw.setdefault("chunk", 2048)
     return paged_attention(q, pk, pv, pages, **kw)
 

@@ -84,10 +84,14 @@ def run_stream(engine: FedAttnEngine, config, args) -> None:
         max_new=args.n_new, rate_per_s=args.arrival_rate,
     )
     capacity = ContinuousBatchingScheduler.capacity_for(engine, reqs)
+    # spec_k > 0 replaces the fused multi-step scan with draft+verify
+    # ticks (the scheduler requires steps_per_admit == 1 there)
+    steps_per_admit = 1 if args.spec_k > 0 else args.steps_per_admit
     sched = ContinuousBatchingScheduler(
         engine, max_slots=args.max_slots, capacity=capacity,
-        steps_per_admit=args.steps_per_admit,
+        steps_per_admit=steps_per_admit,
         prefix_cache=args.prefix_cache,
+        spec_k=args.spec_k,
     )
     # warmup: compile the pool executables the timed run will hit, so it
     # measures steady-state serving, not compile time. Admission coalescing
@@ -97,6 +101,7 @@ def run_stream(engine: FedAttnEngine, config, args) -> None:
     # real arrival pattern (the widths backlog drains actually form).
     sched.run(reqs)
     sched.run(reqs, arrival_times=arrivals)
+    sched.latency_stats(reset=True)  # timed pass gets its own percentiles
     t0 = time.perf_counter()
     results = sched.run(reqs, arrival_times=arrivals)
     wall = time.perf_counter() - t0
@@ -107,7 +112,8 @@ def run_stream(engine: FedAttnEngine, config, args) -> None:
     print(f"stream: {len(reqs)} requests (Poisson rate {args.arrival_rate}/s), "
           f"pool {args.max_slots} slots x {capacity} pages"
           + (f" sharded over {shards} devices" if shards > 1 else "")
-          + f", steps_per_admit={args.steps_per_admit}")
+          + f", steps_per_admit={steps_per_admit}"
+          + (f", spec_k={args.spec_k}" if args.spec_k else ""))
     st = sched.pool_stats()
     prefix = ""
     if args.prefix_cache:
@@ -117,7 +123,21 @@ def run_stream(engine: FedAttnEngine, config, args) -> None:
                   f"({st['prefix_tokens_reused']} prompt tokens reused)")
     print(f"aggregate decode throughput: {total / wall:,.1f} tok/s "
           f"({total} tokens / {wall:.2f}s wall incl. arrivals){prefix}")
-    print(f"executables: {sched.compile_counts} (decode_step stays 1 — "
+    if st.get("tpot_n"):
+        # the per-request view — what speculative decoding moves: each
+        # request's own tokens per second (1/TPOT), not the pool total
+        print(f"per-request latency: ttft p50 {st['ttft_p50'] * 1e3:.1f} ms / "
+              f"p95 {st['ttft_p95'] * 1e3:.1f} ms; tpot p50 "
+              f"{st['tpot_p50'] * 1e3:.2f} ms/tok / p95 "
+              f"{st['tpot_p95'] * 1e3:.2f} ms/tok "
+              f"(p50 per-request {1.0 / st['tpot_p50']:,.1f} tok/s)")
+    if args.spec_k:
+        print(f"speculation: acceptance rate "
+              f"{st['spec_acceptance_rate']:.0%} "
+              f"({sched.stats['spec_accepted']}/{sched.stats['spec_drafted']} "
+              f"draft tokens over {sched.stats['verify_ticks']} verify ticks)")
+    print(f"executables: {sched.compile_counts} "
+          f"({'verify' if args.spec_k else 'decode'}_step stays 1 — "
           f"admission/retirement never recompiles)")
 
 
@@ -161,6 +181,14 @@ def main() -> None:
                     help="--stream decode sub-steps fused per scheduler "
                          "tick (amortizes dispatch; admission latency "
                          "grows by the same factor)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="--stream speculative decoding: draft K candidate "
+                         "tokens per slot per tick (n-gram prompt+output "
+                         "lookup drafter) and verify them in ONE "
+                         "multi-token forward — per-request latency drops "
+                         "by the acceptance rate at exact token/logprob "
+                         "parity (attention-only stacks; forces "
+                         "steps_per_admit=1)")
     ap.add_argument("--mesh", type=int, default=0, metavar="N",
                     help="--stream SPMD mode: shard the KV slot pool's "
                          "capacity dim over an N-way 'model' mesh and run "

@@ -711,6 +711,19 @@ class TransformerLM:
         (:func:`cache_pspecs` gives the layout) — attention layers switch
         to the flash-decoding shard_map path, everything else is unchanged.
 
+        Multi-token decode-verify (speculative decoding): ``S_new > 1``
+        with a vector ``cache_len`` is one verify tick — row ``b`` carries
+        the query block ``[last_tok, d_1..d_k]`` at per-row positions
+        ``cache_len[b] .. cache_len[b]+k``. Every layer writes all
+        ``S_new`` KV rows BEFORE attending (the decode-layer contract in
+        models/attention.py), so position ``i``'s logits see the draft
+        rows ``< i`` of the same block while causality hides the rows
+        ``> i``; rejected rows need no cleanup — the caller's next verify
+        block starts at the accepted frontier and overwrites them before
+        any later query can reach them. Holds identically in ``loop`` and
+        ``scan`` modes, dense and paged caches, single-device and SPMD
+        (serving/scheduler.py ``_verify_fn`` is the canonical caller).
+
         mode='scan' scans over the layer pattern instead of tracing every
         layer: requires a :class:`ScanPlan` (periodic sync schedule), params
         in scan form (``stack_params``) and the cache from

@@ -16,6 +16,7 @@ _EXPORTS = {
     "Request": "repro.serving.scheduler",
     "PageAllocator": "repro.serving.paging",
     "PrefixCache": "repro.serving.paging",
+    "NGramDrafter": "repro.serving.spec",
 }
 
 __all__ = sorted(_EXPORTS)

@@ -701,6 +701,49 @@ def _token_logprob(logits: jnp.ndarray, tok: jnp.ndarray) -> jnp.ndarray:
     return jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0]
 
 
+def _verify_candidates(logits, draft, temps, keys, fold, sampled):
+    """Candidate tokens + accept lengths for the pool's speculative verify
+    step (scheduler._verify_fn — the verify executable family; jitted with
+    the same ``_donation_for_backend`` pool-donation wiring as the
+    non-speculative step).
+
+    ``logits`` is ``(S, k+1, V)`` from ONE multi-token decode forward over
+    the query block ``[last_tok, d_1 .. d_k]`` at positions ``frontier ..
+    frontier+k``: row ``i`` scores the token that follows the prefix
+    extended by ``d_1..d_i``. ``cand[s, i]`` is the token the
+    NON-speculative schedule would emit at that point — greedy rows take
+    the raw-logit argmax, sampled rows draw ``categorical(fold_in(key,
+    fold+i), logits/temp)``, the exact per-token key schedule of
+    ``_step_fn``/generate — which is what makes token-exact acceptance
+    lossless for sampled streams too (an accepted draft IS the token the
+    sequential run would have drawn).  ``accept[s]`` counts the leading
+    draft tokens equal to their candidate (``cumprod`` of the match mask),
+    so the tick emits ``cand[s, :accept[s]+1]``: the accepted drafts plus
+    the one correction/bonus token whose logits are already in hand.
+    ``lps`` are the untempered log-softmax logprobs of every candidate
+    (same definition as :func:`_token_logprob`).
+    """
+    k1 = logits.shape[1]
+    greedy = jnp.argmax(logits, axis=-1)
+    steps = fold[:, None] + jnp.arange(k1, dtype=fold.dtype)[None, :]
+    folded = jax.vmap(
+        lambda key, st: jax.vmap(lambda s: jax.random.fold_in(key, s))(st)
+    )(keys, steps)
+
+    def _cat_row(keys_row, logits_row, t):
+        return jax.vmap(
+            lambda r, l: jax.random.categorical(r, l.astype(jnp.float32) / t)
+        )(keys_row, logits_row)
+
+    cat = jax.vmap(_cat_row)(folded, logits, temps)
+    cand = jnp.where(sampled[:, None], cat, greedy)
+    match = (draft == cand[:, :-1]).astype(jnp.int32)
+    accept = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    lps = jnp.take_along_axis(lp, cand[..., None], axis=-1)[..., 0]
+    return cand, lps, accept
+
+
 def _capacity(cache) -> int:
     for c in cache:
         if "k" in c:

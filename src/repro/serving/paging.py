@@ -61,6 +61,26 @@ def padded_capacity(capacity: int, page_size: int) -> int:
     return pages_for(capacity, page_size) * page_size
 
 
+def pages_for_request(L: int, n_new: int, page_size: int, *, spec_k: int = 0):
+    """Pages backing one admitted request: the prompt+generation span plus
+    speculative write headroom.
+
+    Non-speculative decode writes KV at positions ``L .. L+n_new-2`` (the
+    final token's KV is never read), so ``pages_for(L + n_new)`` covers it.
+    With ``spec_k > 0`` the verify step writes ``spec_k + 1`` rows per tick
+    starting at the slot's frontier; the worst-case last tick starts at
+    ``L + n_new - 2``, reaching position ``L + n_new - 1 + (spec_k - 1)``
+    — allocate through it so every speculative write (accepted OR later
+    overwritten) lands in an owned page and the verify math stays bitwise
+    identical to sequential decode at every query position. The surplus
+    pages travel with the slot and are reclaimed with the rest at retire.
+    """
+    span = L + n_new
+    if spec_k > 0:
+        span += spec_k - 1
+    return pages_for(span, page_size)
+
+
 class PageAllocator:
     """Refcounted free-list allocator over ``num_pages`` physical pages.
 

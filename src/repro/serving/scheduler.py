@@ -60,6 +60,30 @@ throughput — request interleaving over a shared KV pool:
   traced arguments, so slot churn never recompiles under the mesh either
   (parity + compile counts pinned in tests/test_spmd.py).
 
+* **Per-slot speculative decoding** (opt-in ``spec_k > 0``, attention-only
+  stacks) — a host-side drafter (:mod:`repro.serving.spec`; stock
+  prompt+output n-gram lookup, no extra weights) proposes ``k`` candidate
+  tokens per slot per tick, and ONE bucketed jitted *verify* step scores
+  all ``k+1`` positions of every slot in a single forward: each slot
+  carries the multi-token query block ``[last_tok, d_1..d_k]`` at traced
+  per-row positions ``frontier..frontier+k`` — the same 2-D per-row
+  pos/seg visibility contract of :mod:`repro.kernels.core` that bucketed
+  prefill rides, so verify reuses THE shared attention core with no new
+  mask logic. Per-slot accept lengths (0..k, token-exact acceptance
+  against the non-speculative sampling schedule) become ragged frontier
+  advances: slot ``s`` moves by ``accept+1`` while its neighbor moves by
+  1. Rejected draft KV rows need no scrub — the next tick's ``k+1``-row
+  write block starts at the accepted frontier and overwrites every
+  rejected row before any query can reach it (decode layers write KV
+  before attending; causality hides rows past the live write block), and
+  a retiring slot's rows vanish behind the ``PAD_SEGMENT`` kv-segment
+  sentinel exactly as in non-speculative retirement. Page allocation
+  grows by the worst-case speculative span (paging.pages_for_request)
+  and the surplus is reclaimed at retire. Parity is exact: accepted
+  tokens ARE the tokens the sequential schedule would emit, so
+  speculative pooled decode is token- and logprob-identical to
+  ``spec_k=0`` (pinned in tests/test_spec_decode.py).
+
 Per-request parity: a request scheduled through the pool produces the same
 tokens/logprobs as a standalone ``engine.generate`` call with the same
 seed/partition — decode-step math is row-independent (attention, FFN, norm
@@ -94,7 +118,9 @@ from repro.models import transformer as T
 from repro.serving import paging
 from repro.serving.engine import (
     GenerationResult, _donation_for_backend, _next_pow2, _token_logprob,
+    _verify_candidates,
 )
+from repro.serving.spec import resolve_drafter
 
 
 @dataclass
@@ -125,6 +151,8 @@ class _Slot:
     logprobs: list = field(default_factory=list)
     comm_bytes: float = 0.0
     pages: list = field(default_factory=list)  # owned page refs (paged layout)
+    t_start: float = 0.0  # effective request start (submit/arrival clock)
+    t_first: float = 0.0  # first token available (TTFT = t_first - t_start)
 
 
 class ContinuousBatchingScheduler:
@@ -161,6 +189,17 @@ class ContinuousBatchingScheduler:
       prefix_cache: opt-in (paged + attention-only stacks): admitted
         prompts publish their page runs; later admissions sharing a cached
         prefix map those pages copy-free and prefill only the suffix.
+      spec_k: speculative draft length. ``0`` (default) is ordinary
+        one-token-per-tick pooled decode; ``k > 0`` drafts ``k`` candidate
+        tokens per slot per tick and verifies them in ONE multi-token
+        forward, advancing each slot's frontier by its accept length + 1
+        (token/logprob parity with ``spec_k=0`` is exact). Attention-only
+        stacks; requires ``steps_per_admit == 1`` (each tick drafts on the
+        host between verifies — and the verify already advances up to
+        ``k+1`` tokens per dispatch, subsuming what step fusion buys).
+      drafter: ``'ngram'`` (default — :class:`repro.serving.spec.
+        NGramDrafter`) or any object implementing the drafter protocol
+        (``begin``/``draft``/``update``, see :mod:`repro.serving.spec`).
     """
 
     def __init__(
@@ -174,6 +213,8 @@ class ContinuousBatchingScheduler:
         page_size: int = 16,
         num_pages: Optional[int] = None,
         prefix_cache: bool = False,
+        spec_k: int = 0,
+        drafter=None,
     ):
         if max_slots < 1 or capacity < 2 or steps_per_admit < 1:
             raise ValueError("max_slots >= 1, capacity >= 2, steps_per_admit >= 1")
@@ -181,6 +222,28 @@ class ContinuousBatchingScheduler:
             raise ValueError("kv_layout must be 'paged' or 'dense'")
         if page_size < 1:
             raise ValueError("page_size >= 1")
+        if spec_k < 0:
+            raise ValueError("spec_k >= 0")
+        if spec_k > 0:
+            if not all(s.kind == "attn" for s in engine.config.layer_specs()):
+                raise NotImplementedError(
+                    "speculative decoding (spec_k > 0) requires an "
+                    "attention-only stack: verify-then-rollback rejects a "
+                    "draft by invalidating its KV rows, but recurrent "
+                    "(SSM/hybrid) layers fold every token into a carried "
+                    "state with no per-position KV to invalidate — "
+                    "rolling back to the accepted prefix would need a "
+                    "recurrent-state checkpoint per draft position. Run "
+                    "SSM/hybrid pools with spec_k=0"
+                )
+            if steps_per_admit != 1:
+                raise ValueError(
+                    "spec_k > 0 requires steps_per_admit == 1: the drafter "
+                    "runs on the host between verify ticks, and one verify "
+                    "already advances up to spec_k+1 tokens per dispatch"
+                )
+        self.spec_k = spec_k
+        self._drafter = resolve_drafter(drafter) if spec_k > 0 else None
         self.engine = engine
         self.max_slots = max_slots
         self.capacity = capacity
@@ -274,7 +337,16 @@ class ContinuousBatchingScheduler:
             "prefill_tokens": 0,
             "peak_resident": 0,
             "peak_resident_tokens": 0,
+            # speculative counters (stay 0 for spec_k=0 pools):
+            # acceptance rate = spec_accepted / spec_drafted
+            "spec_drafted": 0,
+            "spec_accepted": 0,
+            "verify_ticks": 0,
         }
+        # per-request latency samples (seconds), appended at first token /
+        # retirement — see latency_stats()
+        self._lat = {"ttft": [], "tpot": []}
+        self._submit_t: dict[int, float] = {}
         self._queue: deque = deque()  # (req_id, Request, arrival_time|None)
         self._results: dict[int, GenerationResult] = {}
         self._next_id = 0
@@ -293,13 +365,17 @@ class ContinuousBatchingScheduler:
         self._key_data = np.zeros((S,) + kd.shape, kd.dtype)
 
         self._step_fns: dict = {}
+        self._verify = None
+        self._draft_state: list = [None] * S
         self._write_fn = None
         self._admit_fn = None
         # executable budgets (repro.analysis.trace_guard): ONE resident
-        # decode step / slot scatter / admit sampler per pool — THE
-        # zero-recompile churn contract, enforceable via trace_guard.enforce
+        # decode step / verify step / slot scatter / admit sampler per
+        # pool — THE zero-recompile churn contract, enforceable via
+        # trace_guard.enforce
         self._trace_guards = {
             "decode_step": TraceGuard("scheduler.decode_step", budget=1),
+            "verify_step": TraceGuard("scheduler.verify_step", budget=1),
             "slot_write": TraceGuard("scheduler.slot_write", budget=1),
             "admit_finish": TraceGuard("scheduler.admit_finish", budget=1),
         }
@@ -342,10 +418,12 @@ class ContinuousBatchingScheduler:
     @property
     def compile_counts(self) -> dict:
         """Executable counts — the recompile metric. ``decode_step`` must
-        stay at 1 across any trace (per (pool shape, steps_per_admit))."""
+        stay at 1 across any trace (per (pool shape, steps_per_admit));
+        ``verify_step`` likewise for speculative pools (0 when spec_k=0)."""
         return {
             "prefill": self.engine.compile_counts["prefill"],
             "decode_step": self._trace_guards["decode_step"].count,
+            "verify_step": self._trace_guards["verify_step"].count,
             "slot_write": self._trace_guards["slot_write"].count,
         }
 
@@ -382,6 +460,7 @@ class ContinuousBatchingScheduler:
         req = dataclasses.replace(request, tokens=toks)
         rid = self._next_id
         self._next_id += 1
+        self._submit_t[rid] = time.perf_counter()
         self._queue.append((rid, req, arrival_time))
         return rid
 
@@ -486,13 +565,19 @@ class ContinuousBatchingScheduler:
         adm = {
             "rid": rid, "req": req, "ctx": ctx, "L": L, "d": 0,
             "pages": [], "dst": None, "src": None, "table": None,
-            "key_of": None,
+            "key_of": None, "t0": None,
         }
         if not self._paged:
             return adm
         ps = self.page_size
         N = self.num_pages
-        n_total = paging.pages_for(L + req.n_new, ps)
+        # speculative pools allocate worst-case draft headroom up front
+        # (capped at the table width — writes past the working capacity
+        # drop at the scatter); surplus pages come back at retire
+        n_total = min(
+            paging.pages_for_request(L, req.n_new, ps, spec_k=self.spec_k),
+            self._pp,
+        )
         d, run = 0, ()
         if self._prefix is not None:
             adm["key_of"] = self._prefix_key(req, ctx)
@@ -574,6 +659,33 @@ class ContinuousBatchingScheduler:
             out["prefix_evictions"] = self._prefix.evictions
             out["prefix_tokens_reused"] = self._prefix.tokens_reused
             out["prefix_entries"] = len(self._prefix)
+        if self.spec_k > 0:
+            out["spec_k"] = self.spec_k
+            out["spec_acceptance_rate"] = (
+                self.stats["spec_accepted"] / max(1, self.stats["spec_drafted"])
+            )
+        out.update(self.latency_stats())
+        return out
+
+    def latency_stats(self, *, reset: bool = False) -> dict:
+        """Per-request latency percentiles (seconds) over every request
+        retired so far: ``ttft`` — time to first token, from the later of
+        submission and scheduled arrival to the admission prefill's output;
+        ``tpot`` — time per output token after the first, retirement minus
+        first-token time over ``n_new - 1`` (only requests with
+        ``n_new > 1`` contribute). Per-request decode speed is
+        ``1 / tpot`` — the metric speculative decoding moves, reported by
+        ``launch/serve.py --stream`` next to aggregate tok/s.
+        ``reset=True`` drains the samples (benchmarks measure per-pass)."""
+        out: dict = {}
+        for name, xs in self._lat.items():
+            out[f"{name}_n"] = len(xs)
+            if xs:
+                out[f"{name}_p50"] = float(np.percentile(xs, 50))
+                out[f"{name}_p95"] = float(np.percentile(xs, 95))
+        if reset:
+            for xs in self._lat.values():
+                xs.clear()
         return out
 
     def _admit_group(self, slots: list[int], adms: list, Lp: int,
@@ -686,6 +798,7 @@ class ContinuousBatchingScheduler:
 
         tok0 = np.asarray(tok0)
         lp0 = np.asarray(lp0)
+        t_now = time.perf_counter()  # tok0 materialized ⇒ first token exists
         for i, a in enumerate(adms):
             slot, ctx, req, rid = slots[i], a["ctx"], a["req"], a["rid"]
             L, d = a["L"], a["d"]
@@ -699,6 +812,8 @@ class ContinuousBatchingScheduler:
             self._key_data[slot] = key_data[i]
             if self._paged:
                 self._pages_tbl[slot] = a["table"]
+            t0 = a["t0"] if a["t0"] is not None else t_now
+            self._lat["ttft"].append(t_now - t0)
             self._slots[slot] = _Slot(
                 req_id=rid,
                 real_len=L,
@@ -710,7 +825,14 @@ class ContinuousBatchingScheduler:
                     eng.config.n_kv_heads, eng.config.head_dim
                 ),
                 pages=a["pages"],
+                t_start=t0,
+                t_first=t_now,
             )
+            if self.spec_k > 0:
+                # draft state sees the prompt plus the first emitted token
+                self._draft_state[slot] = self._drafter.begin(
+                    list(np.asarray(req.tokens)) + [int(tok0[i])]
+                )
             if suffix:
                 self.stats["suffix_prefills"] += 1
                 self.stats["prefill_tokens"] += L - d
@@ -737,7 +859,12 @@ class ContinuousBatchingScheduler:
             logprobs=np.asarray(occ.logprobs, np.float64)[None, : occ.n_new],
             prefill_comm_bytes=occ.comm_bytes,
         )
+        if occ.n_new > 1:
+            self._lat["tpot"].append(
+                (time.perf_counter() - occ.t_first) / (occ.n_new - 1)
+            )
         self._slots[slot] = None
+        self._draft_state[slot] = None
         # hide the freed pages from every query until the next occupant's
         # prefill rewrites the row
         self._kvseg[slot] = PAD_SEGMENT
@@ -885,6 +1012,57 @@ class ContinuousBatchingScheduler:
         self._step_fns[key] = fn
         return fn
 
+    def _verify_fn(self):
+        """Build (or fetch) THE speculative verify executable: one
+        multi-token decode forward scoring all ``spec_k + 1`` query
+        positions of every slot at once. Static key = (pool shape, spec_k)
+        only — the draft tokens, per-slot frontiers and accept state are
+        all traced, so slot churn and ragged advances never recompile
+        (budget: ``verify_step = 1`` per pool, same contract as
+        ``decode_step``). Each slot's query block ``[last_tok, d_1..d_k]``
+        rides per-row 2-D positions ``frontier..frontier+k`` and broadcast
+        publisher segments — the bucketed-prefill visibility contract of
+        kernels.core, no new mask logic. KV for all k+1 rows is written
+        before the attention reads (the decode-layer contract), which is
+        also what makes rejected rows harmless: the next tick's write
+        block starts at the accepted frontier and re-covers them before
+        any later query can look that far."""
+        if self._verify is not None:
+            return self._verify
+
+        eng = self.engine
+        model, backend = eng.model, eng.backend
+        mode, plan = eng.layers_mode, eng._plan
+        proto = eng._proto_ctx(self._cap)
+        kv_pos = jnp.arange(self._cap, dtype=jnp.int32)
+        offs = jnp.arange(self.spec_k + 1, dtype=jnp.int32)
+
+        def run(params, cache, tok, draft, write_pos, fold, q_seg, kv_seg,
+                temps, sampled, key_data, pages=None):
+            keys = jax.random.wrap_key_data(key_data)
+            inp = jnp.concatenate([tok[:, None], draft], axis=1)  # (S, k+1)
+            pos = write_pos[:, None] + offs[None, :]
+            dctx = dataclasses.replace(
+                proto,
+                positions=pos,
+                segments=jnp.broadcast_to(q_seg[:, None], pos.shape),
+                kv_positions=kv_pos, kv_segments=kv_seg,
+                contributed=None,
+            )
+            logits, cache = model.decode_step(
+                params, cache, inp, write_pos, proto,
+                backend=backend, dctx=dctx, mode=mode, plan=plan,
+                pages=pages,
+            )  # (S, k+1, V) — every position's logits, not just the last
+            cand, lps, accept = _verify_candidates(
+                logits, draft, temps, keys, fold, sampled
+            )
+            return cand, lps, accept, self._constrain_cache(cache)
+
+        self._trace_guards["verify_step"].charge(self.spec_k)
+        self._verify = jax.jit(run, donate_argnums=_donation_for_backend((1,)))
+        return self._verify
+
     # -- the scheduler tick -----------------------------------------------------
 
     def step(self, *, now: Optional[float] = None) -> bool:
@@ -906,6 +1084,12 @@ class ContinuousBatchingScheduler:
                 # retirements free pages; admission stays FIFO
                 break
             self._queue.popleft()
+            # latency clock: a request "starts" at the later of submission
+            # and its scheduled arrival (trace replays submit up front)
+            t0 = self._submit_t.pop(rid, None)
+            if t0 is None:
+                t0 = time.perf_counter()
+            adm["t0"] = t0 if at is None else max(t0, at)
             batch.append(adm)
         if batch:
             groups: dict = {}
@@ -933,8 +1117,21 @@ class ContinuousBatchingScheduler:
         if self.n_active == 0:
             return False
 
+        if self.spec_k > 0:
+            # host-side drafting: inactive rows keep zeros (their verify
+            # compute is discarded behind the PAD_SEGMENT mask anyway)
+            draft = np.zeros((self.max_slots, self.spec_k), np.int32)
+            for s, occ in enumerate(self._slots):
+                if occ is not None:
+                    draft[s] = self._drafter.draft(
+                        self._draft_state[s], self.spec_k
+                    )
+
         with self._spmd_scope():
-            fn = self._step_fn(self.steps_per_admit)
+            fn = (
+                self._verify_fn() if self.spec_k > 0
+                else self._step_fn(self.steps_per_admit)
+            )
             if self._slot_args is None:
                 # wide / admission-rate inputs: re-uploaded only when the
                 # slot set changed, not every tick
@@ -946,12 +1143,48 @@ class ContinuousBatchingScheduler:
                     (jnp.asarray(self._pages_tbl),) if self._paged else ()
                 )
             q_seg, kv_seg, temps, sampled, key_data = self._slot_args[:5]
-            toks, lps, self.cache = fn(
-                self.engine._run_params(), self.cache,
-                jnp.asarray(self._tok), jnp.asarray(self._write_pos),
-                jnp.asarray(self._fold), q_seg, kv_seg, temps, sampled,
-                key_data, *self._slot_args[5:],
-            )
+            if self.spec_k > 0:
+                cand, lps, acc, self.cache = fn(
+                    self.engine._run_params(), self.cache,
+                    jnp.asarray(self._tok), jnp.asarray(draft),
+                    jnp.asarray(self._write_pos), jnp.asarray(self._fold),
+                    q_seg, kv_seg, temps, sampled, key_data,
+                    *self._slot_args[5:],
+                )
+            else:
+                toks, lps, self.cache = fn(
+                    self.engine._run_params(), self.cache,
+                    jnp.asarray(self._tok), jnp.asarray(self._write_pos),
+                    jnp.asarray(self._fold), q_seg, kv_seg, temps, sampled,
+                    key_data, *self._slot_args[5:],
+                )
+
+        if self.spec_k > 0:
+            # ragged frontier advance: slot s moves by accept+1 (its
+            # accepted drafts plus the correction/bonus token), its
+            # neighbor by whatever IT accepted — all from ONE verify call
+            cand = np.asarray(cand)  # (S, k+1)
+            lps = np.asarray(lps)
+            acc = np.asarray(acc)  # (S,) accept lengths in [0, k]
+            self.stats["verify_ticks"] += 1
+            for s, occ in enumerate(self._slots):
+                if occ is None:
+                    continue
+                a = int(acc[s])
+                take = min(a + 1, occ.n_new - occ.n_emitted)
+                occ.tokens.extend(int(t) for t in cand[s, :take])
+                occ.logprobs.extend(float(l) for l in lps[s, :take])
+                occ.n_emitted += take
+                self._tok[s] = int(cand[s, take - 1])
+                self._write_pos[s] += take
+                self._fold[s] += take
+                self._drafter.update(self._draft_state[s], cand[s, :take])
+                self.stats["spec_drafted"] += self.spec_k
+                self.stats["spec_accepted"] += min(a, take)
+                if occ.n_emitted >= occ.n_new:
+                    self._retire(s)
+            return True
+
         toks = np.asarray(toks)
         lps = np.asarray(lps)
         k = self.steps_per_admit

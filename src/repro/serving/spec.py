@@ -1,0 +1,89 @@
+"""Drafters for speculative decoding in the resident pool.
+
+Speculative decoding splits every emitted token into *draft* (cheap guess)
+and *verify* (one real forward). The scheduler owns the verify side — ONE
+bucketed jitted multi-token step over all slots (scheduler._verify_fn);
+this module owns the draft side: per-slot host state that proposes ``k``
+candidate continuation tokens per tick. Drafters are pure host objects —
+no parameters, no device arrays — so proposing is free relative to a
+layer pass, and a wrong draft costs nothing but the pool falling back to
+its ordinary one-token-per-tick rate for that slot.
+
+Drafter protocol (duck-typed — any object with these three methods):
+
+``begin(tokens) -> state``
+    Per-slot draft state from the request's prompt plus its first emitted
+    token. Called at admission; the state object is owned by the slot and
+    dropped at retirement.
+``draft(state, k) -> np.ndarray  # (k,) int32``
+    Propose the next ``k`` tokens. Always returns exactly ``k`` entries —
+    pad with a repeat when the heuristic has nothing better; a padded
+    guess that fails verification just yields accept-length 0 (the tick
+    still emits one true token, exactly like non-speculative decode).
+``update(state, tokens) -> None``
+    Observe the tokens the verify step actually emitted (accepted drafts
+    plus the one correction/bonus token) so later drafts see true output.
+
+The stock drafter is :class:`NGramDrafter` — the prompt+output n-gram
+lookup from the lookahead/prompt-lookup family: find the most recent
+earlier occurrence of the trailing n-gram of (prompt ++ emitted output)
+and propose the tokens that followed it. No extra weights, exact on
+repetitive spans (copied code, templated text, self-repeating greedy
+tails), and per the heterogeneous-federation motivation (PAPERS.md) cheap
+enough for any edge participant to run locally.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class NGramDrafter:
+    """Prompt+output n-gram lookup drafter.
+
+    ``draft`` scans the slot's token history (prompt + emitted tokens) for
+    the most recent earlier occurrence of its trailing n-gram, longest
+    ``n`` first (``max_ngram`` down to ``min_ngram``), and proposes the
+    ``k`` tokens that followed that occurrence. No match ⇒ repeat the last
+    token (a period-1 guess; wrong guesses cost nothing but the fallback
+    one-token tick). State per slot is a plain list of ints.
+    """
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError("need 1 <= min_ngram <= max_ngram")
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+
+    def begin(self, tokens) -> list:
+        return [int(t) for t in np.asarray(tokens).reshape(-1)]
+
+    def draft(self, state: list, k: int) -> np.ndarray:
+        n_hist = len(state)
+        hi = min(self.max_ngram, n_hist - 1)
+        for n in range(hi, self.min_ngram - 1, -1):
+            pat = state[-n:]
+            for i in range(n_hist - n - 1, -1, -1):
+                if state[i : i + n] == pat:
+                    cont = state[i + n : i + n + k]
+                    out = np.empty(k, np.int32)
+                    out[: len(cont)] = cont
+                    out[len(cont) :] = cont[-1]
+                    return out
+        return np.full(k, state[-1] if state else 0, np.int32)
+
+    def update(self, state: list, tokens) -> None:
+        state.extend(int(t) for t in np.asarray(tokens).reshape(-1))
+
+
+def resolve_drafter(drafter):
+    """Scheduler knob → drafter instance: None/'ngram' ⇒ the stock
+    :class:`NGramDrafter`; anything else must already implement the
+    drafter protocol (begin/draft/update) and is used as-is."""
+    if drafter is None or drafter == "ngram":
+        return NGramDrafter()
+    for m in ("begin", "draft", "update"):
+        if not callable(getattr(drafter, m, None)):
+            raise ValueError(
+                f"drafter must implement begin/draft/update (missing {m!r})"
+            )
+    return drafter
