@@ -25,18 +25,23 @@ def run(seq_len: int = 32_768, n_participants: int = 16) -> list[dict]:
                  "note": "state-handoff"}
             )
             continue
-        for h_scale, ratio in ((1, 1.0), (1, 0.25), (2, 1.0)):
+        for h_scale, ratio, kv_quant in (
+            (1, 1.0, "none"), (1, 0.25, "none"), (2, 1.0, "none"),
+            (1, 1.0, "int8"), (1, 0.25, "int8"),
+        ):
             fed = FedAttnConfig(
                 n_participants=n_participants,
                 sync_interval=cfg.fedattn.sync_interval * h_scale,
                 kv_exchange_ratio=ratio,
                 kv_selection="strided",  # deterministic (no rng needed)
+                kv_quant=kv_quant,
             )
             ctx = FedAttnContext.build(fed, cfg.n_layers, seq_len)
             b = ctx.comm_bytes_per_participant(cfg.n_kv_heads, cfg.head_dim)
+            name = arch if kv_quant == "none" else f"{arch}_q8"
             rows.append(
-                {"arch": arch, "H": fed.sync_interval, "ratio": ratio,
-                 "bytes": b, "note": f"kv={cfg.n_kv_heads}h"}
+                {"arch": name, "H": fed.sync_interval, "ratio": ratio,
+                 "bytes": b, "note": f"kv={cfg.n_kv_heads}h;quant={kv_quant}"}
             )
     return rows
 

@@ -367,6 +367,83 @@ def audit_entries(
     return issues
 
 
+def audit_quant_pool(
+    scheduler, *, backend: Optional[str] = None,
+    max_const_bytes: int = MAX_CONST_BYTES,
+) -> list[AuditIssue]:
+    """Audit a quantized-pool scheduler's compiled surface.
+
+    On top of the standard per-entry checks (f64/callback/donation/consts —
+    the donation contract is UNCHANGED by quantization: scales ride in the
+    same cache operand), verifies that the traced decode step and slot
+    write actually see the pool in its quantized storage dtype: every
+    ``pk``/``pv`` leaf must enter the jaxpr as an int8 (or fp8) aval of
+    the pool's rank. A compute-dtype pool aval means something upstream
+    dequantized OUTSIDE the gather — the memory win silently evaporated.
+    The sync-layer exchange codec is audited through a jitted trace of
+    ``core.aggregation.quantized_exchange_roundtrip``: codes must cross
+    the trace in the storage dtype, and no f64 sneaks into the rescale.
+    """
+    from repro.serving import quant
+
+    sched = scheduler
+    mode = getattr(sched, "kv_quant", None)
+    if mode is None:
+        return [AuditIssue(
+            "quant_pool", "storage",
+            "scheduler has no kv_quant mode — audit_quant_pool only applies "
+            "to quantized pools",
+        )]
+    sd = quant.storage_dtype(mode)
+    entries = trace_scheduler_entries(sched)
+    issues = audit_entries(
+        entries, backend=backend, max_const_bytes=max_const_bytes
+    )
+
+    pool_rank = 4 if sched._plan is None else 5
+    for e in entries:
+        if e.name not in ("scheduler.decode_step", "scheduler.slot_write",
+                          "scheduler.verify_step"):
+            continue
+        invars = e.traced.jaxpr.jaxpr.invars
+        n_pool = sum(
+            1 for v in invars
+            if getattr(v.aval, "dtype", None) == sd
+            and getattr(v.aval, "ndim", 0) >= pool_rank
+        )
+        if n_pool == 0:
+            issues.append(AuditIssue(
+                e.name, "storage",
+                f"no {sd} pool buffer of rank >= {pool_rank} among the "
+                "traced operands — the pool is entering the executable "
+                "dequantized (the quant contract dequantizes INSIDE the "
+                "gather, serving/quant.py)",
+            ))
+
+    from repro.core.aggregation import quantized_exchange_roundtrip
+
+    cfg = sched.engine.config
+    kv = jnp.zeros((1, 8, cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+    traced = jax.jit(
+        lambda k, v: quantized_exchange_roundtrip(k, v, mode)
+    ).trace(kv, kv)
+    issues.extend(audit_traced(
+        "aggregation.quantized_exchange", traced,
+        max_const_bytes=max_const_bytes,
+    ))
+    n_codes = sum(
+        1 for _, aval in _avals(traced.jaxpr.jaxpr)
+        if getattr(aval, "dtype", None) == sd
+    )
+    if n_codes == 0:
+        issues.append(AuditIssue(
+            "aggregation.quantized_exchange", "storage",
+            f"no {sd} value anywhere in the exchange round-trip jaxpr — "
+            "rows are not actually crossing the wire quantized",
+        ))
+    return issues
+
+
 def audit_engine(
     engine, *, with_pool: bool = True, B: int = 1, L: int = 8, n_new: int = 4,
     max_slots: int = 2, backend: Optional[str] = None,

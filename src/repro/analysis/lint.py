@@ -28,6 +28,13 @@ FED006  no raw page-index arithmetic (``// page_size`` / ``% page_size``,
         ``paging.pages_for`` / ``paging.linear_pos`` so the
         page-coordinate convention (incl. the sentinel-entry contract)
         has exactly one home.
+FED007  no quantization scale / zero-point arithmetic outside
+        ``serving/quant.py`` — multiplying/dividing by KV quant scales
+        (``*_scales``, ``kv_scale`` …) re-derives the codec; route
+        through ``quant.dequantize`` / ``quantize_rows`` /
+        ``quantize_block`` / ``paged_write`` so round/clip/scatter-max
+        semantics (and the fp8 saturation clip) have exactly one home.
+        The softmax ``sm_scale`` is unrelated and stays legal.
 
 Escape hatch
 ------------
@@ -54,6 +61,9 @@ CORE_MODULE = "kernels/core.py"
 
 #: The one module allowed raw page-coordinate arithmetic (FED006 scope).
 PAGING_MODULE = "serving/paging.py"
+
+#: The one module allowed quant scale / zero-point arithmetic (FED007 scope).
+QUANT_MODULE = "serving/quant.py"
 
 #: Names whose (re)binding to a literal means a private mask-fill constant.
 _NEG_INF_NAMES = {"NEG_INF", "NEG_INFINITY", "MASK_VALUE", "MASK_FILL", "MASKED"}
@@ -170,6 +180,36 @@ def _mentions_page(node: ast.AST) -> bool:
     return False
 
 
+#: identifier tokens that mark a 'scale' as a quantization scale (FED007);
+#: bare 'scale' alone (e.g. the softmax ``sm_scale``) is NOT enough.
+_QUANT_SCALE_COMPANIONS = {"kv", "quant", "dequant", "int8", "fp8", "q8"}
+
+
+def _mentions_quant_scale(node: ast.AST) -> bool:
+    """Does any identifier in the expression look like a KV quantization
+    scale or zero point (FED007)?  Tokenizes on underscores and strips
+    digits, so ``row_scales``, ``scales2``, ``k_scales`` and
+    ``kv_scale`` all hit while ``sm_scale`` (softmax) does not."""
+    for sub in ast.walk(node):
+        name = None
+        if isinstance(sub, ast.Name):
+            name = sub.id
+        elif isinstance(sub, ast.Attribute):
+            name = sub.attr
+        if name is None:
+            continue
+        toks = {
+            re.sub(r"\d+", "", t) for t in name.lower().split("_") if t
+        }
+        if "scales" in toks:
+            return True
+        if "scale" in toks and toks & _QUANT_SCALE_COMPANIONS:
+            return True
+        if "zero" in toks and "point" in toks:
+            return True
+    return False
+
+
 def _is_jnp_chain(chain: list[str]) -> bool:
     if not chain:
         return False
@@ -189,6 +229,7 @@ class _Checker(ast.NodeVisitor):
         self.hot = hot
         self.is_core = rel.endswith(CORE_MODULE)
         self.is_paging = rel.endswith(PAGING_MODULE)
+        self.is_quant = rel.endswith(QUANT_MODULE)
         self.lines = source.splitlines()
         self.violations: list[Violation] = []
         self.file_disabled: set[str] = set()  # rule ids; "*" = all
@@ -400,6 +441,22 @@ class _Checker(ast.NodeVisitor):
                 f"raw `{op}` by a page quantity — use repro.serving.paging"
                 ".page_split / .pages_for / .linear_pos (the page-"
                 "coordinate convention has one home)",
+            )
+        # FED007: quant scale / zero-point arithmetic outside serving/quant.py
+        if (
+            not self.is_quant
+            and isinstance(node.op, (ast.Mult, ast.Div, ast.Add, ast.Sub))
+            and (
+                _mentions_quant_scale(node.left)
+                or _mentions_quant_scale(node.right)
+            )
+        ):
+            self.report(
+                "FED007", node,
+                "quantization scale arithmetic — route through repro."
+                "serving.quant (dequantize / quantize_rows / quantize_block"
+                " / paged_write); the codec's round/clip/rescale semantics "
+                "have one home",
             )
         self.generic_visit(node)
 

@@ -142,6 +142,50 @@ def participant_weights(
     raise ValueError(f"unknown weight mode {mode!r}")
 
 
+def exchange_bytes_per_row(
+    n_kv_heads: int,
+    head_dim: int,
+    kv_quant: str = "none",
+    bytes_per_el: int = 4,
+) -> float:
+    """Wire bytes for ONE contributed KV row (its K row AND its V row).
+
+    Unquantized, a row is ``2 * nkv * dh`` elements of the compute dtype.
+    With ``kv_quant`` ('int8'/'fp8'), the row crosses as 1-byte codes plus
+    one f32 scale per kv head per tensor (serving/quant.quantize_rows) —
+    ``2 * nkv * (dh + 4)`` bytes, a ~``dh*bpe/(dh+4)``x shrink (3.56x for
+    dh=32 vs f32). This is the accounting model comm_cost.py and the
+    engine's per-sync-layer byte meter charge."""
+    if kv_quant in (None, "none"):
+        return float(2 * n_kv_heads * head_dim * bytes_per_el)
+    if kv_quant not in ("int8", "fp8"):
+        raise ValueError(f"unknown kv_quant {kv_quant!r}")
+    return float(2 * n_kv_heads * (head_dim + 4))
+
+
+def quantized_exchange_roundtrip(
+    k: jnp.ndarray, v: jnp.ndarray, kv_quant: str
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Encode + decode sync-layer KV rows through the wire codec.
+
+    The single-host reference semantics of the SPMD quantized exchange
+    (spmd_attention.prefill_attention's ``_xchg``): per-row-per-head
+    quantize, ship codes + scales, dequantize on arrival. Identity when
+    ``kv_quant`` is 'none'. Used by the masked-visibility aggregation
+    path, the jaxpr audit, and the codec parity tests."""
+    from repro.serving import quant
+
+    sd = quant.storage_dtype(kv_quant)
+    if sd is None:
+        return k, v
+    kc, ks = quant.quantize_rows(k, sd)
+    vc, vs = quant.quantize_rows(v, sd)
+    return (
+        quant.dequantize(kc, ks).astype(k.dtype),
+        quant.dequantize(vc, vs).astype(v.dtype),
+    )
+
+
 def adaptive_ratio_per_participant(
     partition: Partition,
     base_ratio: float,

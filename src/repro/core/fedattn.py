@@ -308,11 +308,22 @@ class FedAttnContext:
         2 * n_kv * d_head * bytes each — and (in the all-gather realization)
         downloads the other participants' contributions. We report the
         *upload* volume, matching the paper's per-participant accounting.
+
+        With ``config.kv_quant`` set, rows cross the wire as int8/fp8
+        codes plus per-row-per-head f32 scales and the per-row cost drops
+        to the compressed accounting of
+        :func:`repro.core.aggregation.exchange_bytes_per_row`
+        (``bytes_per_el`` then only prices the unquantized baseline).
         """
+        from repro.core.aggregation import exchange_bytes_per_row
+
         L = self.partition.seq_len
         n = self.partition.n_participants
         if n <= 1:
             return 0.0
         rows_per_round = self.config.kv_exchange_ratio * (L / n)
-        per_row = 2 * n_kv_heads * head_dim * bytes_per_el
+        per_row = exchange_bytes_per_row(
+            n_kv_heads, head_dim, self.config.kv_quant,
+            bytes_per_el=bytes_per_el,
+        )
         return self.schedule.n_syncs * rows_per_round * per_row

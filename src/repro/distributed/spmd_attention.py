@@ -62,6 +62,10 @@ def prefill_attention(
     window: Optional[int] = None,
     exchange_ratio: float = 1.0,
     kv_selection: str = "strided",
+    kv_quant: str = "none",
+    attn_mass: Optional[jnp.ndarray] = None,  # (L,) sharded, 'attnmass' stats
+    rng: Optional[jnp.ndarray] = None,  # PRNG key for 'random' selection
+    round_index: int = 0,
     soft_cap: Optional[float] = None,
     sm_scale: Optional[float] = None,
 ) -> jnp.ndarray:
@@ -69,6 +73,9 @@ def prefill_attention(
     assert ctx is not None, "SPMD attention requires an active SpmdContext"
     mesh, ax = ctx.mesh, ctx.seq_axis
     bspec = P(ctx.bfirst, ax, None, None)
+    from repro.serving import quant
+
+    qdtype = quant.storage_dtype(kv_quant)
 
     def _attend(q, k, v, qpos, kpos, chunk):
         """Chunked flash (memory O(Lq·chunk)) on shard-local operands."""
@@ -80,30 +87,48 @@ def prefill_attention(
             soft_cap=soft_cap, sm_scale=sm_scale, chunk=min(chunk, k.shape[1]),
         )
 
+    def _xchg(x):
+        """All-gather KV rows over the seq axis — the sync-layer wire.
+
+        With ``kv_quant`` set, rows cross the collective as int8/fp8 codes
+        plus per-row-per-head f32 scales (serving/quant.quantize_rows) and
+        dequantize on arrival, shrinking exchange bytes by ~dh*4/(dh+4);
+        visibility is still decided purely by gathered positions, never by
+        the quantized values."""
+        if qdtype is None:
+            return jax.lax.all_gather(x, ax, axis=1, tiled=True)
+        codes, scales = quant.quantize_rows(x, qdtype)
+        cg = jax.lax.all_gather(codes, ax, axis=1, tiled=True)
+        sg = jax.lax.all_gather(scales, ax, axis=1, tiled=True)
+        return quant.dequantize(cg, sg).astype(x.dtype)
+
     def local_fn(q, k, v, pos):
         return _attend(q, k, v, pos, pos, 512)
 
     def sync_full_fn(q, k, v, pos):
-        kg = jax.lax.all_gather(k, ax, axis=1, tiled=True)
-        vg = jax.lax.all_gather(v, ax, axis=1, tiled=True)
+        kg = _xchg(k)
+        vg = _xchg(v)
         pg = jax.lax.all_gather(pos, ax, axis=0, tiled=True)
         return _attend(q, kg, vg, pos, pg, 512)
 
-    def sync_sparse_fn(q, k, v, pos):
+    def sync_sparse_fn(q, k, v, pos, mass=None, key=None):
         Ls = k.shape[1]
         n_keep = max(1, int(round(exchange_ratio * Ls)))
-        idx = _select_rows(pos, Ls, n_keep, kv_selection, keys=k)
+        idx = _select_rows(
+            pos, Ls, n_keep, kv_selection, keys=k, attn_mass=mass,
+            rng=key, round_index=round_index,
+        )
         ks = jnp.take(k, idx, axis=1)
         vs = jnp.take(v, idx, axis=1)
         ps = jnp.take(pos, idx, axis=0)
         # Invalidate own-shard gathered rows (full local view already present)
         me = jax.lax.axis_index(ax)
-        kg = jax.lax.all_gather(ks, ax, axis=1, tiled=True)
-        vg = jax.lax.all_gather(vs, ax, axis=1, tiled=True)
+        kg = _xchg(ks)
+        vg = _xchg(vs)
         pg = jax.lax.all_gather(ps, ax, axis=0, tiled=True)
         # static shard count from the gathered shape (jax.lax.axis_size is
         # not available on JAX 0.4.x, and arange needs a static extent)
-        n_shards = kg.shape[1] // n_keep
+        n_shards = pg.shape[0] // n_keep
         owner = jnp.repeat(jnp.arange(n_shards), n_keep)
         pg = jnp.where(owner == me, K.PAD_POS, pg)
         k_all = jnp.concatenate([k, kg], axis=1)
@@ -111,31 +136,50 @@ def prefill_attention(
         p_all = jnp.concatenate([pos, pg], axis=0)
         return _attend(q, k_all, v_all, pos, p_all, 512)
 
+    args = [q, k, v, q_pos]
+    specs = [bspec, bspec, bspec, P(ax)]
     if not sync:
         fn = local_fn
     elif exchange_ratio >= 1.0:
         fn = sync_full_fn
     else:
         fn = sync_sparse_fn
+        if attn_mass is not None or rng is not None:
+            mass = attn_mass if attn_mass is not None else jnp.zeros(
+                (q_pos.shape[0],), jnp.float32
+            )
+            key = rng if rng is not None else jax.random.PRNGKey(0)
+            args += [mass, key]
+            specs += [P(ax), P(None)]
     return shard_map(
         fn,
         mesh=mesh,
-        in_specs=(bspec, bspec, bspec, P(ax)),
+        in_specs=tuple(specs),
         out_specs=bspec,
         check_vma=False,
-    )(q, k, v, q_pos)
+    )(*args)
 
 
-def _select_rows(pos, Ls, n_keep, selection, keys=None):
+def _select_rows(
+    pos, Ls, n_keep, selection, keys=None, attn_mass=None, rng=None,
+    round_index=0,
+):
     """Static-count per-shard KV row selection for sparse exchange.
 
     ``keys`` are the shard-local K rows ((B, Ls, nkv, dh)) — consumed by
     ``'keynorm'`` (top-k rows by batch-and-head-summed ||K||_2, the
     adaptive-importance heuristic of core/aggregation.contribution_mask,
-    Observation 4). ``'random'`` is NOT implementable as a static-count
-    SPMD gather without threading per-round rng through every sync layer;
-    it warns once and aliases ``'strided'`` (the deterministic stand-in
-    with the same per-shard row count).
+    Observation 4). ``'attnmass'`` keeps the top-k rows by ``attn_mass``
+    — the accumulated attention mass each cached row received from the
+    last decode step's softmax stats — ranking rows by how much queries
+    actually USED them rather than by the static key-magnitude proxy
+    (keynorm keeps large-norm rows nobody attends to; attnmass drops
+    them). ``'random'`` with an ``rng`` key is real seeded sampling:
+    ``fold_in(rng, round_index)`` scores every row with iid uniforms and
+    keeps the top-k — deterministic per (key, round), uniform over rows,
+    still a static-count gather. Without a key it keeps the historical
+    deprecation behavior: warn and alias ``'strided'`` (the deterministic
+    stand-in with the same per-shard row count).
     """
     if selection == "recency":
         return jnp.arange(Ls - n_keep, Ls)
@@ -155,12 +199,27 @@ def _select_rows(pos, Ls, n_keep, selection, keys=None):
         )  # (Ls,)
         _, idx = jax.lax.top_k(norms, n_keep)
         return jnp.sort(idx)  # keep positional order for the gather
+    if selection == "attnmass":
+        if attn_mass is None:
+            raise ValueError(
+                "kv_selection='attnmass' requires the accumulated "
+                "attention-mass stats of the last decode step"
+            )
+        mass = jnp.reshape(attn_mass.astype(jnp.float32), (-1,))[:Ls]
+        _, idx = jax.lax.top_k(mass, n_keep)
+        return jnp.sort(idx)
+    if selection == "random" and rng is not None:
+        key = jax.random.fold_in(rng, round_index)
+        scores = jax.random.uniform(key, (Ls,))
+        _, idx = jax.lax.top_k(scores, n_keep)
+        return jnp.sort(idx)
     if selection in ("strided", "random"):
         if selection == "random":
             warnings.warn(
-                "SPMD sparse KV exchange has no static-count 'random' "
-                "selection; using the deterministic 'strided' stand-in "
-                "(same per-shard row count)",
+                "kv_selection='random' without an rng key keeps the "
+                "deprecated aliasing behavior (deterministic 'strided' "
+                "stand-in, same per-shard row count); pass rng= for real "
+                "seeded sampling",
                 stacklevel=2,
             )
         stride = max(1, Ls // n_keep)
@@ -343,6 +402,7 @@ def paged_decode_attention(
     window: Optional[int] = None,
     soft_cap: Optional[float] = None,
     sm_scale: Optional[float] = None,
+    kv_scales: Optional[tuple] = None,  # (sk, sv) (num_pages, nkv) f32
 ) -> jnp.ndarray:
     """Flash-decoding over a page-sharded physical pool.
 
@@ -353,11 +413,18 @@ def paged_decode_attention(
     are >= every shard's upper bound) gets ``kv_pos → PAD_POS`` so the
     shared visibility removes it — and the per-shard partial softmax
     stats combine with the exact same pmax/psum as
-    :func:`decode_attention`. No collective touches the pool itself."""
+    :func:`decode_attention`. No collective touches the pool itself.
+
+    ``kv_scales`` marks a quantized pool (int8/fp8 codes): the scales
+    shard over pages exactly like the pool and the in-shard gather
+    dequantizes (serving/quant contract) before the softmax — clamped
+    not-mine columns dequant garbage just like they gather garbage, and
+    the PAD_POS mask hides both."""
     ctx = runtime.current()
     assert ctx is not None
     axes = ctx.cache_axes
     pool_spec = P(axes, None, None, None)
+    scale_spec = P(axes, None)
     q_spec = P(ctx.bfirst, None, None, None)
 
     use_seg = q_seg is not None and kv_seg is not None
@@ -369,8 +436,15 @@ def paged_decode_attention(
     if use_seg:
         args += [q_seg, kv_seg]
         specs += [_q_spec(q_seg, ctx.bfirst), _q_spec(kv_seg, ctx.bfirst)]
+    if kv_scales is not None:
+        args += [kv_scales[0], kv_scales[1]]
+        specs += [scale_spec, scale_spec]
 
-    def fn(q, pk, pv, pg, kpos, qpos, qseg=None, kseg=None):
+    def fn(q, pk, pv, pg, kpos, qpos, *rest):
+        rest = list(rest)
+        qseg = rest.pop(0) if use_seg else None
+        kseg = rest.pop(0) if use_seg else None
+        sk, sv = (rest.pop(0), rest.pop(0)) if kv_scales is not None else (None, None)
         n_local, ps = pk.shape[0], pk.shape[1]
         lo = _shard_offset(axes, n_local)
         B, Pp = pg.shape
@@ -379,6 +453,13 @@ def paged_decode_attention(
         local = jnp.where(mine, pg - lo, 0)
         k = jnp.take(pk, local, axis=0).reshape(B, Lk, *pk.shape[2:])
         v = jnp.take(pv, local, axis=0).reshape(B, Lk, *pv.shape[2:])
+        if sk is not None:
+            from repro.serving import quant
+
+            ssk = jnp.repeat(jnp.take(sk, local, axis=0), ps, axis=1)
+            ssv = jnp.repeat(jnp.take(sv, local, axis=0), ps, axis=1)
+            k = quant.dequantize(k, ssk)
+            v = quant.dequantize(v, ssv)
         colm = jnp.repeat(mine, ps, axis=1)  # (B, Lk)
         kpos = jnp.where(colm, jnp.broadcast_to(jnp.atleast_2d(kpos), (B, Lk)), K.PAD_POS)
         if kseg is not None:
@@ -420,24 +501,31 @@ def paged_kv_write(
     v_new: jnp.ndarray,
     pages: jnp.ndarray,  # (B, P') page tables — replicated
     cache_len: jnp.ndarray,  # (B,) per-row write frontiers (linear positions)
-) -> tuple[jnp.ndarray, jnp.ndarray]:
+    kv_scales: Optional[tuple] = None,  # (sk, sv) (num_pages, nkv) f32
+):
     """Per-row KV write through page tables into a page-sharded pool: each
     shard resolves every row's frontier to a (page, offset) and scatters
     only the entries whose page lands in its run — everything else (other
     shards' pages, sentinel table entries, frontiers coasting past the
-    table) drops via scatter OOB semantics. No collective."""
+    table) drops via scatter OOB semantics. No collective.
+
+    With ``kv_scales`` the pool holds int8/fp8 codes: the shard-local
+    scatter routes through ``serving.quant.paged_write`` (scatter-max
+    scales + ratio rescale), with the same local-sentinel drop semantics
+    — not-mine entries map to page ``n_local`` which both the scale
+    scatter and the code scatter drop. Returns a 4-tuple
+    ``(pk, pv, sk, sv)`` in that case, else the usual ``(pk, pv)``."""
     ctx = runtime.current()
     assert ctx is not None
     axes = ctx.cache_axes
     pool_spec = P(axes, None, None, None)
+    scale_spec = P(axes, None)
     new_spec = P(ctx.bfirst, None, None, None)
 
-    def fn(pk, pv, kn, vn, pg, cl):
+    def _resolve(pg, cl, n_local, ps, B, S_new):
         from repro.serving import paging
 
-        n_local, ps = pk.shape[0], pk.shape[1]
         lo = _shard_offset(axes, n_local)
-        B, S_new = kn.shape[:2]
         Cp = pg.shape[1] * ps
         pos = jnp.broadcast_to(
             cl[:, None] + jnp.arange(S_new)[None, :], (B, S_new)
@@ -446,9 +534,35 @@ def paged_kv_write(
         page_idx = jnp.take_along_axis(pg, pslot, axis=1)
         ok = (pos < Cp) & (page_idx >= lo) & (page_idx < lo + n_local)
         local = jnp.where(ok, page_idx - lo, n_local)  # OOB → drop
+        return local, off
+
+    def fn(pk, pv, kn, vn, pg, cl):
+        n_local, ps = pk.shape[0], pk.shape[1]
+        B, S_new = kn.shape[:2]
+        local, off = _resolve(pg, cl, n_local, ps, B, S_new)
         pk = pk.at[local, off].set(kn.astype(pk.dtype), mode="drop")
         pv = pv.at[local, off].set(vn.astype(pv.dtype), mode="drop")
         return pk, pv
+
+    def fn_quant(pk, pv, sk, sv, kn, vn, pg, cl):
+        from repro.serving import quant
+
+        n_local, ps = pk.shape[0], pk.shape[1]
+        B, S_new = kn.shape[:2]
+        local, off = _resolve(pg, cl, n_local, ps, B, S_new)
+        pk, sk = quant.paged_write(pk, sk, kn, local, off)
+        pv, sv = quant.paged_write(pv, sv, vn, local, off)
+        return pk, pv, sk, sv
+
+    if kv_scales is not None and kv_scales[0] is not None:
+        return shard_map(
+            fn_quant,
+            mesh=ctx.mesh,
+            in_specs=(pool_spec, pool_spec, scale_spec, scale_spec,
+                      new_spec, new_spec, P(ctx.bfirst, None), P(ctx.bfirst)),
+            out_specs=(pool_spec, pool_spec, scale_spec, scale_spec),
+            check_vma=False,
+        )(pk, pv, kv_scales[0], kv_scales[1], k_new, v_new, pages, cache_len)
 
     return shard_map(
         fn,

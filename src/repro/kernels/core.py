@@ -84,6 +84,28 @@ contract:
   which offset) lives ONLY in :mod:`repro.serving.paging` (lint rule
   FED006).
 
+Quantization rules (the int8/fp8 paged pool)
+--------------------------------------------
+A quantized pool (:mod:`repro.serving.quant`) stores the same pages as
+codes plus sibling per-page-per-kv-head f32 scale leaves. Three rules
+keep it invisible to this contract:
+
+* **Dequant at gather.** Codes meet scales ONLY inside the paged readers'
+  page gather (and the SPMD in-shard take) — by the time rows reach this
+  module's masking rule they are the dense compute dtype. No kernel, mask
+  or sentinel ever branches on the storage dtype.
+* **Visibility is NEVER decided by quantized values.** Position/segment
+  vectors and page tables stay unquantized int32; a page's scale (even
+  0.0 on an all-zero page) says nothing about which of its rows are
+  visible — the ``PAD_POS``/segment rules above are unchanged.
+* **Scales are DATA, not shapes.** They ride the cache pytree next to
+  the page tables and rewrite freely under churn (scatter-max at the
+  frontier, reset on admission) — the zero-recompile pin holds
+  (jaxpr-audited: ``analysis.jaxpr_audit.audit_quant_pool`` also proves
+  the pool buffers are actually int8/fp8 in the compiled step). Scale
+  arithmetic lives ONLY in :mod:`repro.serving.quant` (lint rule
+  FED007).
+
 Multi-token verify (speculative decoding)
 -----------------------------------------
 The scheduler's speculative verify step (``serving/scheduler._verify_fn``)

@@ -218,14 +218,26 @@ def decode_attention(
 # ---------------------------------------------------------------------------
 
 
-def _gather_pages(pool, pages):
+def _gather_pages(pool, pages, scales=None):
     """(num_pages, page_size, nkv, dh) pool + (B, P') tables → dense
     (B, P'*page_size, nkv, dh). Gather CLAMPS sentinel entries to the last
-    physical page; callers mask those columns via kv_pos/kv_seg."""
+    physical page; callers mask those columns via kv_pos/kv_seg.
+
+    ``scales`` (num_pages, nkv) marks a quantized pool: the codes dequantize
+    to f32 INSIDE this gather (serving/quant.py contract), so every caller
+    downstream sees the dense-dtype pool. Clamped sentinel columns dequant
+    garbage like they gather garbage — the kv_pos mask hides both."""
     N, ps = pool.shape[0], pool.shape[1]
     B, Pp = pages.shape
-    out = jnp.take(pool, jnp.minimum(pages, N - 1), axis=0)
-    return out.reshape(B, Pp * ps, pool.shape[2], pool.shape[3])
+    idx = jnp.minimum(pages, N - 1)
+    out = jnp.take(pool, idx, axis=0)
+    out = out.reshape(B, Pp * ps, pool.shape[2], pool.shape[3])
+    if scales is None:
+        return out
+    from repro.serving import quant as _quant
+
+    s = jnp.repeat(jnp.take(scales, idx, axis=0), ps, axis=1)  # (B, Pp*ps, nkv)
+    return _quant.dequantize(out, s)
 
 
 def paged_attention(
@@ -246,6 +258,8 @@ def paged_attention(
     sm_scale: Optional[float] = None,
     backend: Optional[str] = None,
     chunk: int = 512,
+    k_scales: Optional[jnp.ndarray] = None,
+    v_scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """FedAttn attention reading KV through per-row page tables.
 
@@ -268,8 +282,8 @@ def paged_attention(
         kv_seg = jnp.broadcast_to(jnp.atleast_2d(kv_seg), (B, Lk))
         kv_seg = jnp.where(col_valid, kv_seg, _core.KERNEL_PAD_SEGMENT)
     if backend != "xla" or q.shape[1] * Lk <= 256 * 256:
-        k = _gather_pages(pk, pages)
-        v = _gather_pages(pv, pages)
+        k = _gather_pages(pk, pages, k_scales)
+        v = _gather_pages(pv, pages, v_scales)
         return attention(
             q, k, v, q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg, kv_seg=kv_seg,
             causal=causal, local_only=local_only, contributed=contributed,
@@ -280,13 +294,14 @@ def paged_attention(
         q, pk, pv, pages, q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg,
         kv_seg=kv_seg, causal=causal, local_only=local_only,
         contributed=contributed, window=window, soft_cap=soft_cap,
-        sm_scale=sm_scale, chunk=chunk,
+        sm_scale=sm_scale, chunk=chunk, k_scales=k_scales, v_scales=v_scales,
     )
 
 
 def _chunked_paged_attention(
     q, pk, pv, pages, *, q_pos, kv_pos, q_seg, kv_seg, causal, local_only,
-    contributed, window, soft_cap, sm_scale, chunk,
+    contributed, window, soft_cap, sm_scale, chunk, k_scales=None,
+    v_scales=None,
 ):
     """Online-softmax attention over page *groups*: each scan step gathers
     ``G = chunk // page_size`` pages from the pool and reuses the shared
@@ -328,8 +343,8 @@ def _chunked_paged_attention(
     def fetch(i):
         pg = jax.lax.dynamic_slice_in_dim(pages, i * G, G, axis=1)  # (B, G)
         return (
-            _gather_pages(pk, pg),
-            _gather_pages(pv, pg),
+            _gather_pages(pk, pg, k_scales),
+            _gather_pages(pv, pg, v_scales),
         )
 
     return _online_attention(

@@ -106,6 +106,7 @@ def attention_block(
             window=spec.window,
             exchange_ratio=ctx.config.kv_exchange_ratio,
             kv_selection=ctx.config.kv_selection,
+            kv_quant=ctx.config.kv_quant,
             soft_cap=config.attn_soft_cap,
         )
         B, S = x.shape[:2]
@@ -163,9 +164,18 @@ def attention_decode_block(
     backend: Optional[str] = None,
     contributed: Optional[jnp.ndarray] = None,
     pages: Optional[jnp.ndarray] = None,
+    kv_scales: Optional[tuple] = None,
 ):
     """Decode-step attention against the cache; writes the new KV in-place
-    (dynamic_update_slice) and returns (y, k_cache, v_cache).
+    (dynamic_update_slice) and returns (y, k_cache, v_cache) — or, with
+    ``kv_scales``, (y, k_cache, v_cache, k_scales, v_scales).
+
+    Quantized pool: ``kv_scales`` is the ``(sk, sv)`` pair of per-page-
+    per-head (num_pages, nkv) f32 scale leaves riding next to a quantized
+    ``pk``/``pv`` pool (serving/quant.py). The KV write re-encodes through
+    the scale scatter-max (untouched pages bit-exact) and the attention
+    read dequantizes inside the page gather, so the scoring math below is
+    byte-identical to the unquantized path.
 
     Paged pool: with ``pages`` ((B, P') int32 page tables), ``k_cache`` /
     ``v_cache`` are the *shared* (num_pages, page_size, nkv, dh) physical
@@ -200,15 +210,26 @@ def attention_decode_block(
     from repro.distributed import runtime
 
     spmd = runtime.active()
+    k_scales = v_scales = None
+    if kv_scales is not None:
+        k_scales, v_scales = kv_scales
     if pages is not None:
         from repro.serving import paging
 
         if spmd:
             from repro.distributed import spmd_attention
 
-            k_cache, v_cache = spmd_attention.paged_kv_write(
-                k_cache, v_cache, k_new, v_new, pages, cache_len
-            )
+            if kv_scales is not None:
+                k_cache, v_cache, k_scales, v_scales = (
+                    spmd_attention.paged_kv_write(
+                        k_cache, v_cache, k_new, v_new, pages, cache_len,
+                        kv_scales=(k_scales, v_scales),
+                    )
+                )
+            else:
+                k_cache, v_cache = spmd_attention.paged_kv_write(
+                    k_cache, v_cache, k_new, v_new, pages, cache_len
+                )
         else:
             N, ps = k_cache.shape[0], k_cache.shape[1]
             Cp = pages.shape[1] * ps
@@ -222,12 +243,22 @@ def attention_decode_block(
             # positions past the table (retired slots coasting) must not
             # clamp into a real page — force the sentinel so they drop
             page_idx = jnp.where(pos < Cp, page_idx, N)
-            k_cache = k_cache.at[page_idx, off].set(
-                k_new.astype(k_cache.dtype), mode="drop"
-            )
-            v_cache = v_cache.at[page_idx, off].set(
-                v_new.astype(v_cache.dtype), mode="drop"
-            )
+            if kv_scales is not None:
+                from repro.serving import quant
+
+                k_cache, k_scales = quant.paged_write(
+                    k_cache, k_scales, k_new, page_idx, off
+                )
+                v_cache, v_scales = quant.paged_write(
+                    v_cache, v_scales, v_new, page_idx, off
+                )
+            else:
+                k_cache = k_cache.at[page_idx, off].set(
+                    k_new.astype(k_cache.dtype), mode="drop"
+                )
+                v_cache = v_cache.at[page_idx, off].set(
+                    v_new.astype(v_cache.dtype), mode="drop"
+                )
     elif jnp.ndim(cache_len) == 1:
         if spmd:
             # sequence-sharded cache (pooled SPMD decode): each shard
@@ -266,6 +297,8 @@ def attention_decode_block(
                 sync=sync or not ctx.enabled,
                 window=spec.window,
                 soft_cap=config.attn_soft_cap,
+                kv_scales=kv_scales if kv_scales is None
+                else (k_scales, v_scales),
             )
         else:
             out = ops.paged_decode_attention(
@@ -280,9 +313,13 @@ def attention_decode_block(
                 window=spec.window,
                 soft_cap=config.attn_soft_cap,
                 backend=backend,
+                k_scales=k_scales,
+                v_scales=v_scales,
             )
         B = x.shape[0]
         y = jnp.einsum("bse,ed->bsd", out.reshape(B, S_new, -1), p["wo"])
+        if kv_scales is not None:
+            return y, k_cache, v_cache, k_scales, v_scales
         return y, k_cache, v_cache
 
     if spmd:

@@ -139,14 +139,29 @@ def init_layer_cache(
 
 def init_paged_layer_cache(
     spec: LayerSpec, config: ModelConfig, batch: int, num_pages: int,
-    page_size: int, dtype
+    page_size: int, dtype, kv_quant: Optional[str] = None
 ) -> Params:
     """Paged variant of :func:`init_layer_cache`: attention layers get a
     *shared* physical pool ``pk``/``pv`` of shape (num_pages, page_size,
     nkv, dh) — no batch dim; slots address it through int32 page tables
-    (serving/paging.py). Recurrent layers keep per-slot state rows."""
+    (serving/paging.py). Recurrent layers keep per-slot state rows.
+
+    With ``kv_quant`` ('int8'/'fp8', serving/quant.py) the pool leaves
+    store codes in the codec dtype plus sibling per-page-per-head scale
+    leaves ``sk``/``sv`` of shape (num_pages, nkv) f32 — scales are DATA
+    like page tables, never shapes."""
     if spec.kind == "attn":
+        from repro.serving import quant
+
         nkv, dh = config.n_kv_heads, config.head_dim
+        sd = quant.storage_dtype(kv_quant)
+        if sd is not None:
+            return {
+                "pk": jnp.zeros((num_pages, page_size, nkv, dh), sd),
+                "pv": jnp.zeros((num_pages, page_size, nkv, dh), sd),
+                "sk": jnp.zeros((num_pages, nkv), jnp.float32),
+                "sv": jnp.zeros((num_pages, nkv), jnp.float32),
+            }
         return {
             "pk": jnp.zeros((num_pages, page_size, nkv, dh), dtype),
             "pv": jnp.zeros((num_pages, page_size, nkv, dh), dtype),
@@ -156,13 +171,27 @@ def init_paged_layer_cache(
 
 def init_paged_cache(
     config: ModelConfig, batch: int, num_pages: int, page_size: int,
-    *, plan: Optional["ScanPlan"] = None
+    *, plan: Optional["ScanPlan"] = None, kv_quant: Optional[str] = None
 ):
     """Block-paged decode caches, loop or scan form (mirrors init_cache /
     init_cache_scan; scan form stacks pool leaves to (n_periods, num_pages,
-    page_size, nkv, dh))."""
+    page_size, nkv, dh)). ``kv_quant`` selects a quantized pool codec
+    (attention-only stacks; see init_paged_layer_cache)."""
+    if kv_quant not in (None, "none") and any(
+        s.kind != "attn" for s in config.layer_specs()
+    ):
+        raise NotImplementedError(
+            "quantized KV (kv_quant=...) requires an attention-only stack: "
+            "recurrent layers (mamba/rwkv) carry per-slot STATE, not "
+            "per-position KV, so there is no page/row granularity to attach "
+            "scales to — recurrent-state quantization is a different "
+            "contract (scale re-derivation on every state update). Run "
+            "SSM/hybrid pools with kv_quant=None."
+        )
     dt = jnp.dtype(config.dtype)
-    mk = lambda s: init_paged_layer_cache(s, config, batch, num_pages, page_size, dt)
+    mk = lambda s: init_paged_layer_cache(
+        s, config, batch, num_pages, page_size, dt, kv_quant
+    )
     if plan is not None:
         per = [mk(s) for s in plan.specs]
         stacked = jax.tree.map(
@@ -175,16 +204,29 @@ def init_paged_cache(
     return [mk(s) for s in config.layer_specs()]
 
 
-def _gather_pool(pool, pages):
+def _gather_pool(pool, pages, scales=None):
     """Densify page tables through a physical pool: pool (..., N, ps, nkv,
     dh) + pages (B, P') int32 → (..., B, P'*ps, nkv, dh). Gather CLAMPS, so
     sentinel entries (>= N) read the last physical page — callers must mask
-    those columns (kv_pos → PAD_POS) before any visibility decision."""
+    those columns (kv_pos → PAD_POS) before any visibility decision.
+
+    With ``scales`` ((..., N, nkv) f32 — a quantized pool's sibling scale
+    leaf) the gathered codes dequantize to f32 HERE, inside the gather, so
+    every downstream consumer sees the dense contract. Sentinel columns
+    dequantize clamped garbage; that is fine — the PAD_POS masking rule
+    hides them before any score is computed."""
     axis = pool.ndim - 4
     N, ps = pool.shape[axis], pool.shape[axis + 1]
     B, Pp = pages.shape
-    out = jnp.take(pool, jnp.minimum(pages, N - 1), axis=axis)
-    return out.reshape(out.shape[:axis] + (B, Pp * ps) + out.shape[-2:])
+    idx = jnp.minimum(pages, N - 1)
+    out = jnp.take(pool, idx, axis=axis)
+    out = out.reshape(out.shape[:axis] + (B, Pp * ps) + out.shape[-2:])
+    if scales is None:
+        return out
+    from repro.serving import quant
+
+    s = jnp.repeat(jnp.take(scales, idx, axis=axis), ps, axis=axis + 1)
+    return quant.dequantize(out, s)
 
 
 def _scatter_pool(pool, dense, dst_pages):
@@ -203,6 +245,28 @@ def _scatter_pool(pool, dense, dst_pages):
     return pool.at[:, idx].set(blk, mode="drop")
 
 
+def _scatter_pool_quant(pool, scales, dense, dst_pages):
+    """Quantized :func:`_scatter_pool`: each written page quantize-RESETS
+    (serving/quant.quantize_block — fresh per-page scales, so a freed page
+    reused by a new slot never inherits the previous resident's amax) and
+    codes + scales scatter with the same drop semantics. Sentinel dst
+    entries drop BOTH leaves, so shared prefix pages — which admission
+    keeps at the sentinel — keep their codes AND scales immutable."""
+    from repro.serving import quant
+
+    axis = pool.ndim - 4
+    ps = pool.shape[axis + 1]
+    B, Pp = dst_pages.shape
+    blk = dense.reshape(dense.shape[:axis] + (B * Pp, ps) + dense.shape[-2:])
+    codes, s = quant.quantize_block(blk, pool.dtype)
+    idx = dst_pages.reshape(-1)
+    if axis == 0:
+        return (pool.at[idx].set(codes, mode="drop"),
+                scales.at[idx].set(s, mode="drop"))
+    return (pool.at[:, idx].set(codes, mode="drop"),
+            scales.at[:, idx].set(s, mode="drop"))
+
+
 def gather_paged_cache(cache, pages):
     """Dense transient caches for a batch of slots of a paged pool cache:
     attention leaves gather ``pages`` (B, P') into (B, P'*ps, nkv, dh)
@@ -218,8 +282,10 @@ def gather_paged_cache(cache, pages):
 
     def layer(c):
         if "pk" in c:
-            return {"k": _gather_pool(c["pk"], pages),
-                    "v": _gather_pool(c["pv"], pages)}
+            # quantized pools ("sk" present) dequantize inside the gather —
+            # the dense transient is f32 regardless of the pool codec
+            return {"k": _gather_pool(c["pk"], pages, c.get("sk")),
+                    "v": _gather_pool(c["pv"], pages, c.get("sv"))}
         return {key: rec(val) for key, val in c.items()}
 
     if scan_form:
@@ -239,6 +305,12 @@ def paged_slot_write(cache, batch, dst_pages, slots):
 
     def layer(pc, bc):
         if "pk" in pc:
+            if "sk" in pc:
+                pk, sk = _scatter_pool_quant(pc["pk"], pc["sk"], bc["k"],
+                                             dst_pages)
+                pv, sv = _scatter_pool_quant(pc["pv"], pc["sv"], bc["v"],
+                                             dst_pages)
+                return {"pk": pk, "pv": pv, "sk": sk, "sv": sv}
             return {"pk": _scatter_pool(pc["pk"], bc["k"], dst_pages),
                     "pv": _scatter_pool(pc["pv"], bc["v"], dst_pages)}
         if scan_form:
@@ -291,11 +363,22 @@ def apply_layer_decode(
     new_cache = dict(cache)
     if spec.kind == "attn":
         if "pk" in cache:
-            o, kc, vc = A.attention_decode_block(
-                p["attn"], h, cache["pk"], cache["pv"], cache_len, ctx,
-                layer_idx, spec, config, sync=sync, backend=backend,
-                contributed=contributed, pages=pages,
-            )
+            if "sk" in cache:
+                # quantized pool: the write re-encodes through the scale
+                # scatter-max and the read dequantizes inside the gather
+                o, kc, vc, sk, sv = A.attention_decode_block(
+                    p["attn"], h, cache["pk"], cache["pv"], cache_len, ctx,
+                    layer_idx, spec, config, sync=sync, backend=backend,
+                    contributed=contributed, pages=pages,
+                    kv_scales=(cache["sk"], cache["sv"]),
+                )
+                new_cache["sk"], new_cache["sv"] = sk, sv
+            else:
+                o, kc, vc = A.attention_decode_block(
+                    p["attn"], h, cache["pk"], cache["pv"], cache_len, ctx,
+                    layer_idx, spec, config, sync=sync, backend=backend,
+                    contributed=contributed, pages=pages,
+                )
             new_cache["pk"], new_cache["pv"] = kc, vc
         else:
             o, kc, vc = A.attention_decode_block(
@@ -438,6 +521,10 @@ def cache_pspecs(cache, cache_axes):
             # paged pool (..., num_pages, page_size, nkv, dh): shard PAGES,
             # not rows — each shard owns a contiguous run of physical pages
             return P(*([None] * (x.ndim - 4)), cache_axes, None, None, None)
+        if path_key in ("sk", "sv"):
+            # quantized-pool scales (..., num_pages, nkv): sharded with
+            # their pages — a shard holds exactly its pages' scales
+            return P(*([None] * (x.ndim - 2)), cache_axes, None)
         return P(*([None] * x.ndim))
 
     def layer(c):

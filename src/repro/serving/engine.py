@@ -142,10 +142,17 @@ class FedAttnEngine:
         bucket: str = "pow2",
         layers_mode: Optional[str] = None,
         mesh=None,
+        kv_quant: Optional[str] = None,
     ):
         """bucket: 'pow2' pads L/n_new to power-of-two buckets so mixed
         request lengths share compiled executables; 'none' compiles per
         exact shape. layers_mode: None (auto), 'loop', or 'scan'.
+
+        kv_quant: 'int8' / 'fp8' turns on the quantized KV representation
+        (serving/quant.py): the scheduler's paged pool stores codes +
+        per-page-per-head scales, and sync-layer exchange ships compressed
+        rows (overrides ``fedattn.kv_quant``; the per-sync-layer byte
+        accounting follows). 'none'/None leaves the compute dtype.
 
         mesh: a jax Mesh with a 'model' axis enables the SPMD serving mode
         of the continuous-batching scheduler (``generate_many``/
@@ -162,6 +169,9 @@ class FedAttnEngine:
         self.config = config
         self.params = params
         self.fed = fedattn if fedattn is not None else config.fedattn
+        if kv_quant is not None:
+            self.fed = self.fed.replace(kv_quant=kv_quant)
+        self.kv_quant = None if self.fed.kv_quant == "none" else self.fed.kv_quant
         self.model = build_model(config)
         self.backend = backend
         self.bucket = bucket

@@ -200,6 +200,13 @@ class ContinuousBatchingScheduler:
       drafter: ``'ngram'`` (default — :class:`repro.serving.spec.
         NGramDrafter`) or any object implementing the drafter protocol
         (``begin``/``draft``/``update``, see :mod:`repro.serving.spec`).
+      kv_quant: ``'int8'`` / ``'fp8'`` stores the paged pool as quantized
+        codes with per-page-per-head scale leaves (serving/quant.py);
+        ``None`` inherits the engine's setting, ``'none'`` forces off.
+        Requires the paged layout; attention-only stacks (recurrent state
+        has no per-position KV — init_paged_cache raises). Greedy tokens
+        stay parity-exact on the pinned traces; scales are traced data, so
+        the zero-recompile churn contract is unchanged.
     """
 
     def __init__(
@@ -215,11 +222,22 @@ class ContinuousBatchingScheduler:
         prefix_cache: bool = False,
         spec_k: int = 0,
         drafter=None,
+        kv_quant: Optional[str] = None,
     ):
         if max_slots < 1 or capacity < 2 or steps_per_admit < 1:
             raise ValueError("max_slots >= 1, capacity >= 2, steps_per_admit >= 1")
         if kv_layout not in ("paged", "dense"):
             raise ValueError("kv_layout must be 'paged' or 'dense'")
+        if kv_quant is None:
+            kv_quant = getattr(engine, "kv_quant", None)
+        elif kv_quant == "none":
+            kv_quant = None
+        if kv_quant is not None and kv_layout != "paged":
+            raise ValueError(
+                "kv_quant requires kv_layout='paged': the dense slot rows "
+                "have no per-page scale leaves (serving/quant.py)"
+            )
+        self.kv_quant = kv_quant
         if page_size < 1:
             raise ValueError("page_size >= 1")
         if spec_k < 0:
@@ -279,7 +297,8 @@ class ContinuousBatchingScheduler:
                     )
                 self._prefix = paging.PrefixCache(self._alloc, page_size)
             self.cache = T.init_paged_cache(
-                engine.config, max_slots, num_pages, page_size, plan=self._plan
+                engine.config, max_slots, num_pages, page_size,
+                plan=self._plan, kv_quant=self.kv_quant,
             )
         else:
             if prefix_cache:

@@ -36,6 +36,9 @@ class FedAttnConfig:
         'random' | 'strided' | 'keynorm' | 'recency' | 'sink_recency'.
       local_sparsity: fraction of local tokens kept for local
         self-attention (sparse local attention, eq. 34). 1.0 == dense.
+      kv_quant: wire/pool codec for sync-layer KV exchange and the paged
+        pool: 'none' (f32/compute dtype), 'int8' (symmetric per-head
+        scales) or 'fp8' (e4m3 emulation). See ``serving.quant``.
       publisher_index: which participant is the task publisher (issues the
         query, decodes the answer). Defaults to the last participant, as in
         the paper's experiments.
@@ -47,6 +50,7 @@ class FedAttnConfig:
     schedule: str = "uniform"
     kv_exchange_ratio: float = 1.0
     kv_selection: str = "random"
+    kv_quant: str = "none"
     local_sparsity: float = 1.0
     publisher_index: int = -1
     causal: bool = True
@@ -60,6 +64,10 @@ class FedAttnConfig:
             raise ValueError("kv_exchange_ratio must be in (0, 1]")
         if not (0.0 < self.local_sparsity <= 1.0):
             raise ValueError("local_sparsity must be in (0, 1]")
+        if self.kv_quant not in ("none", "int8", "fp8"):
+            raise ValueError(
+                f"kv_quant must be 'none', 'int8' or 'fp8', got {self.kv_quant!r}"
+            )
 
     @property
     def enabled(self) -> bool:

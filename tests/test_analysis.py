@@ -42,6 +42,7 @@ class TestLintRules:
         table = lint.rules()
         assert set(table) == {
             "FED001", "FED002", "FED003", "FED004", "FED005", "FED006",
+            "FED007",
         }
         assert all(table.values())  # every rule has a one-line summary
 
@@ -213,6 +214,52 @@ class TestLintRules:
             "    lin = pslot * page_size + off\n"
             "    pad = (-num_pages) % n_shards\n"
             "    return lin, pad\n"
+        )
+        assert lint.lint_source(ok, "repro/models/ok.py") == []
+
+    def test_fed007_scale_arithmetic(self):
+        # seeded regression: a consumer dequantizing by hand instead of
+        # routing through serving/quant.dequantize (loses the fp8
+        # saturation clip and the int8 round semantics)
+        src = (
+            "def f(codes, k_scales):\n"
+            "    return codes.astype('float32') * k_scales[..., None]\n"
+        )
+        vs = lint.lint_source(src, "repro/models/bad.py")
+        assert "FED007" in _rules_of(vs)
+        # ...hand-rolled scale computation in a distributed consumer
+        src = (
+            "import jax.numpy as jnp\n"
+            "def f(x):\n"
+            "    kv_scale = jnp.max(jnp.abs(x)) / 127.0\n"
+            "    return x / kv_scale\n"
+        )
+        assert "FED007" in _rules_of(
+            lint.lint_source(src, "repro/distributed/bad.py")
+        )
+        # ...zero-point arithmetic anywhere outside quant.py
+        src = "def f(x, zero_point):\n    return x - zero_point\n"
+        assert "FED007" in _rules_of(
+            lint.lint_source(src, "repro/serving/bad.py")
+        )
+
+    def test_fed007_quant_module_and_blessed_idioms_clean(self):
+        # the quant module itself is the one home of the codec arithmetic
+        src = (
+            "def dequantize(codes, scales):\n"
+            "    return codes.astype('float32') * scales[..., None]\n"
+        )
+        assert lint.lint_source(src, "repro/serving/quant.py") == []
+        # the softmax sm_scale is unrelated (repo-wide attention idiom) and
+        # calling the codec helpers / passing scale leaves around is legal
+        ok = (
+            "from repro.serving import quant\n"
+            "def f(q, dh, sm_scale, pool, scales, new, idx, off):\n"
+            "    s = sm_scale if sm_scale is not None else dh**-0.5\n"
+            "    qf = q * s\n"
+            "    scale = sm_scale * 2.0\n"
+            "    pool2, scales2 = quant.paged_write(pool, scales, new, idx, off)\n"
+            "    return qf, quant.dequantize(pool2, scales2)\n"
         )
         assert lint.lint_source(ok, "repro/models/ok.py") == []
 
