@@ -50,6 +50,14 @@ Checks per entry point:
                when the layer count doubles under a scan plan — the
                generalization of PR 2's single jaxpr-size pin to every
                entry point.
+``pool_gather`` (:func:`audit_fused_decode`, pallas-backend engines) no
+               ``gather`` primitive whose operand is a full pool-shaped
+               buffer anywhere in the fused decode/verify step — the
+               whole point of the fused kernel (kernels/flash_decode) is
+               that pages are loaded *inside* the kernel through the
+               scalar-prefetched page table; a pool-shaped gather means
+               the step silently fell back to the densify-then-attend
+               read path.
 
 Usage: ``python -m repro.analysis --jaxpr`` or the parametrized
 tier-1 test (tests/test_analysis.py) which sweeps every config in
@@ -444,6 +452,82 @@ def audit_quant_pool(
     return issues
 
 
+def pool_gather_issues(
+    name: str, traced, *, min_pool_rank: int = 4
+) -> list[AuditIssue]:
+    """Ban dense full-pool gathers from a fused (pallas-backend) step.
+
+    The fused flash-decode contract (kernels/flash_decode) is that the
+    paged KV pool is read *in-kernel* through the scalar-prefetched page
+    table — page loads are BlockSpec index-map slices, never an XLA
+    ``gather`` over the whole pool.  This check walks the traced jaxpr
+    (recursing into scan/cond/pjit/pallas bodies) and flags any ``gather``
+    equation whose operand aval has the exact shape of a pool-rank traced
+    operand.  The XLA read path (ops.paged_attention's densify / page
+    gather) trips this by construction — which is what makes the check
+    meaningful: it distinguishes the two backends statically.
+    """
+    jaxpr = traced.jaxpr.jaxpr
+    pool_shapes = {
+        tuple(v.aval.shape)
+        for v in jaxpr.invars
+        if getattr(v.aval, "ndim", 0) >= min_pool_rank
+    }
+    issues: list[AuditIssue] = []
+    for eqn in iter_eqns(jaxpr):
+        if eqn.primitive.name != "gather":
+            continue
+        shape = tuple(getattr(getattr(eqn.invars[0], "aval", None),
+                              "shape", ()))
+        if shape in pool_shapes:
+            issues.append(AuditIssue(
+                name, "pool_gather",
+                f"gather over a pool-shaped operand {shape} — the fused "
+                "step must read pages in-kernel via the prefetched page "
+                "table, not densify the pool (kernels/flash_decode)",
+            ))
+    return issues
+
+
+def audit_fused_decode(
+    engine, *, max_slots: int = 2, capacity: int = 32, page_size: int = 8,
+    spec_k: int = 0, backend: Optional[str] = None,
+    max_const_bytes: int = MAX_CONST_BYTES,
+) -> list[AuditIssue]:
+    """Audit the fused Pallas paged flash-decode serving surface.
+
+    Builds a small paged pool over ``engine`` (which must carry
+    ``backend='pallas'`` — that is what routes the pooled step through
+    :func:`repro.kernels.flash_decode.paged_flash_decode`), traces the
+    resident decode step (and the speculative verify step when ``spec_k``)
+    and runs the standard static checks **plus** the ``pool_gather`` ban:
+    the fused step may not contain an XLA gather over the full pool.
+    """
+    from repro.serving.scheduler import ContinuousBatchingScheduler
+
+    if getattr(engine, "backend", None) != "pallas":
+        return [AuditIssue(
+            "fused_decode", "pool_gather",
+            f"engine backend {getattr(engine, 'backend', None)!r} is not "
+            "'pallas' — audit_fused_decode audits the fused kernel route",
+        )]
+    sched = ContinuousBatchingScheduler(
+        engine, max_slots=max_slots, capacity=capacity,
+        kv_layout="paged", page_size=page_size, spec_k=spec_k,
+    )
+    entries = trace_scheduler_entries(sched)
+    issues = audit_entries(
+        entries, backend=backend, max_const_bytes=max_const_bytes
+    )
+    pool_rank = 4 if sched._plan is None else 5
+    for e in entries:
+        if e.name in ("scheduler.decode_step", "scheduler.verify_step"):
+            issues.extend(pool_gather_issues(
+                e.name, e.traced, min_pool_rank=pool_rank
+            ))
+    return issues
+
+
 def audit_engine(
     engine, *, with_pool: bool = True, B: int = 1, L: int = 8, n_new: int = 4,
     max_slots: int = 2, backend: Optional[str] = None,
@@ -501,8 +585,15 @@ def audit_arch(
         return _audit_encdec(name, cfg, L=L)
     engine = _reduced_engine(cfg)
     pool_ok = True
-    return audit_engine(engine, with_pool=pool_ok, L=L, n_new=n_new,
-                        backend=backend)
+    issues = audit_engine(engine, with_pool=pool_ok, L=L, n_new=n_new,
+                          backend=backend)
+    if all(s.kind == "attn" for s in cfg.layer_specs()):
+        # attention-only stacks also audit the fused pallas route: same
+        # static contracts, plus the no-full-pool-gather ban
+        issues.extend(audit_fused_decode(
+            _reduced_engine(cfg, backend="pallas"), backend=backend
+        ))
+    return issues
 
 
 def _audit_encdec(name: str, cfg, *, L: int) -> list[AuditIssue]:

@@ -18,6 +18,12 @@ Selection strategies (``FedAttnConfig.kv_selection``):
   sink_recency attention-sink (first tokens) + recency tail (StreamingLLM-style)
   keynorm      top-k tokens by ||K_j||_2 (importance heuristic — adaptive
                KV aggregation, Observation 4)
+  attnmass     top-k tokens by accumulated decode-step softmax mass (rows
+               queries actually USED — the fused flash-decode's stats
+               by-product, see kernels/core "Flash-decode rules"). With no
+               stats yet (prefill admission), falls back to recency; the
+               resident decode path then derives its per-step masks from
+               the live accumulator (spmd_attention.decode_exchange_mask).
 """
 from __future__ import annotations
 
@@ -35,6 +41,7 @@ def contribution_mask(
     rng: jax.Array | None = None,
     round_index: int = 0,
     keys: jnp.ndarray | None = None,
+    attn_mass: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """(L,) bool — which global token positions are contributed (L'_n, eq. 38).
 
@@ -88,6 +95,17 @@ def contribution_mask(
         # have a strictly larger norm; keep if rank < keep_n.
         same = seg[:, None] == seg[None, :]
         larger = (norms[None, :] > norms[:, None]) & same
+        rank = jnp.sum(larger, axis=1)
+        return rank < keep_n
+    if selection == "attnmass":
+        if attn_mass is None:
+            # no decode stats exist yet (prefill admission): recency is the
+            # stats-free proxy; once resident, the decode step ranks by the
+            # live accumulated mass (spmd_attention.decode_exchange_mask)
+            return local_pos >= (my_size - keep_n)
+        mass = jnp.reshape(attn_mass.astype(jnp.float32), (-1,))[:L]
+        same = seg[:, None] == seg[None, :]
+        larger = (mass[None, :] > mass[:, None]) & same
         rank = jnp.sum(larger, axis=1)
         return rank < keep_n
     raise ValueError(f"unknown kv_selection {selection!r}")

@@ -228,6 +228,28 @@ def _select_rows(
     raise ValueError(f"unknown kv_selection {selection!r}")
 
 
+def decode_exchange_mask(
+    attn_mass: jnp.ndarray,  # (B, C) accumulated per-column softmax mass
+    exchange_ratio: float,
+) -> jnp.ndarray:
+    """Per-slot sparse-exchange visibility mask from accumulated decode
+    attention mass: keep the top ``ratio * C`` pool columns each slot's
+    queries actually USED (``_select_rows`` 'attnmass' ranking — the
+    resident decode path's feed for that policy), as a (B, C) bool
+    ``contributed`` mask in the standard visibility vocabulary. Static
+    count per slot, so the mask is pure DATA under jit (the zero-recompile
+    churn pin holds). Columns that never received mass (holes, sentinel
+    pages, padding) rank last and drop first."""
+    B, C = attn_mass.shape
+    n_keep = max(1, int(round(exchange_ratio * C)))
+
+    def one(mass):
+        idx = _select_rows(None, C, n_keep, "attnmass", attn_mass=mass)
+        return jnp.zeros((C,), bool).at[idx].set(True)
+
+    return jax.vmap(one)(attn_mass)
+
+
 def gather_memory_once(memory: jnp.ndarray) -> jnp.ndarray:
     """All-gather the encoder memory over the seq axis ONCE before the
     decoder stack (§Perf iteration 6): cross-attention KV is then computed
@@ -403,6 +425,9 @@ def paged_decode_attention(
     soft_cap: Optional[float] = None,
     sm_scale: Optional[float] = None,
     kv_scales: Optional[tuple] = None,  # (sk, sv) (num_pages, nkv) f32
+    contributed: Optional[jnp.ndarray] = None,
+    backend: Optional[str] = None,
+    return_mass: bool = False,
 ) -> jnp.ndarray:
     """Flash-decoding over a page-sharded physical pool.
 
@@ -415,11 +440,24 @@ def paged_decode_attention(
     stats combine with the exact same pmax/psum as
     :func:`decode_attention`. No collective touches the pool itself.
 
+    ``backend='pallas'`` swaps the in-shard gather+masked_attention for
+    the fused paged flash-decode kernel (kernels/flash_decode.py) in its
+    ``return_stats`` form: not-mine and sentinel table entries rebase to
+    the shard-local sentinel page id, the kernel's own pre-pass masks
+    those columns, and the partial stats feed the SAME pmax/psum combine
+    — shard-local kernel + existing collective, per the core
+    "Flash-decode rules" contract.
+
     ``kv_scales`` marks a quantized pool (int8/fp8 codes): the scales
-    shard over pages exactly like the pool and the in-shard gather
-    dequantizes (serving/quant contract) before the softmax — clamped
-    not-mine columns dequant garbage just like they gather garbage, and
-    the PAD_POS mask hides both."""
+    shard over pages exactly like the pool and the in-shard gather (or
+    the kernel's dequant-at-load) dequantizes (serving/quant contract)
+    before the softmax — clamped not-mine columns dequant garbage just
+    like they gather garbage, and the PAD_POS mask hides both.
+
+    ``return_mass`` additionally returns the per-column normalized
+    attention mass (B, P'*ps), psum-reduced over shards — the
+    ``'attnmass'`` accumulator feed; ``contributed`` thins sync-layer
+    cross-segment visibility (the decode-time sparse exchange)."""
     ctx = runtime.current()
     assert ctx is not None
     axes = ctx.cache_axes
@@ -428,6 +466,7 @@ def paged_decode_attention(
     q_spec = P(ctx.bfirst, None, None, None)
 
     use_seg = q_seg is not None and kv_seg is not None
+    use_ct = use_seg and sync and contributed is not None
     args = [q, pk, pv, pages, kv_pos, q_pos]
     specs = [
         q_spec, pool_spec, pool_spec, P(ctx.bfirst, None),
@@ -439,57 +478,90 @@ def paged_decode_attention(
     if kv_scales is not None:
         args += [kv_scales[0], kv_scales[1]]
         specs += [scale_spec, scale_spec]
+    if use_ct:
+        args += [contributed]
+        specs += [_q_spec(contributed, ctx.bfirst)]
 
     def fn(q, pk, pv, pg, kpos, qpos, *rest):
         rest = list(rest)
         qseg = rest.pop(0) if use_seg else None
         kseg = rest.pop(0) if use_seg else None
         sk, sv = (rest.pop(0), rest.pop(0)) if kv_scales is not None else (None, None)
+        ct = rest.pop(0) if use_ct else None
         n_local, ps = pk.shape[0], pk.shape[1]
         lo = _shard_offset(axes, n_local)
         B, Pp = pg.shape
         Lk = Pp * ps
         mine = (pg >= lo) & (pg < lo + n_local)  # (B, P')
-        local = jnp.where(mine, pg - lo, 0)
-        k = jnp.take(pk, local, axis=0).reshape(B, Lk, *pk.shape[2:])
-        v = jnp.take(pv, local, axis=0).reshape(B, Lk, *pv.shape[2:])
-        if sk is not None:
-            from repro.serving import quant
+        lonly = (not sync) and use_seg
+        plo = None if (sync or use_seg) else publisher_lo
+        p = None
+        if backend == "pallas":
+            from repro.kernels import flash_decode as _fd
 
-            ssk = jnp.repeat(jnp.take(sk, local, axis=0), ps, axis=1)
-            ssv = jnp.repeat(jnp.take(sv, local, axis=0), ps, axis=1)
-            k = quant.dequantize(k, ssk)
-            v = quant.dequantize(v, ssv)
-        colm = jnp.repeat(mine, ps, axis=1)  # (B, Lk)
-        kpos = jnp.where(colm, jnp.broadcast_to(jnp.atleast_2d(kpos), (B, Lk)), K.PAD_POS)
-        if kseg is not None:
-            kseg = jnp.where(
-                colm, jnp.broadcast_to(jnp.atleast_2d(kseg), (B, Lk)),
-                K.KERNEL_PAD_SEGMENT,
+            # rebase to shard-local table: not-mine entries become the
+            # local sentinel id n_local — the kernel's pre-pass turns
+            # their columns into PAD_POS/KERNEL_PAD_SEGMENT exactly like
+            # the colm masking below
+            local_pg = jnp.where(mine, pg - lo, n_local).astype(jnp.int32)
+            res = _fd.paged_flash_decode(
+                q, pk, pv, local_pg, q_pos=qpos, kv_pos=kpos, q_seg=qseg,
+                kv_seg=kseg, causal=causal, local_only=lonly,
+                contributed=ct, window=window, soft_cap=soft_cap,
+                sm_scale=sm_scale, publisher_lo=plo, k_scales=sk,
+                v_scales=sv, return_stats=True, return_mass=return_mass,
             )
-        mask = K.visibility(
-            qpos, kpos, qseg, kseg,
-            causal=causal,
-            local_only=(not sync) and use_seg,
-            window=window,
-            publisher_lo=None if (sync or use_seg) else publisher_lo,
-        )
-        m, l, acc = K.masked_attention(
-            q, k, v, mask, soft_cap=soft_cap, sm_scale=sm_scale,
-            return_stats=True,
-        )
+            (m, l, acc), p = res[:3], res[3] if return_mass else None
+        else:
+            local = jnp.where(mine, pg - lo, 0)
+            k = jnp.take(pk, local, axis=0).reshape(B, Lk, *pk.shape[2:])
+            v = jnp.take(pv, local, axis=0).reshape(B, Lk, *pv.shape[2:])
+            if sk is not None:
+                from repro.serving import quant
+
+                ssk = jnp.repeat(jnp.take(sk, local, axis=0), ps, axis=1)
+                ssv = jnp.repeat(jnp.take(sv, local, axis=0), ps, axis=1)
+                k = quant.dequantize(k, ssk)
+                v = quant.dequantize(v, ssv)
+            colm = jnp.repeat(mine, ps, axis=1)  # (B, Lk)
+            kpos = jnp.where(colm, jnp.broadcast_to(jnp.atleast_2d(kpos), (B, Lk)), K.PAD_POS)
+            if kseg is not None:
+                kseg = jnp.where(
+                    colm, jnp.broadcast_to(jnp.atleast_2d(kseg), (B, Lk)),
+                    K.KERNEL_PAD_SEGMENT,
+                )
+            mask = K.visibility(
+                qpos, kpos, qseg, kseg,
+                causal=causal,
+                local_only=lonly,
+                contributed=ct,
+                window=window,
+                publisher_lo=plo,
+            )
+            res = K.masked_attention(
+                q, k, v, mask, soft_cap=soft_cap, sm_scale=sm_scale,
+                return_stats=True, return_probs=return_mass,
+            )
+            (m, l, acc), p = res[:3], res[3] if return_mass else None
         m_g = jax.lax.pmax(m, axes)
         corr = jnp.exp(m - m_g)
         l_g = jax.lax.psum(l * corr, axes)
         acc_g = jax.lax.psum(acc * corr.transpose(0, 2, 1)[..., None], axes)
         out = acc_g / jnp.maximum(l_g, 1e-20).transpose(0, 2, 1)[..., None]
-        return out.astype(q.dtype)
+        out = out.astype(q.dtype)
+        if not return_mass:
+            return out
+        # p is relative to the shard-local m — the same exp(m - m_g)
+        # correction that merges l/acc rebases it to the global softmax
+        w = p * corr[..., None] / jnp.maximum(l_g, 1e-20)[..., None]
+        mass = jax.lax.psum(jnp.sum(w, axis=(1, 2)), axes)  # (B, Lk)
+        return out, mass
 
     return shard_map(
         fn,
         mesh=ctx.mesh,
         in_specs=tuple(specs),
-        out_specs=q_spec,
+        out_specs=(q_spec, P(ctx.bfirst, None)) if return_mass else q_spec,
         check_vma=False,
     )(*args)
 

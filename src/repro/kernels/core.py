@@ -144,6 +144,37 @@ segment plus every generated token — are visible. It is equivalent to
 contiguous segment (the repo-wide convention); pass segments instead when
 per-row partitions make that assumption unsafe.
 
+Flash-decode rules (fused paged pooled step)
+--------------------------------------------
+The fused Pallas paged flash-decode (``kernels/flash_decode.py``) splits
+the pooled step over page blocks and re-reduces. The rules it rides:
+
+* **Split-KV stats combine is THE core stats vocabulary.** Each page
+  program emits the partial ``(m, l, acc)`` triple of
+  ``masked_attention(return_stats=True)`` for its block; the combine —
+  global max, ``exp(m - m_g)`` correction, sum — is *the same reduction*
+  ``distributed/spmd_attention`` applies across shards with
+  ``pmax``/``psum``. Shard-local kernel + existing collective combine is
+  therefore the whole SPMD story; no kernel ever normalizes early.
+* **Visibility is never decided in-kernel by page identity.** Sentinel /
+  hole table entries are resolved BEFORE the kernel runs: their columns'
+  ``kv_pos``/``kv_seg`` are forced to ``PAD_POS``/``KERNEL_PAD_SEGMENT``
+  and the block load merely clamps the page index (gathers clamp, masks
+  hide). Inside the kernel only :func:`visibility` — fed those sentinel
+  rows — decides what a query sees, so the mask logic cannot fork.
+* **Dequant-at-load keeps the dense f32 contract downstream.** Quantized
+  pools enter the kernel as codes plus per-page-per-head scale operands
+  block-indexed by the *same* resolved page; ``serving.quant.dequantize``
+  applies ``code * scale`` at load and everything after the load — scores,
+  stats, combine — is ordinary dense f32. Scale *arithmetic* (amax,
+  rescale, codec choice) never enters a kernel (FED007).
+* **Attention mass is a stats by-product, not a second pass.** The masked
+  softmax numerators ``p`` the stats form already computes, rebased by the
+  same ``exp(m - m_g)`` correction and normalized by ``l_g``, are the
+  per-column attention mass the ``'attnmass'`` KV-selection policy
+  consumes — ``masked_attention(..., return_probs=True)`` is the XLA
+  fallback's spelling of the same thing.
+
 This contract is *mechanically enforced*: :mod:`repro.analysis` lints the
 tree against private mask/sentinel copies (rules FED001/FED002) and
 jaxpr-audits every jitted serving entry point — see README.md,
@@ -318,7 +349,8 @@ def masked_attention(
     soft_cap: Optional[float] = None,
     sm_scale: Optional[float] = None,
     return_stats: bool = False,
-) -> jnp.ndarray | tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    return_probs: bool = False,
+) -> jnp.ndarray | tuple[jnp.ndarray, ...]:
     """The ONE masked-softmax attention body (GQA-aware, f32 accumulation).
 
     With ``return_stats`` it returns the partial-softmax statistics
@@ -326,6 +358,10 @@ def masked_attention(
     (B, Lq, nq, dh) unnormalized value sum — the flash-decoding combinable
     form: shards compute stats over their KV slice and a pmax/psum merge
     reproduces the full softmax exactly (distributed/spmd_attention.py).
+    ``return_probs`` (stats form only) appends ``p`` (B, nq, Lq, Lk), the
+    masked softmax numerators relative to ``m`` — the per-column
+    attention-mass ingredient the ``'attnmass'`` KV-selection wiring
+    consumes (see the "Flash-decode rules" contract section).
     Fully-masked rows yield zero output (l = 0 guarded), never NaN.
     """
     B, Lq, nq, dh = q.shape
@@ -347,6 +383,8 @@ def masked_attention(
     l = jnp.sum(p, axis=-1)
     acc = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
     if return_stats:
+        if return_probs:
+            return m, l, acc, p
         return m, l, acc
     out = acc / jnp.maximum(l, 1e-20).transpose(0, 2, 1)[..., None]
     return out.astype(q.dtype)

@@ -17,6 +17,7 @@ participant segment ids, `local_only` (Phase-I local attention) and
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import partial
 from typing import Optional
 
@@ -29,6 +30,29 @@ from repro.kernels import ref as _ref
 NEG_INF = _core.NEG_INF
 
 _DEFAULT_BACKEND = "xla"
+
+
+@dataclass(frozen=True)
+class PagedReadConfig:
+    """THE paged/dense cache-read tuning knob (one documented home for
+    thresholds that used to be scattered magic numbers).
+
+    ``densify_elems``: the xla backend densifies a gather/ref attention
+    problem whenever ``Lq * Lk <= densify_elems`` (one O(Lq·Lk) mask is
+    cheaper than a chunk scan at that size); above it the online-softmax
+    chunk stream keeps compiled memory O(Lq · chunk).
+
+    ``chunk_tokens``: the decode-path default KV chunk width (tokens).
+    Both the dense and the paged chunk streams clamp it to the live cache
+    extent before padding — a short pool is never padded UP to the group
+    width (the dense path got this clamp in PR 2; the paged group loop
+    clamps to ``P' * page_size`` the same way)."""
+
+    densify_elems: int = 256 * 256
+    chunk_tokens: int = 2048
+
+
+PAGED_READ = PagedReadConfig()
 
 
 def set_default_backend(name: str) -> None:
@@ -71,7 +95,10 @@ def attention(
     (repro.kernels.core): ref/xla broadcast the (Bm, Lq, Lk) mask, the
     Pallas kernel prefetches per-row vector blocks via its index maps."""
     backend = backend or _DEFAULT_BACKEND
-    if backend == "ref" or (backend == "xla" and q.shape[1] * k.shape[1] <= 256 * 256):
+    if backend == "ref" or (
+        backend == "xla"
+        and q.shape[1] * k.shape[1] <= PAGED_READ.densify_elems
+    ):
         return _ref.attention_ref(
             q, k, v, q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg, kv_seg=kv_seg,
             causal=causal, local_only=local_only, contributed=contributed,
@@ -209,7 +236,7 @@ def decode_attention(
     with 2-D per-row ``q_pos``/``q_seg`` vectors per the kernels.core
     contract — intra-block causality falls out of the ordinary
     ``q_pos >= kv_pos`` rule, no speculative-specific masking exists."""
-    kw.setdefault("chunk", 2048)
+    kw.setdefault("chunk", PAGED_READ.chunk_tokens)
     return attention(q, k_cache, v_cache, **kw)
 
 
@@ -281,7 +308,7 @@ def paged_attention(
     if kv_seg is not None:
         kv_seg = jnp.broadcast_to(jnp.atleast_2d(kv_seg), (B, Lk))
         kv_seg = jnp.where(col_valid, kv_seg, _core.KERNEL_PAD_SEGMENT)
-    if backend != "xla" or q.shape[1] * Lk <= 256 * 256:
+    if backend != "xla" or q.shape[1] * Lk <= PAGED_READ.densify_elems:
         k = _gather_pages(pk, pages, k_scales)
         v = _gather_pages(pv, pages, v_scales)
         return attention(
@@ -316,6 +343,9 @@ def _chunked_paged_attention(
     g = nq // nkv
     scale = sm_scale if sm_scale is not None else dh**-0.5
 
+    # clamp to the live pool extent FIRST — a short pool must never be
+    # padded up to the group width (mirrors the dense chunk clamp)
+    chunk = max(1, min(chunk, Pp * ps))
     G = max(1, min(_paging.pages_for(chunk, ps), Pp))
     chunk = G * ps
     padp = (-Pp) % G
@@ -352,6 +382,41 @@ def _chunked_paged_attention(
     )
 
 
+def _paged_attention_with_mass(
+    q, pk, pv, pages, *, q_pos, kv_pos, q_seg=None, kv_seg=None, causal=True,
+    local_only=False, contributed=None, window=None, soft_cap=None,
+    sm_scale=None, k_scales=None, v_scales=None,
+):
+    """XLA fallback for ``return_mass``: one densified
+    ``masked_attention(return_stats=True, return_probs=True)`` pass yields
+    both the normalized output and each pool column's normalized softmax
+    mass (B, P'*ps) — the same quantity the fused kernel's stats emit, in
+    the same stats vocabulary (core "Flash-decode rules")."""
+    N, ps = pk.shape[0], pk.shape[1]
+    B, Pp = pages.shape
+    Lk = Pp * ps
+    col_valid = jnp.repeat(pages < N, ps, axis=1)
+    kv_pos = jnp.broadcast_to(jnp.atleast_2d(kv_pos), (B, Lk))
+    kv_pos = jnp.where(col_valid, kv_pos, _core.PAD_POS)
+    if kv_seg is not None:
+        kv_seg = jnp.broadcast_to(jnp.atleast_2d(kv_seg), (B, Lk))
+        kv_seg = jnp.where(col_valid, kv_seg, _core.KERNEL_PAD_SEGMENT)
+    k = _gather_pages(pk, pages, k_scales)
+    v = _gather_pages(pv, pages, v_scales)
+    mask = _core.visibility(
+        q_pos, kv_pos, q_seg, kv_seg, causal=causal, local_only=local_only,
+        contributed=contributed, window=window,
+    )
+    m, l, acc, p = _core.masked_attention(
+        q, k, v, mask, soft_cap=soft_cap, sm_scale=sm_scale,
+        return_stats=True, return_probs=True,
+    )
+    denom = jnp.maximum(l, 1e-20)  # (B, nq, Lq)
+    out = (acc / denom.transpose(0, 2, 1)[..., None]).astype(q.dtype)
+    mass = jnp.sum(p / denom[..., None], axis=(1, 2))  # (B, Lk)
+    return out, mass
+
+
 def paged_decode_attention(
     q: jnp.ndarray,
     pk: jnp.ndarray,
@@ -363,8 +428,35 @@ def paged_decode_attention(
     as :func:`decode_attention`, including its ``S > 1`` multi-query
     verify form — the page gather densifies (or chunk-streams) the pool
     and the block then sees exactly the dense verify semantics, so
-    speculative paged decode is bitwise the dense-pool verify."""
-    kw.setdefault("chunk", 2048)
+    speculative paged decode is bitwise the dense-pool verify.
+
+    ``backend='pallas'`` routes to the fused paged flash-decode kernel
+    (kernels/flash_decode.py): in-kernel page loads + dequant-at-load +
+    split-KV stats combine, never materializing the dense cache
+    (interpret-mode on CPU, compiled on TPU). Split-KV softmax associates
+    differently from the one-shot dense softmax, so the fused path agrees
+    with the gather path to f32 rounding (greedy tokens exact on the
+    pinned scheduler traces) rather than bitwise.
+
+    ``return_mass=True`` additionally returns each pool column's
+    normalized attention mass (B, P'*ps) — the ``'attnmass'``
+    KV-selection accumulator feed — from the kernel's stats on the pallas
+    path and from :func:`_paged_attention_with_mass` on the XLA path."""
+    kw.setdefault("chunk", PAGED_READ.chunk_tokens)
+    return_mass = kw.pop("return_mass", False)
+    backend = kw.get("backend") or _DEFAULT_BACKEND
+    if backend == "pallas":
+        kw.pop("backend", None)
+        kw.pop("chunk", None)
+        from repro.kernels import flash_decode as _fd
+
+        return _fd.paged_flash_decode(
+            q, pk, pv, pages, return_mass=return_mass, **kw
+        )
+    if return_mass:
+        kw.pop("backend", None)
+        kw.pop("chunk", None)
+        return _paged_attention_with_mass(q, pk, pv, pages, **kw)
     return paged_attention(q, pk, pv, pages, **kw)
 
 

@@ -165,10 +165,22 @@ def attention_decode_block(
     contributed: Optional[jnp.ndarray] = None,
     pages: Optional[jnp.ndarray] = None,
     kv_scales: Optional[tuple] = None,
+    attn_mass: Optional[jnp.ndarray] = None,
 ):
     """Decode-step attention against the cache; writes the new KV in-place
     (dynamic_update_slice) and returns (y, k_cache, v_cache) — or, with
     ``kv_scales``, (y, k_cache, v_cache, k_scales, v_scales).
+
+    ``attn_mass`` ((B, capacity) f32, paged pool only) is the per-slot
+    accumulated attention-mass buffer riding the cache pytree as data (the
+    'attnmass' KV-selection feed): the paged attend additionally returns
+    this step's per-column softmax mass, the buffer accumulates it, and
+    the updated buffer is appended as the LAST element of the return
+    tuple. At sync layers with ``kv_exchange_ratio < 1.0`` and
+    ``kv_selection='attnmass'``, the accumulated mass also derives this
+    step's ``contributed`` sparse-exchange mask
+    (``spmd_attention.decode_exchange_mask``) when the caller supplied
+    none — the decode-time adaptive KV exchange.
 
     Quantized pool: ``kv_scales`` is the ``(sk, sv)`` pair of per-page-
     per-head (num_pages, nkv) f32 scale leaves riding next to a quantized
@@ -284,6 +296,17 @@ def attention_decode_block(
             ctx.partition.publisher_start(ctx.config.publisher_index)
             if ctx.enabled else 0
         )
+        want_mass = attn_mass is not None
+        if (
+            want_mass and sync and ctx.enabled and contributed is None
+            and ctx.config.kv_selection == "attnmass"
+            and ctx.config.kv_exchange_ratio < 1.0
+        ):
+            from repro.distributed import spmd_attention
+
+            contributed = spmd_attention.decode_exchange_mask(
+                attn_mass, ctx.config.kv_exchange_ratio
+            )
         if spmd:
             from repro.distributed import spmd_attention
 
@@ -299,6 +322,9 @@ def attention_decode_block(
                 soft_cap=config.attn_soft_cap,
                 kv_scales=kv_scales if kv_scales is None
                 else (k_scales, v_scales),
+                contributed=contributed if (sync and ctx.enabled) else None,
+                backend=backend,
+                return_mass=want_mass,
             )
         else:
             out = ops.paged_decode_attention(
@@ -315,12 +341,18 @@ def attention_decode_block(
                 backend=backend,
                 k_scales=k_scales,
                 v_scales=v_scales,
+                return_mass=want_mass,
             )
+        if want_mass:
+            out, mass = out
+            attn_mass = attn_mass + mass
         B = x.shape[0]
         y = jnp.einsum("bse,ed->bsd", out.reshape(B, S_new, -1), p["wo"])
         if kv_scales is not None:
-            return y, k_cache, v_cache, k_scales, v_scales
-        return y, k_cache, v_cache
+            res = (y, k_cache, v_cache, k_scales, v_scales)
+        else:
+            res = (y, k_cache, v_cache)
+        return res + ((attn_mass,) if want_mass else ())
 
     if spmd:
         from repro.distributed import spmd_attention

@@ -139,7 +139,8 @@ def init_layer_cache(
 
 def init_paged_layer_cache(
     spec: LayerSpec, config: ModelConfig, batch: int, num_pages: int,
-    page_size: int, dtype, kv_quant: Optional[str] = None
+    page_size: int, dtype, kv_quant: Optional[str] = None,
+    mass_width: Optional[int] = None,
 ) -> Params:
     """Paged variant of :func:`init_layer_cache`: attention layers get a
     *shared* physical pool ``pk``/``pv`` of shape (num_pages, page_size,
@@ -149,34 +150,50 @@ def init_paged_layer_cache(
     With ``kv_quant`` ('int8'/'fp8', serving/quant.py) the pool leaves
     store codes in the codec dtype plus sibling per-page-per-head scale
     leaves ``sk``/``sv`` of shape (num_pages, nkv) f32 — scales are DATA
-    like page tables, never shapes."""
+    like page tables, never shapes.
+
+    With ``mass_width`` (the slot capacity, set when the engine's
+    ``kv_selection='attnmass'`` policy needs decode-time stats) attention
+    layers additionally carry an ``am`` (batch, mass_width) f32 leaf: the
+    per-slot accumulated attention mass each pool column received from
+    the decode steps' softmax stats — DATA riding the cache pytree, reset
+    on slot admission (paged_slot_write), consumed by
+    spmd_attention.decode_exchange_mask. The paged layout only: a dense
+    layout has no per-column pool to rank."""
     if spec.kind == "attn":
         from repro.serving import quant
 
         nkv, dh = config.n_kv_heads, config.head_dim
         sd = quant.storage_dtype(kv_quant)
         if sd is not None:
-            return {
+            c = {
                 "pk": jnp.zeros((num_pages, page_size, nkv, dh), sd),
                 "pv": jnp.zeros((num_pages, page_size, nkv, dh), sd),
                 "sk": jnp.zeros((num_pages, nkv), jnp.float32),
                 "sv": jnp.zeros((num_pages, nkv), jnp.float32),
             }
-        return {
-            "pk": jnp.zeros((num_pages, page_size, nkv, dh), dtype),
-            "pv": jnp.zeros((num_pages, page_size, nkv, dh), dtype),
-        }
+        else:
+            c = {
+                "pk": jnp.zeros((num_pages, page_size, nkv, dh), dtype),
+                "pv": jnp.zeros((num_pages, page_size, nkv, dh), dtype),
+            }
+        if mass_width is not None:
+            c["am"] = jnp.zeros((batch, mass_width), jnp.float32)
+        return c
     return init_layer_cache(spec, config, batch, page_size, dtype)
 
 
 def init_paged_cache(
     config: ModelConfig, batch: int, num_pages: int, page_size: int,
-    *, plan: Optional["ScanPlan"] = None, kv_quant: Optional[str] = None
+    *, plan: Optional["ScanPlan"] = None, kv_quant: Optional[str] = None,
+    mass_width: Optional[int] = None,
 ):
     """Block-paged decode caches, loop or scan form (mirrors init_cache /
     init_cache_scan; scan form stacks pool leaves to (n_periods, num_pages,
     page_size, nkv, dh)). ``kv_quant`` selects a quantized pool codec
-    (attention-only stacks; see init_paged_layer_cache)."""
+    (attention-only stacks; see init_paged_layer_cache); ``mass_width``
+    adds the per-slot attention-mass accumulator leaf (the 'attnmass'
+    decode-stats feed, ibid.)."""
     if kv_quant not in (None, "none") and any(
         s.kind != "attn" for s in config.layer_specs()
     ):
@@ -190,7 +207,7 @@ def init_paged_cache(
         )
     dt = jnp.dtype(config.dtype)
     mk = lambda s: init_paged_layer_cache(
-        s, config, batch, num_pages, page_size, dt, kv_quant
+        s, config, batch, num_pages, page_size, dt, kv_quant, mass_width
     )
     if plan is not None:
         per = [mk(s) for s in plan.specs]
@@ -310,9 +327,19 @@ def paged_slot_write(cache, batch, dst_pages, slots):
                                              dst_pages)
                 pv, sv = _scatter_pool_quant(pc["pv"], pc["sv"], bc["v"],
                                              dst_pages)
-                return {"pk": pk, "pv": pv, "sk": sk, "sv": sv}
-            return {"pk": _scatter_pool(pc["pk"], bc["k"], dst_pages),
-                    "pv": _scatter_pool(pc["pv"], bc["v"], dst_pages)}
+                out = {"pk": pk, "pv": pv, "sk": sk, "sv": sv}
+            else:
+                out = {"pk": _scatter_pool(pc["pk"], bc["k"], dst_pages),
+                       "pv": _scatter_pool(pc["pv"], bc["v"], dst_pages)}
+            if "am" in pc:
+                # admitted slots restart with zero accumulated mass (the
+                # previous resident's stats must not rank the new pages);
+                # out-of-bounds padding rows drop like every slot write
+                if scan_form:
+                    out["am"] = pc["am"].at[:, slots].set(0.0, mode="drop")
+                else:
+                    out["am"] = pc["am"].at[slots].set(0.0, mode="drop")
+            return out
         if scan_form:
             return {k: pc[k].at[:, slots].set(bc[k].astype(pc[k].dtype))
                     for k in pc}
@@ -363,22 +390,28 @@ def apply_layer_decode(
     new_cache = dict(cache)
     if spec.kind == "attn":
         if "pk" in cache:
+            am = cache.get("am")
             if "sk" in cache:
                 # quantized pool: the write re-encodes through the scale
                 # scatter-max and the read dequantizes inside the gather
-                o, kc, vc, sk, sv = A.attention_decode_block(
+                # (or, on the pallas backend, at the kernel's block load)
+                res = A.attention_decode_block(
                     p["attn"], h, cache["pk"], cache["pv"], cache_len, ctx,
                     layer_idx, spec, config, sync=sync, backend=backend,
                     contributed=contributed, pages=pages,
-                    kv_scales=(cache["sk"], cache["sv"]),
+                    kv_scales=(cache["sk"], cache["sv"]), attn_mass=am,
                 )
+                o, kc, vc, sk, sv = res[:5]
                 new_cache["sk"], new_cache["sv"] = sk, sv
             else:
-                o, kc, vc = A.attention_decode_block(
+                res = A.attention_decode_block(
                     p["attn"], h, cache["pk"], cache["pv"], cache_len, ctx,
                     layer_idx, spec, config, sync=sync, backend=backend,
-                    contributed=contributed, pages=pages,
+                    contributed=contributed, pages=pages, attn_mass=am,
                 )
+                o, kc, vc = res[:3]
+            if am is not None:
+                new_cache["am"] = res[-1]
             new_cache["pk"], new_cache["pv"] = kc, vc
         else:
             o, kc, vc = A.attention_decode_block(

@@ -296,13 +296,25 @@ class ContinuousBatchingScheduler:
                         "that cached KV pages cannot reconstruct"
                     )
                 self._prefix = paging.PrefixCache(self._alloc, page_size)
+            # 'attnmass' with a real exchange ratio needs decode-time
+            # stats: size the per-slot accumulated-mass leaf to the padded
+            # capacity so the decode step can feed + consume it as data
+            fed = engine.fed
+            self._mass_width = (
+                self._cap
+                if fed.kv_selection == "attnmass"
+                and fed.kv_exchange_ratio < 1.0
+                else None
+            )
             self.cache = T.init_paged_cache(
                 engine.config, max_slots, num_pages, page_size,
                 plan=self._plan, kv_quant=self.kv_quant,
+                mass_width=self._mass_width,
             )
         else:
             if prefix_cache:
                 raise ValueError("prefix_cache requires kv_layout='paged'")
+            self._mass_width = None
             self._cap = capacity
             self._pp = 0
             self.num_pages = 0
@@ -973,6 +985,24 @@ class ContinuousBatchingScheduler:
         self._write_fn = jax.jit(write, donate_argnums=_donation_for_backend((0,)))
         return self._write_fn
 
+    def _decode_proto(self):
+        """The pooled decode steps' prototype context. ``_proto_ctx`` bakes
+        ``kv_exchange_ratio=1.0`` (full exchange — no per-layer rng in the
+        jitted step); when the pool carries the 'attnmass' accumulator the
+        REAL ratio must survive into the decode trace, because it gates
+        the decode-time sparse-exchange mask derivation
+        (models/attention: decode_exchange_mask) — a deterministic
+        top-k, still rng-free."""
+        proto = self.engine._proto_ctx(self._cap)
+        if self._mass_width is not None:
+            proto = dataclasses.replace(
+                proto,
+                config=proto.config.replace(
+                    kv_exchange_ratio=self.engine.fed.kv_exchange_ratio
+                ),
+            )
+        return proto
+
     def _step_fn(self, n_steps: int):
         """Build (or fetch) THE decode executable: ``n_steps`` fused
         sub-steps over all slots. Static key = (pool shape, n_steps) only;
@@ -989,7 +1019,7 @@ class ContinuousBatchingScheduler:
         eng = self.engine
         model, backend = eng.model, eng.backend
         mode, plan = eng.layers_mode, eng._plan
-        proto = eng._proto_ctx(self._cap)
+        proto = self._decode_proto()
         kv_pos = jnp.arange(self._cap, dtype=jnp.int32)
 
         def run(params, cache, tok, write_pos, fold, q_seg, kv_seg,
@@ -1052,7 +1082,7 @@ class ContinuousBatchingScheduler:
         eng = self.engine
         model, backend = eng.model, eng.backend
         mode, plan = eng.layers_mode, eng._plan
-        proto = eng._proto_ctx(self._cap)
+        proto = self._decode_proto()
         kv_pos = jnp.arange(self._cap, dtype=jnp.int32)
         offs = jnp.arange(self.spec_k + 1, dtype=jnp.int32)
 
